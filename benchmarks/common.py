@@ -1,0 +1,69 @@
+"""Shared benchmark plumbing: dataset prep, interval capture, CSV/JSON out.
+
+Every figure benchmark exposes ``run(quick: bool) -> list[dict]`` and is
+registered in benchmarks.run. Results go to artifacts/bench/<name>.json and
+a ``name,us_per_call,derived`` CSV line is printed per row.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import EngineConfig, run_stream, state_metrics, trace_at
+from repro.graph.csr import cap_degree
+from repro.graph.datasets import PAPER_DATASETS, load_dataset
+from repro.graph import stream as gstream
+
+ART_DIR = os.environ.get("REPRO_BENCH_DIR", "artifacts/bench")
+
+# Degree caps keep the padded (n, max_deg) adjacency bounded for the
+# heavy-tailed stand-ins (twitter). Exact for the mesh/collab graphs.
+DEG_CAP = {"twitter": 192, "wiki-vote": 192, "astroph": 192,
+           "email-enron": 192}
+
+QUICK_SCALE = {"3elt": 0.25, "grqc": 0.25, "wiki-vote": 0.15, "4elt": 0.1,
+               "astroph": 0.08, "email-enron": 0.05, "twitter": 0.02}
+FULL_SCALE = {"3elt": 1.0, "grqc": 1.0, "wiki-vote": 1.0, "4elt": 1.0,
+              "astroph": 1.0, "email-enron": 1.0, "twitter": 0.25}
+
+BASELINES = ("ldg", "fennel", "hash", "random", "greedy")
+
+
+def bench_graph(name: str, quick: bool):
+    scale = (QUICK_SCALE if quick else FULL_SCALE)[name]
+    g = load_dataset(name, scale=scale)
+    cap = DEG_CAP.get(name)
+    if cap is not None:
+        g = cap_degree(g, cap)
+    return g
+
+
+def default_cfg(k: int = 4, autoscale: bool = False,
+                max_cap: int = 1 << 30, k_max: int = 16) -> EngineConfig:
+    return EngineConfig(k_max=k_max, k_init=1 if autoscale else k,
+                        max_cap=max_cap, autoscale=autoscale)
+
+
+def save_rows(name: str, rows: list[dict]):
+    os.makedirs(ART_DIR, exist_ok=True)
+    with open(os.path.join(ART_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0
+
+
+def run_policy_stream(stream, policy, cfg, seed=0):
+    (state, trace), dt = timed(run_stream, stream, policy=policy, cfg=cfg,
+                               seed=seed)
+    m = state_metrics(state)
+    m["policy"] = policy
+    m["seconds"] = dt
+    m["events_per_s"] = stream.num_events / max(dt, 1e-9)
+    return state, trace, m

@@ -1,0 +1,54 @@
+"""Paper Fig. 10: execution time. Compares the paper-faithful scan engine,
+the windowed TPU engine (beyond-paper), the windowed+Pallas-kernel path,
+and the pure-Python oracle (the paper's Java-artifact analogue)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common as C
+from repro.core import run_reference, run_stream, run_stream_windowed
+from repro.graph import stream as gstream
+
+DATASETS = ("3elt", "grqc", "wiki-vote")
+
+
+def run(quick: bool = True) -> list:
+    rows = []
+    for ds in DATASETS:
+        g = C.bench_graph(ds, quick)
+        s = gstream.build_stream(g, seed=0)
+        cfg = C.default_cfg(k=4)
+
+        engines = {
+            "python_oracle": lambda: run_reference(s, policy="sdp", cfg=cfg),
+            "faithful_scan": lambda: run_stream(s, policy="sdp", cfg=cfg),
+            "windowed_256": lambda: run_stream_windowed(
+                s, policy="sdp", cfg=cfg, window=256),
+            "windowed_kernel": lambda: run_stream_windowed(
+                s, policy="sdp", cfg=cfg, window=256, use_kernel=True),
+        }
+        if not quick:
+            engines.pop("python_oracle")  # O(minutes) at full scale
+        for name, fn in engines.items():
+            fn()  # warm compile
+            t0 = time.perf_counter()
+            fn()
+            dt = time.perf_counter() - t0
+            rows.append({"dataset": ds, "engine": name, "seconds": dt,
+                         "events": s.num_events,
+                         "events_per_s": s.num_events / max(dt, 1e-9)})
+    C.save_rows("fig10_time", rows)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = []
+    for ds in DATASETS:
+        d = {r["engine"]: r for r in rows if r["dataset"] == ds}
+        base = d.get("python_oracle") or d["faithful_scan"]
+        win = d["windowed_256"]
+        speed = base["seconds"] / max(win["seconds"], 1e-9)
+        out.append(f"fig10/{ds},{win['seconds']*1e6/win['events']:.1f},"
+                   f"windowed_speedup_vs_{'oracle' if 'python_oracle' in d else 'faithful'}={speed:.1f}x"
+                   f";events_per_s={win['events_per_s']:.0f}")
+    return out

@@ -1,0 +1,39 @@
+"""Paper Fig. 5: final edge-cut, streaming methods vs the offline
+partitioner (METIS stand-in: BFS-grow + FM refinement)."""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core.offline import cut_of, offline_partition
+from repro.graph import stream as gstream
+
+DATASETS = ("3elt", "grqc", "wiki-vote", "4elt", "astroph")
+
+
+def run(quick: bool = True) -> list:
+    rows = []
+    for ds in DATASETS:
+        g = C.bench_graph(ds, quick)
+        s = gstream.build_stream(g, seed=0)
+        for policy in ("sdp",) + C.BASELINES:
+            _, _, m = C.run_policy_stream(s, policy, C.default_cfg(k=4))
+            rows.append({"dataset": ds, "policy": policy,
+                         "edge_cut_ratio": m["edge_cut_ratio"],
+                         "seconds": m["seconds"]})
+        a, dt = C.timed(offline_partition, g, 4)
+        rows.append({"dataset": ds, "policy": "offline(metis-standin)",
+                     "edge_cut_ratio": cut_of(g, a) / max(g.num_edges, 1),
+                     "seconds": dt})
+    C.save_rows("fig5_vs_offline", rows)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = []
+    for ds in DATASETS:
+        d = {r["policy"]: r["edge_cut_ratio"] for r in rows
+             if r["dataset"] == ds}
+        out.append(
+            f"fig5/{ds},{d['sdp']:.4f},"
+            f"offline={d['offline(metis-standin)']:.4f}"
+            f";hash={d['hash']:.4f}")
+    return out

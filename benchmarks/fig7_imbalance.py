@@ -1,0 +1,38 @@
+"""Paper Fig. 7: load-imbalance (Eq. 10, normalised) comparison."""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core import normalized_load_imbalance
+from repro.graph import stream as gstream
+
+DATASETS = ("3elt", "grqc", "wiki-vote", "astroph", "email-enron")
+
+
+def run(quick: bool = True) -> list:
+    rows = []
+    for ds in DATASETS:
+        g = C.bench_graph(ds, quick)
+        s = gstream.dynamic_schedule(g, n_intervals=4, seed=0)
+        for policy in ("sdp",) + C.BASELINES:
+            st, _, m = C.run_policy_stream(s, policy, C.default_cfg(k=4))
+            import numpy as np
+            imb = normalized_load_imbalance(np.asarray(st.edge_load),
+                                            np.asarray(st.active))
+            rows.append({"dataset": ds, "policy": policy,
+                         "norm_load_imbalance": imb,
+                         "load_imbalance": m["load_imbalance"],
+                         "seconds": m["seconds"]})
+    C.save_rows("fig7_imbalance", rows)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = []
+    for ds in DATASETS:
+        d = {r["policy"]: r["norm_load_imbalance"] for r in rows
+             if r["dataset"] == ds}
+        worst = max(v for k, v in d.items() if k != "sdp")
+        red = 100 * (1 - d["sdp"] / max(worst, 1e-9))
+        out.append(f"fig7/{ds},{d['sdp']:.4f},"
+                   f"reduction_vs_worst_baseline={red:.0f}%")
+    return out

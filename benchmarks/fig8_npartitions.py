@@ -1,0 +1,35 @@
+"""Paper Fig. 8: edge-cut ratio vs number of partitions (communication
+cost grows with k)."""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.graph import stream as gstream
+
+DATASETS = ("3elt", "grqc")
+KS = (2, 4, 8, 16)
+
+
+def run(quick: bool = True) -> list:
+    rows = []
+    for ds in DATASETS:
+        g = C.bench_graph(ds, quick)
+        s = gstream.build_stream(g, seed=0)
+        for k in KS:
+            _, _, m = C.run_policy_stream(s, "sdp", C.default_cfg(k=k))
+            rows.append({"dataset": ds, "k": k,
+                         "edge_cut_ratio": m["edge_cut_ratio"],
+                         "seconds": m["seconds"]})
+    C.save_rows("fig8_npartitions", rows)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = []
+    for ds in DATASETS:
+        rs = sorted((r for r in rows if r["dataset"] == ds),
+                    key=lambda r: r["k"])
+        mono = all(a["edge_cut_ratio"] <= b["edge_cut_ratio"] + 0.05
+                   for a, b in zip(rs, rs[1:]))
+        out.append(f"fig8/{ds},{rs[-1]['edge_cut_ratio']:.4f},"
+                   f"monotone_in_k={mono}")
+    return out

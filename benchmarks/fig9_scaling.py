@@ -1,0 +1,44 @@
+"""Paper Fig. 9: machines added/removed over time under the §4.2.3
+auto-scaling policy (scale-out via Eq. 5, scale-in via Eqs. 6-8)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import EngineConfig
+from repro.graph import stream as gstream
+
+DATASETS = ("3elt", "astroph", "grqc")
+
+
+def run(quick: bool = True) -> list:
+    rows = []
+    for ds in DATASETS:
+        g = C.bench_graph(ds, quick)
+        s = gstream.dynamic_schedule(g, add_pct=25.0, del_pct=10.0,
+                                     n_intervals=4, seed=0)
+        # MAXCAP sized so the stream needs ~6 machines at peak
+        cap = max(60, int(1.6 * g.num_edges / 6))
+        cfg = EngineConfig(k_max=16, k_init=1, max_cap=cap,
+                           tolerance_param=35.0, dest_param=5.0)
+        st, trace, m = C.run_policy_stream(s, "sdp", cfg)
+        parts = np.asarray(trace.num_partitions)
+        marks = list(s.intervals)
+        for i, t in enumerate(marks):
+            rows.append({"dataset": ds, "interval": i + 1,
+                         "num_partitions": int(parts[t - 1]),
+                         "peak": int(parts.max()),
+                         "scale_events": m["scale_events"],
+                         "seconds": m["seconds"]})
+    C.save_rows("fig9_scaling", rows)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = []
+    for ds in DATASETS:
+        rs = [r for r in rows if r["dataset"] == ds]
+        traj = "->".join(str(r["num_partitions"]) for r in rs)
+        out.append(f"fig9/{ds},{rs[-1]['scale_events']},machines={traj}"
+                   f";peak={rs[-1]['peak']}")
+    return out

@@ -1,0 +1,73 @@
+"""Measure SDP boundary (halo) fractions on scaled proxy graphs.
+
+The halo-mode dry-run (steps.build_gnn_halo) needs B_max — the published
+boundary rows per shard. That is data-dependent, so we measure it: build a
+power-law proxy with ogb-products' average degree, SDP-partition it into
+P shards with the windowed engine, and record
+boundary_vertices / shard_size per policy. Written to
+artifacts/halo_frac.json; the dry-run sizes its ShapeDtypeStructs from it.
+
+    PYTHONPATH=src python -m benchmarks.measure_halo [--nodes 40000]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.core import EngineConfig, run_stream_windowed, state_metrics
+from repro.graph.generators import make_graph
+from repro.graph.halo import build_halo_spec
+from repro.graph import stream as gstream
+from repro.graph.csr import cap_degree
+
+
+def measure(shape_name: str, n: int, avg_deg: float, p_shards: int,
+            seed: int = 0) -> dict:
+    g = make_graph("social", n, int(n * avg_deg / 2), seed=seed)
+    g = cap_degree(g, 128)
+    s = gstream.build_stream(g, seed=seed)
+    out = {"n": g.n, "edges": g.num_edges, "p": p_shards}
+    for policy in ("sdp", "hash"):
+        st = run_stream_windowed(
+            s, policy=policy, window=512,
+            cfg=EngineConfig(k_max=p_shards, k_init=p_shards,
+                             autoscale=False))
+        a = np.array(st.assignment)
+        a[a < 0] = 0
+        spec = build_halo_spec(g, a, p_shards)
+        per_shard = (spec.publish_idx >= 0).sum(axis=1)
+        nb = spec.block_size
+        out[policy] = float(per_shard.max() / max(nb, 1))
+        out[f"{policy}_mean"] = float(per_shard.mean() / max(nb, 1))
+        out[f"{policy}_cut"] = state_metrics(st)["edge_cut_ratio"]
+    return out
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--nodes", type=int, default=40000)
+    p.add_argument("--shards", type=int, default=256)
+    p.add_argument("--out", type=str, default="artifacts/halo_frac.json")
+    args = p.parse_args()
+    res = {
+        # ogb-products: avg degree 2E/N = 50.5 — power-law proxy
+        "ogb_products": measure("ogb_products", args.nodes, 50.5,
+                                args.shards),
+        # cora-like: avg degree 7.8
+        "full_graph_sm": measure("full_graph_sm", min(args.nodes, 2708),
+                                 7.8, args.shards),
+    }
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    # steps.build_gnn_halo reads {shape: {"sdp": frac}}
+    payload = {k: {"sdp": v["sdp"], "hash": v["hash"], "detail": v}
+               for k, v in res.items()}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(json.dumps(payload, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Render EXPERIMENTS.md §Dry-run + §Roofline tables from artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRY_DIR = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load(scheme_filter=None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRY_DIR, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        r.setdefault("scheme", "baseline")
+        if scheme_filter and r["scheme"] not in scheme_filter:
+            continue
+        recs.append(r)
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    out = ["| arch | shape | mesh | scheme | status | compile s | "
+           "GiB/dev | fits 16G | HLO GFLOP/dev | coll GiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                       f"| {r['scheme']} | **{r['status'].upper()}** "
+                       f"| — | — | — | — | — |")
+            continue
+        gib = r["memory"]["live_bytes_per_device"] / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['scheme']} "
+            f"| ok | {r['compile_s']:.0f} | {gib:.2f} "
+            f"| {'yes' if gib < 16 else 'NO'} "
+            f"| {r['cost']['flops_per_device']/1e9:.1f} "
+            f"| {r['collectives']['wire_bytes_per_device']/2**30:.2f} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs) -> str:
+    out = ["| arch | shape | mesh | scheme | compute s | memory s | "
+           "collective s | dominant | useful-FLOP ratio | bound s |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['scheme']} "
+            f"| {rl['compute_s']:.3f} | {rl['memory_s']:.3f} "
+            f"| {rl['collective_s']:.3f} | **{rl['dominant']}** "
+            f"| {rl['useful_flops_ratio']:.2f} "
+            f"| {rl['step_time_bound_s']:.3f} |")
+    return "\n".join(out)
+
+
+def skips_table(recs) -> str:
+    out = ["| arch | shape | reason |", "|---|---|---|"]
+    seen = set()
+    for r in recs:
+        if r["status"] == "skip" and (r["arch"], r["shape"]) not in seen:
+            seen.add((r["arch"], r["shape"]))
+            out.append(f"| {r['arch']} | {r['shape']} "
+                       f"| {r.get('reason', '')} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    recs = load()
+    print("## Dry-run (all cells, both meshes)\n")
+    print(dryrun_table(recs))
+    print("\n## Skips\n")
+    print(skips_table(recs))
+    print("\n## Roofline\n")
+    print(roofline_table(recs))

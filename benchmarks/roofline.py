@@ -1,0 +1,85 @@
+"""Roofline table from dry-run artifacts (EXPERIMENTS.md §Roofline source).
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and emits
+per (arch × shape × mesh): the three roofline terms in seconds, dominant
+bottleneck, MODEL_FLOPS / HLO_FLOPs ratio, and bytes/device.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRY_DIR = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load_records() -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRY_DIR, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(quick: bool = True) -> list:
+    rows = []
+    for r in load_records():
+        base = {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "scheme": r.get("scheme", "baseline"),
+                "status": r["status"]}
+        if r["status"] != "ok":
+            base["reason"] = r.get("reason", "")[:60]
+            rows.append(base)
+            continue
+        rl = r["roofline"]
+        base.update({
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+            "useful_flops_ratio": rl["useful_flops_ratio"],
+            "mem_gib_per_device": r["memory"]["live_bytes_per_device"] / 2**30,
+            "fits_16g_hbm": r["memory"]["live_bytes_per_device"] < 16 * 2**30,
+            "step_bound_s": rl["step_time_bound_s"],
+        })
+        rows.append(base)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = []
+    for r in rows:
+        key = f"roofline/{r['arch']}:{r['shape']}:{r['mesh']}:{r['scheme']}"
+        if r["status"] == "skip":
+            out.append(f"{key},SKIP,{r.get('reason','')}")
+        elif r["status"] != "ok":
+            out.append(f"{key},ERROR,")
+        else:
+            out.append(
+                f"{key},{r['step_bound_s']*1e3:.1f}ms,"
+                f"dom={r['dominant']};mem={r['mem_gib_per_device']:.1f}GiB"
+                f";useful={r['useful_flops_ratio']:.2f}")
+    return out
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s |"
+           " dominant | useful FLOP ratio | GiB/dev | fits HBM |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r["status"] == "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                f"| {r['collective_s']:.3f} | **{r['dominant']}** "
+                f"| {r['useful_flops_ratio']:.2f} "
+                f"| {r['mem_gib_per_device']:.2f} "
+                f"| {'yes' if r['fits_16g_hbm'] else 'NO'} |")
+        else:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| — | — | — | {r['status'].upper()} | — | — | — |")
+    return hdr + "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown_table(rows))

@@ -1,0 +1,51 @@
+"""Benchmark harness entry: one module per paper figure/table.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig4,...]
+
+Prints ``name,value,derived`` CSV per row-group and writes JSON artifacts
+to artifacts/bench/. The roofline table additionally needs dry-run
+artifacts (repro.launch.dryrun --all).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--full", action="store_true",
+                   help="paper-scale datasets (slow on CPU); default quick")
+    p.add_argument("--only", type=str, default="")
+    args = p.parse_args()
+
+    from benchmarks import (fig4_edgecut, fig5_vs_offline, fig6_dynamics,
+                            fig7_imbalance, fig8_npartitions, fig9_scaling,
+                            fig10_time, roofline)
+    mods = {
+        "fig4": fig4_edgecut, "fig5": fig5_vs_offline,
+        "fig6": fig6_dynamics, "fig7": fig7_imbalance,
+        "fig8": fig8_npartitions, "fig9": fig9_scaling,
+        "fig10": fig10_time, "roofline": roofline,
+    }
+    only = [s for s in args.only.split(",") if s]
+    failures = 0
+    print("name,value,derived")
+    for name, mod in mods.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=not args.full)
+            for line in mod.summarize(rows):
+                print(line, flush=True)
+            print(f"#{name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}:{e}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

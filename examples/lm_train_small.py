@@ -1,0 +1,88 @@
+"""End-to-end LM training: a ~100M-parameter dense transformer for a few
+hundred steps through the production train driver (fault-tolerant loop,
+async checkpoints, resumable data pipeline).
+
+    PYTHONPATH=src python examples/lm_train_small.py            # quick
+    PYTHONPATH=src python examples/lm_train_small.py --hundred-m --steps 200
+
+The quick mode trains a ~15M model so the example finishes in minutes on
+this 1-core CPU container; --hundred-m builds the ~100M config (same code
+path, longer wall time).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data import pipeline as dp
+from repro.models import transformer as T
+from repro.optim.optimizers import (adamw, apply_updates,
+                                    linear_warmup_cosine)
+from repro.runtime.fault import FaultTolerantLoop
+
+
+def config(hundred_m: bool) -> T.LMConfig:
+    if hundred_m:   # ~103M params
+        return T.LMConfig(name="lm-100m", n_layers=12, d_model=768,
+                          n_heads=12, n_kv_heads=4, head_dim=64,
+                          d_ff=2048, vocab=8192, dtype="float32",
+                          tie_embeddings=True)
+    return T.LMConfig(name="lm-15m", n_layers=6, d_model=384, n_heads=6,
+                      n_kv_heads=2, head_dim=64, d_ff=1024, vocab=4096,
+                      dtype="float32", tie_embeddings=True)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=40)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--hundred-m", action="store_true")
+    p.add_argument("--ckpt-dir", type=str, default="/tmp/lm_small_ckpt")
+    args = p.parse_args()
+
+    cfg = config(args.hundred_m)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    print(f"model {cfg.name}: {n/1e6:.1f}M params")
+
+    opt = adamw(linear_warmup_cosine(3e-4, 10, args.steps))
+    opt_state = opt.init(params)
+    ckpt = CheckpointManager(args.ckpt_dir, interval=max(args.steps // 3, 1))
+    loop = FaultTolerantLoop(ckpt)
+
+    @jax.jit
+    def step_fn(state, batch):
+        params, opt_state = state
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        (loss, m), grads = jax.value_and_grad(T.loss_fn, has_aux=True)(
+            params, batch, cfg)
+        upd, opt_state = opt.update(grads, opt_state, params)
+        return (apply_updates(params, upd), opt_state), dict(m, loss=loss)
+
+    losses = []
+    t0 = time.time()
+
+    def stepper(state, batch):
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        if len(losses) % 10 == 1:
+            print(f"step {len(losses):4d} loss {losses[-1]:.4f} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+        return state, metrics
+
+    batches = dp.token_batches(cfg.vocab, args.batch, args.seq, seed=0)
+    data = (next(batches) for _ in range(args.steps))
+    state, final = loop.run((params, opt_state), data, stepper)
+    ckpt.wait()
+    print(f"done: loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"in {time.time()-t0:.0f}s; checkpoints in {args.ckpt_dir}")
+    assert losses[-1] < losses[0], "loss must decrease on random data "\
+        "(memorising the seeded stream)"
+
+
+if __name__ == "__main__":
+    main()

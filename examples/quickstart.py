@@ -1,0 +1,44 @@
+"""Quickstart: stream a dynamic graph through SDP and the baselines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the GrQc-like collaboration graph (paper Table 2), streams it
+one-pass with add/delete intervals (paper §5.3.1), and prints the paper's
+three metrics — edge-cut ratio (Eq. 9), load imbalance (Eq. 10), execution
+time — for SDP vs the streaming baselines.
+"""
+import time
+
+from repro.core import EngineConfig, run_stream, state_metrics
+from repro.graph.datasets import load_dataset
+from repro.graph import stream as gstream
+
+
+def main():
+    g = load_dataset("grqc", scale=0.3)
+    print(f"graph: |V|={g.n} |E|={g.num_edges} (grqc-like, Table 2)")
+    s = gstream.dynamic_schedule(g, add_pct=25.0, del_pct=5.0,
+                                 n_intervals=4, seed=0)
+    print(f"stream: {s.num_events} events "
+          f"(adds+deletes, {len(s.intervals)} intervals)\n")
+
+    print(f"{'policy':10s} {'edge-cut':>9s} {'imbalance':>10s} "
+          f"{'partitions':>10s} {'seconds':>8s}")
+    for policy in ("sdp", "ldg", "fennel", "greedy", "hash", "random"):
+        cfg = EngineConfig(k_max=8, k_init=1 if policy == "sdp" else 4,
+                           max_cap=g.num_edges // 3,
+                           autoscale=policy == "sdp")
+        t0 = time.perf_counter()
+        state, _ = run_stream(s, policy=policy, cfg=cfg)
+        dt = time.perf_counter() - t0
+        m = state_metrics(state)
+        print(f"{policy:10s} {m['edge_cut_ratio']:9.4f} "
+              f"{m['load_imbalance']:10.1f} {m['num_partitions']:10d} "
+              f"{dt:8.2f}")
+    print("\nSDP assigns each arriving vertex to the partition holding most"
+          "\nof its neighbours (Eq. 1), guarded by the communication-aware"
+          "\nbalance test (Eqs. 2-4), and auto-scales partitions (Eq. 5-8).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.ckpt import save_pytree, restore_pytree
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["save_pytree", "restore_pytree", "CheckpointManager"]

@@ -1,0 +1,73 @@
+"""Pytree checkpointing: npz payload + msgpack treedef, atomic rename.
+
+Arrays are written host-resident and unsharded; restore re-shards under
+the *current* mesh (put with the target sharding), which is what makes
+elastic re-scale (repro.runtime.elastic) a restore with a different mesh.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path) for path, _ in flat]
+    vals = [np.asarray(v) for _, v in flat]
+    return keys, vals, treedef
+
+
+def save_pytree(path: str, tree, *, step: int | None = None) -> str:
+    """Atomic save. Returns the final path."""
+    keys, vals, _ = _flatten(tree)
+    meta = {"keys": keys, "step": step}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **{f"a{i}": v for i, v in enumerate(vals)})
+        with open(tmp + ".meta", "wb") as f:
+            f.write(msgpack.packb(meta))
+        os.replace(tmp, path)
+        os.replace(tmp + ".meta", path + ".meta")
+    finally:
+        for t in (tmp, tmp + ".meta"):
+            if os.path.exists(t):
+                os.unlink(t)
+    return path
+
+
+def restore_pytree(path: str, like, *, shardings=None):
+    """Restore into the structure of `like`; optional target shardings
+    (a matching pytree of jax.sharding.Sharding) for elastic re-shard."""
+    with open(path + ".meta", "rb") as f:
+        meta = msgpack.unpackb(f.read())
+    data = np.load(path)
+    vals = [data[f"a{i}"] for i in range(len(meta["keys"]))]
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    if len(vals) != len(flat_like):
+        raise ValueError(
+            f"checkpoint has {len(vals)} leaves, target has {len(flat_like)}")
+    if shardings is not None:
+        flat_sh = jax.tree_util.tree_flatten(shardings)[0]
+        out = [jax.device_put(v.astype(l.dtype), s)
+               for v, l, s in zip(vals, flat_like, flat_sh)]
+    else:
+        out = [jnp.asarray(v.astype(l.dtype)) for v, l in zip(vals, flat_like)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def checkpoint_step(path: str) -> int | None:
+    try:
+        with open(path + ".meta", "rb") as f:
+            return msgpack.unpackb(f.read()).get("step")
+    except FileNotFoundError:
+        return None

@@ -1,0 +1,105 @@
+"""Checkpoint manager: periodic async saves, retention, crash recovery,
+and a step journal for straggler/failure accounting.
+
+Fault-tolerance contract (DESIGN.md §6):
+  * save every `interval` steps on a background thread (training is never
+    blocked by disk);
+  * atomic rename ⇒ a crash mid-save never corrupts the latest checkpoint;
+  * `latest()` + `restore()` resume after preemption/node failure;
+  * the step journal records (step, wall_time, status) — the elastic
+    runtime uses it to detect stragglers (steps slower than
+    `straggler_factor` × median) and to pick the restart step.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import restore_pytree, save_pytree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, interval: int = 100, keep: int = 3,
+                 straggler_factor: float = 3.0):
+        self.dir = directory
+        self.interval = interval
+        self.keep = keep
+        self.straggler_factor = straggler_factor
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._journal_path = os.path.join(directory, "journal.jsonl")
+        self._step_times: list[float] = []
+
+    # -- journal / straggler accounting ------------------------------------
+    def record_step(self, step: int, seconds: float, status: str = "ok"):
+        self._step_times.append(seconds)
+        with open(self._journal_path, "a") as f:
+            f.write(json.dumps({"step": step, "t": seconds,
+                                "status": status}) + "\n")
+
+    def is_straggler(self, seconds: float) -> bool:
+        if len(self._step_times) < 8:
+            return False
+        med = float(np.median(self._step_times[-64:]))
+        return seconds > self.straggler_factor * med
+
+    # -- save/restore -------------------------------------------------------
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+
+    def maybe_save(self, step: int, tree, *, blocking: bool = False):
+        if step % self.interval != 0:
+            return False
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
+
+        def work():
+            save_pytree(self._path(step), host_tree, step=step)
+            self._gc()
+
+        if self._thread is not None:
+            self._thread.join()
+        if blocking:
+            work()
+            self._thread = None
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        return True
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _steps(self) -> list[int]:
+        out = []
+        for p in glob.glob(os.path.join(self.dir, "ckpt_*.npz")):
+            m = re.search(r"ckpt_(\d+)\.npz$", p)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def _gc(self):
+        for s in self._steps()[: -self.keep]:
+            for suffix in ("", ".meta"):
+                p = self._path(s) + suffix
+                if os.path.exists(p):
+                    os.unlink(p)
+
+    def latest(self) -> int | None:
+        steps = self._steps()
+        return steps[-1] if steps else None
+
+    def restore(self, like, *, step: int | None = None, shardings=None):
+        step = step if step is not None else self.latest()
+        if step is None:
+            return None, None
+        return restore_pytree(self._path(step), like,
+                              shardings=shardings), step

@@ -1,0 +1,46 @@
+"""Architecture registry: all 10 assigned archs, selectable by --arch id."""
+from __future__ import annotations
+
+from repro.configs.base import ArchDef
+from repro.configs.shapes import (GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES,
+                                  GNNShape, LMShape, RecSysShape)
+
+from repro.configs import (  # noqa: E402
+    deepseek_coder_33b,
+    gemma2_9b,
+    llama4_scout_17b_a16e,
+    meshgraphnet,
+    moonshot_v1_16b_a3b,
+    nequip,
+    phi3_mini_3p8b,
+    pna,
+    schnet,
+    two_tower_retrieval,
+)
+
+ARCHS: dict[str, ArchDef] = {
+    m.ARCH.arch_id: m.ARCH
+    for m in (
+        gemma2_9b, deepseek_coder_33b, phi3_mini_3p8b,
+        moonshot_v1_16b_a3b, llama4_scout_17b_a16e,
+        meshgraphnet, schnet, nequip, pna,
+        two_tower_retrieval,
+    )
+}
+
+
+def get_arch(arch_id: str) -> ArchDef:
+    if arch_id not in ARCHS:
+        raise KeyError(
+            f"unknown arch '{arch_id}'; available: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every (arch, shape) cell — 40 total, including skip-marked ones."""
+    return [(a, s) for a, arch in ARCHS.items() for s in arch.shapes]
+
+
+__all__ = ["ARCHS", "get_arch", "all_cells", "ArchDef",
+           "LM_SHAPES", "GNN_SHAPES", "RECSYS_SHAPES",
+           "LMShape", "GNNShape", "RecSysShape"]

@@ -1,0 +1,16 @@
+"""pna [arXiv:2004.05718]: 4 layers, hidden 75, aggregators
+mean/max/min/std, scalers identity/amplification/attenuation."""
+from repro.configs.base import ArchDef
+from repro.models.gnn.pna import PNAConfig
+
+CONFIG = PNAConfig(n_layers=4, d_hidden=75,
+                   aggregators=("mean", "max", "min", "std"),
+                   scalers=("identity", "amplification", "attenuation"))
+
+SMOKE_CONFIG = PNAConfig(n_layers=2, d_hidden=16,
+                         aggregators=("mean", "max", "min", "std"),
+                         scalers=("identity", "amplification", "attenuation"))
+
+ARCH = ArchDef("pna", "gnn", CONFIG, SMOKE_CONFIG,
+               source="arXiv:2004.05718; paper",
+               gnn_inputs=("feat",))

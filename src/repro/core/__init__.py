@@ -1,0 +1,19 @@
+"""SDP core: the paper's contribution as a composable JAX module."""
+from repro.core.config import EngineConfig, POLICIES
+from repro.core.state import PartitionState, init_state, state_metrics
+from repro.core.engine import run_events, run_stream, trace_at, EventTrace
+from repro.core.windowed import run_stream_windowed, run_window_adds
+from repro.core.metrics import (
+    recompute_counters, edge_cut_ratio, load_imbalance,
+    normalized_load_imbalance,
+)
+from repro.core.offline import offline_partition, cut_of
+from repro.core.ref import run_reference
+
+__all__ = [
+    "EngineConfig", "POLICIES", "PartitionState", "init_state", "state_metrics",
+    "run_events", "run_stream", "trace_at", "EventTrace",
+    "run_stream_windowed", "run_window_adds",
+    "recompute_counters", "edge_cut_ratio", "load_imbalance",
+    "normalized_load_imbalance", "offline_partition", "cut_of", "run_reference",
+]

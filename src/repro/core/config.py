@@ -1,0 +1,47 @@
+"""Engine configuration (paper §4.2 knobs). Frozen+hashable for jit statics."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Knobs of Algorithm 1 / §4.2.2–4.2.3.
+
+    Attributes:
+      k_max: static upper bound on partitions (XLA shapes); the paper's cloud
+        can grow unboundedly, we grow logically up to k_max and count denials.
+      k_init: partitions active at t=0 (paper starts with one worker).
+      max_cap: MAXCAP — maximum edge-load capacity of one partition.
+      tolerance_param: Eq. 6 `toleranceParameter` (%); scale-in trigger
+        l = tolerance_param*MAXCAP/100.
+      dest_param: Eq. 7 `param` (%); destinationThreshold = MAXCAP −
+        param*MAXCAP/100.
+      balance_guard: 'text' → §4.2.2 semantics (AVG_d > TH ⇒ least-loaded);
+        'alg1' → Algorithm 1 listing semantics (σ > TH ⇒ affinity path,
+        else least-loaded). The two disagree in the paper; 'text' is default
+        and the discrepancy is documented in DESIGN.md.
+      autoscale: enable §4.2.3 scale-out/in (SDP=True; baselines=False).
+      fennel_gamma / fennel_alpha_scale: Fennel policy constants.
+      ldg_slack: LDG capacity slack factor (C = slack * n / k).
+    """
+
+    k_max: int = 16
+    k_init: int = 1
+    max_cap: int = 1 << 30
+    tolerance_param: float = 25.0
+    dest_param: float = 5.0
+    balance_guard: str = "text"
+    autoscale: bool = True
+    fennel_gamma: float = 1.5
+    fennel_alpha_scale: float = 1.0
+    ldg_slack: float = 1.1
+
+    def __post_init__(self):
+        if self.balance_guard not in ("text", "alg1"):
+            raise ValueError("balance_guard must be 'text' or 'alg1'")
+        if not (1 <= self.k_init <= self.k_max):
+            raise ValueError("need 1 <= k_init <= k_max")
+
+
+POLICIES = ("sdp", "ldg", "fennel", "hash", "random", "greedy")

@@ -1,0 +1,368 @@
+"""Faithful one-pass streaming engine (paper Algorithm 1) as a lax.scan.
+
+Every event (add vertex / delete vertex / delete edge) is processed in
+arrival order, exactly one pass, with the partition decision taken from the
+state as of that event — the TPU-native equivalent of the paper's Java
+event loop. Policies: SDP (Alg. 1 + §4.2.2 balance guard + §4.2.3 scaling)
+and the streaming baselines (LDG, Fennel, hash, random, pure greedy).
+
+The windowed engine (repro.core.windowed) is bit-identical to this one but
+restructures the hot affinity scoring into a batched kernel; this module is
+the semantic reference.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.config import EngineConfig
+from repro.core.state import PartitionState, init_state
+from repro.graph.stream import (
+    EVENT_ADD, EVENT_DEL_EDGE, EVENT_DEL_VERTEX, VertexStream,
+)
+
+_BIG = jnp.int32(2**30)
+
+
+class EventTrace(NamedTuple):
+    """Per-event metric trace (paper captures these at interval boundaries)."""
+    total_edges: jax.Array
+    cut_edges: jax.Array
+    num_partitions: jax.Array
+    load_std: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def neighbor_stats(state: PartitionState, row: jax.Array):
+    """(scores[k], deg, nb_present, safe_row): affinity of one vertex row.
+
+    scores[k] = |E(v) ∩ P_k| over *present* neighbours (paper Eq. 1).
+    """
+    valid = row >= 0
+    safe_row = jnp.where(valid, row, 0)
+    nb_present = valid & state.present[safe_row]
+    nb_assign = jnp.where(nb_present, state.assignment[safe_row], -1)
+    k_max = state.edge_load.shape[0]
+    onehot = (nb_assign[:, None] == jnp.arange(k_max, dtype=jnp.int32)[None, :])
+    scores = jnp.sum(onehot, axis=0, dtype=jnp.int32)
+    deg = jnp.sum(nb_present, dtype=jnp.int32)
+    return scores, deg, nb_present, safe_row
+
+
+def nth_active(active: jax.Array, i: jax.Array) -> jax.Array:
+    """Index of the i-th active partition (i < num active)."""
+    cum = jnp.cumsum(active.astype(jnp.int32)) - 1
+    return jnp.argmax((cum == i) & active).astype(jnp.int32)
+
+
+def masked_argmin(x: jax.Array, mask: jax.Array) -> jax.Array:
+    return jnp.argmin(jnp.where(mask, x, _BIG)).astype(jnp.int32)
+
+
+def load_stats(state: PartitionState):
+    """(avg_d, load_dev) over active partitions — Eqs. 2 & 10."""
+    act = state.active
+    load = state.edge_load.astype(jnp.float32)
+    p = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
+    maxl = jnp.max(jnp.where(act, load, -jnp.inf))
+    minl = jnp.min(jnp.where(act, load, jnp.inf))
+    avg_d = (maxl - minl) / p
+    mean = jnp.sum(jnp.where(act, load, 0.0)) / p
+    var = jnp.sum(jnp.where(act, (load - mean) ** 2, 0.0)) / p
+    return avg_d, jnp.sqrt(var)
+
+
+# ---------------------------------------------------------------------------
+# policies: choose a partition for an arriving vertex
+# ---------------------------------------------------------------------------
+
+def _affinity_choice(state: PartitionState, scores: jax.Array, key: jax.Array):
+    """Paper Alg. 3: argmax affinity; tie → min load; no overlap → random."""
+    act = state.active
+    s = jnp.where(act, scores, -1)
+    best = jnp.max(s)
+    tied = act & (s == best)
+    p_tie = masked_argmin(state.edge_load, tied)          # tie → min load
+    ridx = jax.random.randint(key, (), 0, jnp.maximum(state.num_partitions, 1))
+    p_rand = nth_active(act, ridx)                        # no overlap → random
+    return jnp.where(best > 0, p_tie, p_rand)
+
+
+def _choose_sdp(state, scores, deg, v, key, cfg: EngineConfig, n: int):
+    """§4.2.2 communication-aware balance guard wrapped around Alg. 3."""
+    avg_d, load_dev = load_stats(state)
+    cut = jnp.maximum(state.cut_edges.astype(jnp.float32), 1.0)
+    w_dev = (state.total_edges.astype(jnp.float32) / cut) * load_dev  # Eq. 4
+    th = w_dev - load_dev                                             # Eq. 3
+    p_min = masked_argmin(state.edge_load, state.active)
+    p_aff = _affinity_choice(state, scores, key)
+    multi = state.num_partitions > 1
+    if cfg.balance_guard == "text":
+        guard = multi & (avg_d > th)          # §4.2.2: imbalance ⇒ least-loaded
+        return jnp.where(guard, p_min, p_aff)
+    sigma = load_dev                          # Alg. 1 listing: σ > TH ⇒ affinity
+    guard = multi & (sigma > th)
+    return jnp.where(guard, p_aff, p_min)
+
+
+def _choose_ldg(state, scores, deg, v, key, cfg: EngineConfig, n: int):
+    k = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
+    cap = cfg.ldg_slack * n / k
+    w = 1.0 - state.vertex_count.astype(jnp.float32) / cap
+    h = scores.astype(jnp.float32) * jnp.maximum(w, 0.0)
+    h = jnp.where(state.active, h, -jnp.inf)
+    best = jnp.max(h)
+    tied = state.active & (h >= best - 1e-6)
+    return masked_argmin(state.vertex_count, tied)
+
+
+def _choose_fennel(state, scores, deg, v, key, cfg: EngineConfig, n: int):
+    g = cfg.fennel_gamma
+    m = state.total_edges.astype(jnp.float32) + deg.astype(jnp.float32)
+    nt = jnp.maximum(jnp.sum(state.vertex_count).astype(jnp.float32), 1.0)
+    k = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
+    alpha = cfg.fennel_alpha_scale * jnp.sqrt(k) * m / (nt**1.5)
+    cost = alpha * g * state.vertex_count.astype(jnp.float32) ** (g - 1.0)
+    h = jnp.where(state.active, scores.astype(jnp.float32) - cost, -jnp.inf)
+    best = jnp.max(h)
+    tied = state.active & (h >= best - 1e-6)
+    return masked_argmin(state.vertex_count, tied)
+
+
+def _choose_hash(state, scores, deg, v, key, cfg: EngineConfig, n: int):
+    idx = jnp.mod(v, jnp.maximum(state.num_partitions, 1))
+    return nth_active(state.active, idx)
+
+
+def _choose_random(state, scores, deg, v, key, cfg: EngineConfig, n: int):
+    idx = jax.random.randint(key, (), 0, jnp.maximum(state.num_partitions, 1))
+    return nth_active(state.active, idx)
+
+
+def _choose_greedy(state, scores, deg, v, key, cfg: EngineConfig, n: int):
+    return _affinity_choice(state, scores, key)
+
+
+_POLICY_FNS = {
+    "sdp": _choose_sdp,
+    "ldg": _choose_ldg,
+    "fennel": _choose_fennel,
+    "hash": _choose_hash,
+    "random": _choose_random,
+    "greedy": _choose_greedy,
+}
+
+
+# ---------------------------------------------------------------------------
+# scaling (§4.2.3)
+# ---------------------------------------------------------------------------
+
+def scale_out(state: PartitionState, cfg: EngineConfig) -> PartitionState:
+    """Eq. 5: if MAXCAP ≤ |E|/|P|, activate one more partition."""
+    p = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
+    adding_threshold = state.total_edges.astype(jnp.float32) / p
+    want = cfg.max_cap <= adding_threshold
+    slot_free = ~jnp.all(state.active)
+    do = want & slot_free
+    slot = jnp.argmax(~state.active).astype(jnp.int32)  # first inactive slot
+    return state._replace(
+        active=state.active.at[slot].set(jnp.where(do, True, state.active[slot])),
+        num_partitions=state.num_partitions + do.astype(jnp.int32),
+        scale_events=state.scale_events + do.astype(jnp.int32),
+        denied_scaleout=state.denied_scaleout + (want & ~slot_free).astype(jnp.int32),
+    )
+
+
+def _recompute_cut(assignment, present, adj) -> jax.Array:
+    """Exact cut count (each undirected edge stored twice in adj)."""
+    valid = adj >= 0
+    safe = jnp.where(valid, adj, 0)
+    nb_present = valid & present[safe]
+    both = nb_present & present[:, None]
+    diff = assignment[:, None] != assignment[safe]
+    return (jnp.sum(both & diff, dtype=jnp.int32) // 2).astype(jnp.int32)
+
+
+def scale_in(state: PartitionState, cfg: EngineConfig) -> PartitionState:
+    """Eqs. 6–8: if ≥2 machines under l, migrate min-load machine into the
+    next-least-loaded one (if it fits under destinationThreshold)."""
+    l = cfg.tolerance_param * cfg.max_cap / 100.0
+    dest_threshold = cfg.max_cap - cfg.dest_param * cfg.max_cap / 100.0
+    under = state.active & (state.edge_load.astype(jnp.float32) < l)
+    n_under = jnp.sum(under, dtype=jnp.int32)
+    src = masked_argmin(state.edge_load, state.active)
+    mask2 = state.active.at[src].set(False)
+    dst = masked_argmin(state.edge_load, mask2)
+    fits = (state.edge_load[src] + state.edge_load[dst]).astype(jnp.float32) <= dest_threshold
+    do = (state.num_partitions > 1) & (n_under >= 2) & fits
+
+    def migrate(s: PartitionState) -> PartitionState:
+        assignment = jnp.where(s.assignment == src, dst, s.assignment)
+        edge_load = s.edge_load.at[dst].add(s.edge_load[src]).at[src].set(0)
+        vertex_count = s.vertex_count.at[dst].add(s.vertex_count[src]).at[src].set(0)
+        cut = _recompute_cut(assignment, s.present, s.adj)
+        return s._replace(
+            assignment=assignment, edge_load=edge_load, vertex_count=vertex_count,
+            active=s.active.at[src].set(False),
+            num_partitions=s.num_partitions - 1,
+            cut_edges=cut,
+            scale_events=s.scale_events + 1,
+        )
+
+    return jax.lax.cond(do, migrate, lambda s: s, state)
+
+
+# ---------------------------------------------------------------------------
+# event branches
+# ---------------------------------------------------------------------------
+
+def _apply_add(state: PartitionState, v, row, key, policy: str, cfg: EngineConfig):
+    if policy == "sdp" and cfg.autoscale:
+        state = scale_out(state, cfg)
+    scores, deg, nb_present, safe_row = neighbor_stats(state, row)
+    n = state.assignment.shape[0]
+    p = _POLICY_FNS[policy](state, scores, deg, v, key, cfg, n)
+    fresh = ~state.present[v]  # ignore duplicate adds
+    d = jnp.where(fresh, deg, 0)
+    sc = jnp.where(fresh, scores, 0)
+    return state._replace(
+        assignment=jnp.where(fresh, state.assignment.at[v].set(p), state.assignment),
+        present=state.present.at[v].set(True),
+        adj=jnp.where(fresh, state.adj.at[v].set(row), state.adj),
+        vertex_count=state.vertex_count.at[p].add(fresh.astype(jnp.int32)),
+        edge_load=(state.edge_load + sc).at[p].add(d),
+        total_edges=state.total_edges + d,
+        cut_edges=state.cut_edges + d - sc[p],
+    )
+
+
+def _apply_del_vertex(state: PartitionState, v, row, key, policy: str, cfg: EngineConfig):
+    was = state.present[v]
+    own_row = state.adj[v]
+    scores, deg, _, _ = neighbor_stats(state, own_row)
+    p = jnp.maximum(state.assignment[v], 0)
+    d = jnp.where(was, deg, 0)
+    sc = jnp.where(was, scores, 0)
+    state = state._replace(
+        assignment=jnp.where(was, state.assignment.at[v].set(-1), state.assignment),
+        present=state.present.at[v].set(False),
+        vertex_count=state.vertex_count.at[p].add(-was.astype(jnp.int32)),
+        edge_load=(state.edge_load - sc).at[p].add(-d),
+        total_edges=state.total_edges - d,
+        cut_edges=state.cut_edges - (d - sc[p]),
+    )
+    if policy == "sdp" and cfg.autoscale:
+        state = scale_in(state, cfg)
+    return state
+
+
+def _apply_del_edge(state: PartitionState, v, row, key, policy: str, cfg: EngineConfig):
+    u = row[0]
+    safe_u = jnp.maximum(u, 0)
+    in_adj = jnp.any(state.adj[v] == u) & (u >= 0)
+    exists = state.present[v] & state.present[safe_u] & in_adj
+    pv = jnp.maximum(state.assignment[v], 0)
+    pu = jnp.maximum(state.assignment[safe_u], 0)
+    e = exists.astype(jnp.int32)
+    cutdec = (exists & (pv != pu)).astype(jnp.int32)
+    adj = state.adj.at[v].set(jnp.where(state.adj[v] == u, -1, state.adj[v]))
+    adj = adj.at[safe_u].set(jnp.where(adj[safe_u] == v, -1, adj[safe_u]))
+    return state._replace(
+        adj=jnp.where(u >= 0, adj, state.adj),
+        edge_load=state.edge_load.at[pv].add(-e).at[pu].add(-e),
+        total_edges=state.total_edges - e,
+        cut_edges=state.cut_edges - cutdec,
+    )
+
+
+def _apply_pad(state, v, row, key, policy, cfg):
+    return state
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("policy", "cfg"))
+def run_events(
+    state: PartitionState,
+    etype: jax.Array,     # (T,)
+    vertex: jax.Array,    # (T,)
+    nbrs: jax.Array,      # (T, max_deg)
+    t0: jax.Array,        # () global index of first event (RNG alignment)
+    *,
+    policy: str,
+    cfg: EngineConfig,
+) -> tuple[PartitionState, EventTrace]:
+    """Process a chunk of events; resumable (checkpoint state between chunks)."""
+    base_key = state.key
+
+    def step(s: PartitionState, ev):
+        et, v, row, i = ev
+        key = jax.random.fold_in(base_key, i)
+        sv = jnp.maximum(v, 0)
+        branches = [_apply_add, _apply_del_vertex, _apply_del_edge, _apply_pad]
+        s = jax.lax.switch(
+            jnp.clip(et, 0, 3),
+            [functools.partial(f, policy=policy, cfg=cfg) for f in branches],
+            s, sv, row, key,
+        )
+        _, load_dev = load_stats(s)
+        tr = EventTrace(s.total_edges, s.cut_edges, s.num_partitions, load_dev)
+        return s, tr
+
+    idx = t0 + jnp.arange(etype.shape[0], dtype=jnp.int32)
+    final, trace = jax.lax.scan(step, state, (etype, vertex, nbrs, idx))
+    return final, trace
+
+
+def run_stream(
+    stream: VertexStream,
+    *,
+    policy: str = "sdp",
+    cfg: EngineConfig | None = None,
+    seed: int = 0,
+    chunk: int | None = None,
+) -> tuple[PartitionState, EventTrace]:
+    """Host entry: run a full stream through the faithful engine."""
+    cfg = cfg or EngineConfig()
+    state = init_state(stream.n, stream.max_deg, cfg.k_max, cfg.k_init, seed)
+    et = jnp.asarray(stream.etype)
+    vx = jnp.asarray(stream.vertex)
+    nb = jnp.asarray(stream.nbrs)
+    if chunk is None:
+        return run_events(state, et, vx, nb, jnp.int32(0), policy=policy, cfg=cfg)
+    traces = []
+    t = 0
+    while t < stream.num_events:
+        sl = slice(t, min(t + chunk, stream.num_events))
+        state, tr = run_events(
+            state, et[sl], vx[sl], nb[sl], jnp.int32(t), policy=policy, cfg=cfg
+        )
+        traces.append(tr)
+        t = sl.stop
+    trace = EventTrace(*(jnp.concatenate([getattr(tr, f) for tr in traces])
+                         for f in EventTrace._fields))
+    return state, trace
+
+
+def trace_at(trace: EventTrace, indices) -> dict[str, np.ndarray]:
+    """Sample the trace at interval boundaries (paper's capture points)."""
+    idx = np.asarray(indices, dtype=np.int64) - 1
+    idx = np.clip(idx, 0, np.asarray(trace.total_edges).shape[0] - 1)
+    tot = np.asarray(trace.total_edges)[idx]
+    cut = np.asarray(trace.cut_edges)[idx]
+    return {
+        "total_edges": tot,
+        "cut_edges": cut,
+        "edge_cut_ratio": cut / np.maximum(tot, 1),
+        "num_partitions": np.asarray(trace.num_partitions)[idx],
+        "load_std": np.asarray(trace.load_std)[idx],
+    }

@@ -1,0 +1,65 @@
+"""Partition state: the paper's meta-data maps as dense JAX arrays.
+
+partitionInfoMap<p, List<v>>  -> assignment (n,) inverted index
+edgeInfoMap<v, List<edges>>   -> adj (n, max_deg) + present (n,)
+graph summary (Alg. 2)        -> edge_load / vertex_count / totals
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PartitionState(NamedTuple):
+    assignment: jax.Array    # (n,) int32, -1 = absent
+    present: jax.Array       # (n,) bool
+    adj: jax.Array           # (n, max_deg) int32, -1 padded (symmetric cap)
+    edge_load: jax.Array     # (k_max,) int32 — paper "load": Σ incident edges
+    vertex_count: jax.Array  # (k_max,) int32
+    active: jax.Array        # (k_max,) bool
+    num_partitions: jax.Array  # () int32
+    total_edges: jax.Array   # () int32 — present edges
+    cut_edges: jax.Array     # () int32 — present cut edges
+    denied_scaleout: jax.Array  # () int32 — scale-outs blocked by k_max
+    scale_events: jax.Array  # () int32 — scale-out + scale-in events executed
+    key: jax.Array           # PRNG key
+
+
+def init_state(n: int, max_deg: int, k_max: int, k_init: int, seed: int = 0) -> PartitionState:
+    active = jnp.arange(k_max) < k_init
+    return PartitionState(
+        assignment=jnp.full((n,), -1, jnp.int32),
+        present=jnp.zeros((n,), bool),
+        adj=jnp.full((n, max_deg), -1, jnp.int32),
+        edge_load=jnp.zeros((k_max,), jnp.int32),
+        vertex_count=jnp.zeros((k_max,), jnp.int32),
+        active=active,
+        num_partitions=jnp.asarray(k_init, jnp.int32),
+        total_edges=jnp.asarray(0, jnp.int32),
+        cut_edges=jnp.asarray(0, jnp.int32),
+        denied_scaleout=jnp.asarray(0, jnp.int32),
+        scale_events=jnp.asarray(0, jnp.int32),
+        key=jax.random.PRNGKey(seed),
+    )
+
+
+def state_metrics(s: PartitionState) -> dict[str, np.ndarray]:
+    """Host-side summary (edge-cut ratio Eq. 9, load imbalance Eq. 10)."""
+    load = np.asarray(s.edge_load, np.float64)
+    act = np.asarray(s.active)
+    k = max(int(act.sum()), 1)
+    mean = load[act].sum() / k if act.any() else 0.0
+    imb = float(np.sqrt(np.sum((load[act] - mean) ** 2) / k)) if act.any() else 0.0
+    tot = int(s.total_edges)
+    return {
+        "edge_cut": int(s.cut_edges),
+        "total_edges": tot,
+        "edge_cut_ratio": float(int(s.cut_edges) / max(tot, 1)),
+        "load_imbalance": imb,
+        "num_partitions": int(s.num_partitions),
+        "denied_scaleout": int(s.denied_scaleout),
+        "scale_events": int(s.scale_events),
+    }

@@ -1,0 +1,208 @@
+"""Windowed streaming engine — the beyond-paper TPU optimisation.
+
+The paper assigns strictly one vertex at a time; that serialises the hot
+affinity gather and starves the VPU/MXU. This engine processes a *window*
+of W arriving vertices per device step:
+
+  1. committed scores (W, K) — one batched gather+one-hot-histogram against
+     the state as of window start (the `partition_affinity` Pallas kernel);
+  2. a tiny sequential fixup scan over the W decisions that adds the
+     intra-window neighbour contributions and maintains the load /
+     cut / scaling counters.
+
+The decomposition is exact: for window vertex i, the faithful engine's
+score is (committed neighbours) + (window neighbours assigned before i),
+which is precisely scores_committed[i] + the fixup increment. RNG uses the
+same fold_in(base_key, global_event_index) scheme, so the windowed engine
+is **bit-identical** to repro.core.engine — verified by tests — while the
+O(W·max_deg·K) work is batched.
+
+Deletion events are processed through the faithful branch (they are rare
+and O(max_deg)); windows are split at deletion boundaries.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as eng
+from repro.core.config import EngineConfig
+from repro.core.state import PartitionState, init_state
+from repro.graph.stream import EVENT_ADD, VertexStream
+
+
+class SmallState(NamedTuple):
+    """The O(K) slice of PartitionState carried through the fixup scan."""
+    active: jax.Array
+    edge_load: jax.Array
+    vertex_count: jax.Array
+    num_partitions: jax.Array
+    total_edges: jax.Array
+    cut_edges: jax.Array
+    denied_scaleout: jax.Array
+    scale_events: jax.Array
+
+
+def _small(state: PartitionState) -> SmallState:
+    return SmallState(
+        state.active, state.edge_load, state.vertex_count, state.num_partitions,
+        state.total_edges, state.cut_edges, state.denied_scaleout,
+        state.scale_events,
+    )
+
+
+def committed_scores(state: PartitionState, rows: jax.Array):
+    """Batched paper-Eq.-1 affinity of W vertices vs the committed state.
+
+    This is the reference (jnp) path; `repro.kernels.partition_affinity`
+    provides the Pallas TPU kernel with identical semantics (swap via
+    ``use_kernel=True`` in run_stream_windowed).
+    """
+    valid = rows >= 0
+    safe = jnp.where(valid, rows, 0)
+    nb_present = valid & state.present[safe]
+    nb_assign = jnp.where(nb_present, state.assignment[safe], -1)
+    k_max = state.edge_load.shape[0]
+    onehot = nb_assign[..., None] == jnp.arange(k_max, dtype=jnp.int32)
+    scores = jnp.sum(onehot, axis=1, dtype=jnp.int32)   # (W, K)
+    deg = jnp.sum(nb_present, axis=1, dtype=jnp.int32)  # (W,)
+    return scores, deg
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "cfg", "score_fn"))
+def run_window_adds(
+    state: PartitionState,
+    vs: jax.Array,       # (W,) vertex ids (-1 pad allowed)
+    rows: jax.Array,     # (W, max_deg)
+    t0: jax.Array,       # () global event index of window start
+    *,
+    policy: str,
+    cfg: EngineConfig,
+    score_fn=None,
+) -> PartitionState:
+    """Process one ADD-only window. Bit-identical to the faithful engine."""
+    n = state.assignment.shape[0]
+    w = vs.shape[0]
+    k_max = state.edge_load.shape[0]
+    base_key = state.key
+    is_add = vs >= 0
+    safe_vs = jnp.where(is_add, vs, 0)
+
+    sfn = score_fn or committed_scores
+    scores_c, deg_c = sfn(state, rows)                       # (W,K), (W,)
+    # window-position lookup for intra-window neighbour fixup
+    # (pad slots scatter to sentinel row n so they never clobber a vertex)
+    pos_of = jnp.full((n + 1,), -1, jnp.int32).at[
+        jnp.where(is_add, vs, n)
+    ].set(jnp.arange(w, dtype=jnp.int32))
+    valid = rows >= 0
+    win_pos = jnp.where(valid, pos_of[jnp.where(valid, rows, 0)], -1)  # (W,D)
+
+    def fix_step(carry, i):
+        small, w_assign = carry
+        key = jax.random.fold_in(base_key, t0 + i)
+        if policy == "sdp" and cfg.autoscale:
+            # faithful engine scales out per ADD event only (pads skip it)
+            small = jax.lax.cond(
+                is_add[i], lambda s: eng.scale_out(s, cfg), lambda s: s, small
+            )
+        intra = (win_pos[i] >= 0) & (win_pos[i] < i)
+        nb_wa = jnp.where(intra, w_assign[jnp.where(intra, win_pos[i], 0)], -1)
+        onehot = nb_wa[:, None] == jnp.arange(k_max, dtype=jnp.int32)
+        sc = scores_c[i] + jnp.sum(onehot, axis=0, dtype=jnp.int32)
+        deg = deg_c[i] + jnp.sum(intra, dtype=jnp.int32)
+        p = eng._POLICY_FNS[policy](small, sc, deg, safe_vs[i], key, cfg, n)
+        do = is_add[i] & ~state.present[safe_vs[i]]
+        d = jnp.where(do, deg, 0)
+        scm = jnp.where(do, sc, 0)
+        small = small._replace(
+            vertex_count=small.vertex_count.at[p].add(do.astype(jnp.int32)),
+            edge_load=(small.edge_load + scm).at[p].add(d),
+            total_edges=small.total_edges + d,
+            cut_edges=small.cut_edges + d - scm[p],
+        )
+        w_assign = w_assign.at[i].set(jnp.where(do, p, w_assign[i]))
+        return (small, w_assign), None
+
+    small0 = _small(state)
+    w_assign0 = jnp.full((w,), -1, jnp.int32)
+    (small, w_assign), _ = jax.lax.scan(
+        fix_step, (small0, w_assign0), jnp.arange(w, dtype=jnp.int32)
+    )
+
+    fresh = is_add & (w_assign >= 0)
+    # scatter target: non-fresh slots (pads, duplicate adds) go to the
+    # out-of-bounds row n, which jax scatters DROP — they must not write,
+    # or a pad could clobber a real vertex's slot (duplicate .set indices
+    # have undefined winners).
+    tgt = jnp.where(fresh, safe_vs, n)
+    assignment = state.assignment.at[tgt].set(
+        jnp.where(fresh, w_assign, -1), mode="drop")
+    present = state.present.at[tgt].set(True, mode="drop")
+    adj = state.adj.at[tgt].set(
+        jnp.where(fresh[:, None], rows, -1), mode="drop")
+    return state._replace(
+        assignment=assignment, present=present, adj=adj,
+        active=small.active, edge_load=small.edge_load,
+        vertex_count=small.vertex_count, num_partitions=small.num_partitions,
+        total_edges=small.total_edges, cut_edges=small.cut_edges,
+        denied_scaleout=small.denied_scaleout, scale_events=small.scale_events,
+    )
+
+
+def run_stream_windowed(
+    stream: VertexStream,
+    *,
+    policy: str = "sdp",
+    cfg: EngineConfig | None = None,
+    seed: int = 0,
+    window: int = 256,
+    use_kernel: bool = False,
+) -> PartitionState:
+    """Host driver: windows of ADDs through run_window_adds, other events
+    through the faithful engine. Deterministically equal to run_stream."""
+    cfg = cfg or EngineConfig()
+    state = init_state(stream.n, stream.max_deg, cfg.k_max, cfg.k_init, seed)
+    if use_kernel:
+        from repro.kernels.partition_affinity.ops import scores_for_state
+        score_fn = scores_for_state
+    else:
+        score_fn = None
+
+    et = np.asarray(stream.etype)
+    vx = jnp.asarray(stream.vertex)
+    nb = jnp.asarray(stream.nbrs)
+    t = 0
+    T = stream.num_events
+    while t < T:
+        if et[t] == EVENT_ADD:
+            end = t
+            while end < T and et[end] == EVENT_ADD and end - t < window:
+                end += 1
+            w = end - t
+            vs_w = vx[t:end]
+            rows_w = nb[t:end]
+            if w < window:  # pad to fixed window for compile-cache hits
+                vs_w = jnp.concatenate([vs_w, jnp.full(window - w, -1, jnp.int32)])
+                rows_w = jnp.concatenate(
+                    [rows_w, jnp.full((window - w, stream.max_deg), -1, jnp.int32)]
+                )
+            state = run_window_adds(
+                state, vs_w, rows_w, jnp.int32(t),
+                policy=policy, cfg=cfg, score_fn=score_fn,
+            )
+            t = end
+        else:
+            end = t
+            while end < T and et[end] != EVENT_ADD:
+                end += 1
+            state, _ = eng.run_events(
+                state, jnp.asarray(et[t:end]), vx[t:end], nb[t:end],
+                jnp.int32(t), policy=policy, cfg=cfg,
+            )
+            t = end
+    return state

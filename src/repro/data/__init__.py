@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    token_batches, lm_batch, graph_full_batch, graph_minibatches,
+    recsys_batches,
+)
+
+__all__ = ["token_batches", "lm_batch", "graph_full_batch",
+           "graph_minibatches", "recsys_batches"]

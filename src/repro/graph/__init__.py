@@ -1,0 +1,18 @@
+"""Graph substrate: structures, synthetic datasets, streams, sampling, halo."""
+from repro.graph.csr import Graph, from_edge_list, to_undirected, degrees
+from repro.graph.generators import (
+    mesh_graph, barabasi_albert, erdos_renyi, powerlaw_cluster, make_graph,
+)
+from repro.graph.datasets import PAPER_DATASETS, load_dataset
+from repro.graph.stream import (
+    VertexStream, build_stream, dynamic_schedule, EVENT_ADD, EVENT_DEL_VERTEX,
+    EVENT_DEL_EDGE, EVENT_PAD,
+)
+
+__all__ = [
+    "Graph", "from_edge_list", "to_undirected", "degrees",
+    "mesh_graph", "barabasi_albert", "erdos_renyi", "powerlaw_cluster",
+    "make_graph", "PAPER_DATASETS", "load_dataset",
+    "VertexStream", "build_stream", "dynamic_schedule",
+    "EVENT_ADD", "EVENT_DEL_VERTEX", "EVENT_DEL_EDGE", "EVENT_PAD",
+]

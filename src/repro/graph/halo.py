@@ -1,0 +1,134 @@
+"""SDP partition → sharded-GNN layout: block relabelling + halo indices.
+
+This is where the paper's output becomes the distributed runtime's input
+(DESIGN.md §3). Given an assignment of nodes to P partitions:
+
+  * nodes are relabelled so each shard owns one padded block (Nb rows);
+  * each shard "publishes" the boundary rows other shards need (B_max
+    slots, padded);
+  * every shard's halo is described as (source_shard, publish_slot) pairs;
+  * per-shard local edge lists index [own block ++ halo buffer].
+
+The per-layer collective is then ONE all-gather of (B_max, F) per shard —
+its byte volume is proportional to max-boundary size, i.e. exactly the
+edge-cut SDP minimises. The hash-partition baseline yields B_max ≈ all
+touched nodes; SDP collapses it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graph.csr import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloSpec:
+    perm: np.ndarray          # (n,) old → position inside its block
+    block_of: np.ndarray      # (n,) owning shard
+    block_size: int           # Nb (max padded block)
+    n_shards: int
+    publish_idx: np.ndarray   # (P, B_max) local rows each shard publishes (-1 pad)
+    halo_map: np.ndarray      # (P, H_max, 2) (src_shard, publish_slot) (-1 pad)
+    senders: np.ndarray       # (P, E_max) local src in [0, Nb+H_max) (-1 pad)
+    receivers: np.ndarray     # (P, E_max) local dst in [0, Nb) (-1 pad)
+
+    @property
+    def halo_size(self) -> int:
+        return int(self.halo_map.shape[1])
+
+    @property
+    def publish_size(self) -> int:
+        return int(self.publish_idx.shape[1])
+
+    def collective_bytes_per_layer(self, feat_dim: int,
+                                   bytes_per_el: int = 4) -> int:
+        """All-gather volume per message-passing layer, per device:
+        every shard receives (P-1) × B_max × F remote elements."""
+        return (self.n_shards - 1) * self.publish_size * feat_dim * bytes_per_el
+
+
+def build_halo_spec(g: Graph, assignment: np.ndarray, p: int) -> HaloSpec:
+    assignment = np.asarray(assignment)
+    n = g.n
+    # --- block relabelling -------------------------------------------------
+    counts = np.bincount(assignment, minlength=p)
+    nb = int(counts.max())
+    local_idx = np.zeros(n, dtype=np.int64)
+    cursor = np.zeros(p, dtype=np.int64)
+    order = np.argsort(assignment, kind="stable")
+    for v in order:
+        a = assignment[v]
+        local_idx[v] = cursor[a]
+        cursor[a] += 1
+
+    edges = g.edge_array()
+    u, v = edges[:, 0], edges[:, 1]
+    # both directions: aggregation dst-owned
+    src = np.concatenate([u, v])
+    dst = np.concatenate([v, u])
+    s_own, d_own = assignment[src], assignment[dst]
+
+    # --- publish sets: for each shard, which of its rows others need -------
+    publish: list[dict[int, int]] = [dict() for _ in range(p)]   # global -> slot
+    halo: list[dict[int, int]] = [dict() for _ in range(p)]      # global -> halo slot
+    for e in range(src.shape[0]):
+        if s_own[e] != d_own[e]:
+            owner, user = int(s_own[e]), int(d_own[e])
+            gsrc = int(src[e])
+            if gsrc not in publish[owner]:
+                publish[owner][gsrc] = len(publish[owner])
+            if gsrc not in halo[user]:
+                halo[user][gsrc] = len(halo[user])
+    b_max = max((len(d) for d in publish), default=0) or 1
+    h_max = max((len(d) for d in halo), default=0) or 1
+
+    publish_idx = -np.ones((p, b_max), dtype=np.int32)
+    for k in range(p):
+        for gv, slot in publish[k].items():
+            publish_idx[k, slot] = local_idx[gv]
+    halo_map = -np.ones((p, h_max, 2), dtype=np.int32)
+    for k in range(p):
+        for gv, slot in halo[k].items():
+            owner = int(assignment[gv])
+            halo_map[k, slot] = (owner, publish[owner][gv])
+
+    # --- per-shard local edge lists ----------------------------------------
+    per_shard: list[list[tuple[int, int]]] = [[] for _ in range(p)]
+    for e in range(src.shape[0]):
+        user = int(d_own[e])
+        d_loc = int(local_idx[dst[e]])
+        if s_own[e] == d_own[e]:
+            s_loc = int(local_idx[src[e]])
+        else:
+            s_loc = nb + halo[user][int(src[e])]
+        per_shard[user].append((s_loc, d_loc))
+    e_max = max((len(l) for l in per_shard), default=0) or 1
+    senders = -np.ones((p, e_max), dtype=np.int32)
+    receivers = -np.ones((p, e_max), dtype=np.int32)
+    for k in range(p):
+        for i, (s, d) in enumerate(per_shard[k]):
+            senders[k, i] = s
+            receivers[k, i] = d
+
+    return HaloSpec(
+        perm=local_idx.astype(np.int32),
+        block_of=assignment.astype(np.int32),
+        block_size=nb, n_shards=p,
+        publish_idx=publish_idx, halo_map=halo_map,
+        senders=senders, receivers=receivers,
+    )
+
+
+def scatter_nodes(spec: HaloSpec, x: np.ndarray, fill=0.0) -> np.ndarray:
+    """(n, F) global node array → (P, Nb, F) blocked layout."""
+    out = np.full((spec.n_shards, spec.block_size) + x.shape[1:], fill,
+                  dtype=x.dtype)
+    out[spec.block_of, spec.perm] = x
+    return out
+
+
+def gather_nodes(spec: HaloSpec, blocks: np.ndarray) -> np.ndarray:
+    """(P, Nb, F) blocked → (n, F) global order."""
+    return blocks[spec.block_of, spec.perm]

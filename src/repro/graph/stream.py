@@ -1,0 +1,225 @@
+"""Streaming event representation of a dynamic graph.
+
+The paper's stream (§4.1, Fig. 3) delivers one event at a time:
+  * add a vertex together with its associated edges,
+  * delete a vertex (and all its edges),
+  * delete an edge.
+
+The TPU-native engine consumes a *padded event tensor*: dense arrays of
+``(etype, vertex, nbrs[max_deg])`` with ``-1`` padding, so a one-pass
+``lax.scan`` (faithful mode) or windowed kernel (optimised mode) can process
+it without host round-trips. ``dynamic_schedule`` reproduces the paper's
+§5.3.1 protocol: per interval add 25% of the dataset then delete 5%.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.graph.csr import Graph
+
+EVENT_ADD = 0        # add vertex `vertex` with neighbour list `nbrs`
+EVENT_DEL_VERTEX = 1  # delete vertex `vertex` and all incident edges
+EVENT_DEL_EDGE = 2   # delete edge (vertex, nbrs[0])
+EVENT_PAD = 3        # no-op padding
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexStream:
+    """Padded event tensor for a dynamic-graph stream.
+
+    Attributes:
+      etype:  (T,) int32 event codes (EVENT_*).
+      vertex: (T,) int32 subject vertex (-1 for padding).
+      nbrs:   (T, max_deg) int32 neighbour ids, -1 padded. For EVENT_ADD
+              these are *all known* neighbours of the vertex in the underlying
+              graph (capped at max_deg by uniform subsample); the engine only
+              scores those already assigned, as in the paper.
+      n:      total number of distinct vertex ids (array sizes).
+      intervals: event indices at which the paper captures metrics
+              (ends of the add/delete intervals).
+      truncated_nbrs: count of neighbour entries dropped by the max_deg cap
+              (0 ⇒ the stream is exact).
+    """
+
+    etype: np.ndarray
+    vertex: np.ndarray
+    nbrs: np.ndarray
+    n: int
+    intervals: tuple[int, ...] = ()
+    truncated_nbrs: int = 0
+
+    @property
+    def num_events(self) -> int:
+        return int(self.etype.shape[0])
+
+    @property
+    def max_deg(self) -> int:
+        return int(self.nbrs.shape[1])
+
+
+def _neighbor_rows(
+    g: Graph, order: np.ndarray, max_deg: int, rng: np.random.Generator
+) -> tuple[np.ndarray, int]:
+    rows = -np.ones((order.shape[0], max_deg), dtype=np.int32)
+    truncated = 0
+    for i, v in enumerate(order):
+        nb = g.neighbors(int(v))
+        if nb.size > max_deg:
+            truncated += nb.size - max_deg
+            nb = rng.choice(nb, size=max_deg, replace=False)
+        rows[i, : nb.size] = nb
+    return rows, truncated
+
+
+def build_stream(
+    g: Graph,
+    *,
+    max_deg: Optional[int] = None,
+    seed: int = 0,
+    order: Optional[np.ndarray] = None,
+) -> VertexStream:
+    """Static (insert-only) stream: every vertex arrives once, random order.
+
+    The Graph Loader of the paper "receives input from the disk uniformly and
+    at random" — the default order is a uniform shuffle.
+    """
+    rng = np.random.default_rng(seed)
+    if order is None:
+        order = rng.permutation(g.n)
+    order = np.asarray(order, dtype=np.int32)
+    if max_deg is None:
+        max_deg = int(np.diff(g.indptr).max(initial=1))
+    nbrs, truncated = _neighbor_rows(g, order, max_deg, rng)
+    return VertexStream(
+        etype=np.full(order.shape[0], EVENT_ADD, dtype=np.int32),
+        vertex=order,
+        nbrs=nbrs,
+        n=g.n,
+        intervals=(order.shape[0],),
+        truncated_nbrs=truncated,
+    )
+
+
+def dynamic_schedule(
+    g: Graph,
+    *,
+    add_pct: float = 25.0,
+    del_pct: float = 5.0,
+    n_intervals: int = 4,
+    max_deg: Optional[int] = None,
+    seed: int = 0,
+    del_edges_per_interval: int = 0,
+) -> VertexStream:
+    """Paper §5.3.1 protocol: per interval, add `add_pct`% of the dataset's
+    vertices, then delete `del_pct`% of the *currently present* vertices
+    (Eqs. 11–12). Optionally also delete individual edges.
+    """
+    rng = np.random.default_rng(seed)
+    if max_deg is None:
+        max_deg = int(np.diff(g.indptr).max(initial=1))
+    order = rng.permutation(g.n).astype(np.int32)
+    n_add = int(round(g.n * add_pct / 100.0))
+    n_del = int(round(g.n * del_pct / 100.0))
+
+    etypes: list[np.ndarray] = []
+    vertices: list[np.ndarray] = []
+    nbr_rows: list[np.ndarray] = []
+    intervals: list[int] = []
+    truncated = 0
+
+    present: list[int] = []
+    cursor = 0
+    t = 0
+    for _ in range(n_intervals):
+        add = order[cursor : cursor + n_add]
+        cursor += add.shape[0]
+        if add.size:
+            rows, tr = _neighbor_rows(g, add, max_deg, rng)
+            truncated += tr
+            etypes.append(np.full(add.shape[0], EVENT_ADD, dtype=np.int32))
+            vertices.append(add)
+            nbr_rows.append(rows)
+            present.extend(int(v) for v in add)
+            t += add.shape[0]
+        k = min(n_del, len(present))
+        if k > 0:
+            pick = rng.choice(len(present), size=k, replace=False)
+            dels = np.array([present[i] for i in pick], dtype=np.int32)
+            keep = np.ones(len(present), dtype=bool)
+            keep[pick] = False
+            present = [p for p, kk in zip(present, keep) if kk]
+            etypes.append(np.full(k, EVENT_DEL_VERTEX, dtype=np.int32))
+            vertices.append(dels)
+            nbr_rows.append(-np.ones((k, max_deg), dtype=np.int32))
+            t += k
+        if del_edges_per_interval > 0 and present:
+            evs, eus = [], []
+            for _ in range(del_edges_per_interval):
+                v = int(rng.choice(present))
+                nb = g.neighbors(v)
+                if nb.size:
+                    evs.append(v)
+                    eus.append(int(rng.choice(nb)))
+            if evs:
+                k = len(evs)
+                etypes.append(np.full(k, EVENT_DEL_EDGE, dtype=np.int32))
+                vertices.append(np.asarray(evs, dtype=np.int32))
+                rows = -np.ones((k, max_deg), dtype=np.int32)
+                rows[:, 0] = eus
+                nbr_rows.append(rows)
+                t += k
+        intervals.append(t)
+        if cursor >= g.n:
+            break
+
+    return VertexStream(
+        etype=np.concatenate(etypes) if etypes else np.zeros(0, np.int32),
+        vertex=np.concatenate(vertices) if vertices else np.zeros(0, np.int32),
+        nbrs=np.concatenate(nbr_rows) if nbr_rows else np.zeros((0, max_deg), np.int32),
+        n=g.n,
+        intervals=tuple(intervals),
+        truncated_nbrs=truncated,
+    )
+
+
+def pad_stream(s: VertexStream, multiple: int) -> VertexStream:
+    """Pad the event tensor length to a multiple (for fixed-window engines)."""
+    t = s.num_events
+    target = ((t + multiple - 1) // multiple) * multiple
+    if target == t:
+        return s
+    pad = target - t
+    return VertexStream(
+        etype=np.concatenate([s.etype, np.full(pad, EVENT_PAD, np.int32)]),
+        vertex=np.concatenate([s.vertex, np.full(pad, -1, np.int32)]),
+        nbrs=np.concatenate([s.nbrs, -np.ones((pad, s.max_deg), np.int32)]),
+        n=s.n,
+        intervals=s.intervals,
+        truncated_nbrs=s.truncated_nbrs,
+    )
+
+
+def concat_streams(streams: Sequence[VertexStream]) -> VertexStream:
+    """Concatenate streams over the same vertex universe."""
+    max_deg = max(s.max_deg for s in streams)
+    nbrs = []
+    for s in streams:
+        pad = max_deg - s.max_deg
+        nbrs.append(
+            np.pad(s.nbrs, ((0, 0), (0, pad)), constant_values=-1) if pad else s.nbrs
+        )
+    offs, acc = [], 0
+    for s in streams:
+        offs.extend(i + acc for i in s.intervals)
+        acc += s.num_events
+    return VertexStream(
+        etype=np.concatenate([s.etype for s in streams]),
+        vertex=np.concatenate([s.vertex for s in streams]),
+        nbrs=np.concatenate(nbrs),
+        n=max(s.n for s in streams),
+        intervals=tuple(offs),
+        truncated_nbrs=sum(s.truncated_nbrs for s in streams),
+    )

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: EmbeddingBag (gather + bag-reduce).
+
+JAX has no native EmbeddingBag; the recsys tower needs
+``out[b] = reduce_l table[idx[b, l]]`` over huge tables. TPU adaptation:
+the bag indices are *scalar-prefetched* into SMEM, and the BlockSpec
+index_map performs the row gather — the pipeline itself streams exactly
+the needed (1, block_d) table tiles HBM→VMEM, no megagather materialised.
+Accumulation runs across the innermost (bag-slot) grid axis in the output
+VMEM tile. Padding idx = -1 contributes zero via a mask read from SMEM.
+
+Grid: (B, D/block_d, L) — L innermost for accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, table_ref, out_ref, *, n_slots: int, mean: bool):
+    b = pl.program_id(0)
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    valid = idx_ref[b, l] >= 0
+    row = table_ref[...]                        # (1, bd) gathered by index_map
+    out_ref[...] += jnp.where(valid, row.astype(jnp.float32), 0.0)
+
+    if mean:
+        @pl.when(l == n_slots - 1)
+        def _finalize():
+            cnt = jnp.zeros((), jnp.float32)
+            for j in range(n_slots):          # n_slots is static
+                cnt += (idx_ref[b, j] >= 0).astype(jnp.float32)
+            out_ref[...] /= jnp.maximum(cnt, 1.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "block_d", "interpret")
+)
+def embedding_bag(
+    table: jax.Array,     # (V, D) float
+    indices: jax.Array,   # (B, L) int32, -1 padded
+    *,
+    mode: str = "sum",    # 'sum' | 'mean'
+    block_d: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """(B, D) bag-reduced embeddings."""
+    v, d = table.shape
+    bsz, l = indices.shape
+    bd = min(block_d, d)
+    pad_d = (-d) % bd
+    if pad_d:
+        table = jnp.pad(table, ((0, 0), (0, pad_d)))
+    dp = table.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bsz, dp // bd, l),
+        in_specs=[
+            pl.BlockSpec(
+                (1, bd),
+                lambda b, jd, sl, idx_ref: (jnp.maximum(idx_ref[b, sl], 0), jd),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda b, jd, sl, idx_ref: (b, jd)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_bag_kernel, n_slots=l, mean=(mode == "mean")),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, dp), jnp.float32),
+        interpret=interpret,
+    )(indices.astype(jnp.int32), table)
+    return out[:, :d]

@@ -1,0 +1,38 @@
+"""Differentiable EmbeddingBag: kernel forward, segment-sum backward."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def bag_lookup(table, indices, mode="sum", use_kernel=False):
+    if use_kernel:
+        return embedding_bag(table, indices, mode=mode)
+    return embedding_bag_ref(table, indices, mode=mode)
+
+
+def _fwd(table, indices, mode, use_kernel):
+    return bag_lookup(table, indices, mode, use_kernel), (table.shape, indices)
+
+
+def _bwd(mode, use_kernel, res, g):
+    (v, d), indices = res
+    valid = indices >= 0
+    if mode == "mean":
+        cnt = jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+        g = g / cnt
+    gl = jnp.broadcast_to(g[:, None, :], indices.shape + (d,))
+    gl = jnp.where(valid[..., None], gl, 0.0)
+    safe = jnp.where(valid, indices, 0)
+    dtable = jnp.zeros((v, d), g.dtype).at[safe.reshape(-1)].add(
+        gl.reshape(-1, d))
+    return dtable, None
+
+
+bag_lookup.defvjp(_fwd, _bwd)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for embedding_bag: jnp.take + masked segment reduce."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, indices, *, mode: str = "sum"):
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, 0)
+    rows = jnp.take(table, safe, axis=0)                    # (B, L, D)
+    rows = jnp.where(valid[..., None], rows.astype(jnp.float32), 0.0)
+    out = rows.sum(axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+        out = out / cnt
+    return out

@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: tiled online-softmax attention (flash attention).
+
+Covers the attention variants of the assigned LM archs:
+  * causal LM training / prefill,
+  * sliding-window local attention (gemma2 alternating local/global,
+    llama4-scout chunked-local — window == chunk),
+  * logit soft-capping (gemma2),
+  * GQA (q-head → kv-head folding via BlockSpec index_map),
+  * decode with a long KV cache (q_offset = cache position).
+
+TPU adaptation: HBM→VMEM tiles of (block_q × d) and (block_k × d); the
+running max/denominator/accumulator live in VMEM scratch across the
+innermost (kv) grid axis; the two matmuls hit the MXU with d and block
+sizes kept multiples of 128 on real hardware (interpret=True here).
+
+Forward only: training uses the XLA-differentiable reference path
+(``ref.py``), serving and the dry-run use this kernel's semantics. A
+custom-vjp wrapper in ops.py recomputes through the reference for autodiff.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, window: int, softcap: float,
+    q_offset: int, block_q: int, block_k: int, num_k_blocks: int,
+    kv_len: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (bq, d)
+    k = k_ref[0]                                   # (bk, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                      # (bq, bk)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = q_offset + iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < kv_len          # kv padding (always)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)                # (bq, 1)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "q_offset", "block_q", "block_k",
+    "interpret"))
+def flash_attention(
+    q: jax.Array,   # (B, H, Sq, D)
+    k: jax.Array,   # (B, Hkv, Sk, D)
+    v: jax.Array,   # (B, Hkv, Sk, D)
+    *,
+    causal: bool = True,
+    window: int = 0,          # 0 = unbounded; >0 = sliding window size
+    softcap: float = 0.0,     # 0 = disabled
+    q_offset: int = 0,        # absolute position of q[0] (decode)
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0, "GQA requires H % Hkv == 0"
+    group = h // hkv
+    scale = d ** -0.5
+
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    pad_q = (-sq) % bq
+    pad_k = (-sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        # padded kv positions are masked out because (causal ∨ window) only
+        # *shrinks* coverage; for the pure-bidirectional case we pad with the
+        # causal mask disabled but rely on k_pos >= sk masking below.
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    sqp, skp = q.shape[2], k.shape[2]
+
+    qf = q.reshape(b * h, sqp, d)
+    kf = k.reshape(b * hkv, skp, d)
+    vf = v.reshape(b * hkv, skp, d)
+
+    def kv_index(bh, iq, ik):
+        return ((bh // h) * hkv + (bh % h) // group, ik, 0)
+
+    grid = (b * h, sqp // bq, skp // bk)
+    from jax.experimental.pallas import tpu as pltpu
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            softcap=softcap, q_offset=q_offset, block_q=bq, block_k=bk,
+            num_k_blocks=grid[2], kv_len=sk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sqp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denominator l
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sqp, d)[:, :, :sq, :]

@@ -1,0 +1,49 @@
+"""Differentiable wrapper: Pallas forward, reference-recompute backward.
+
+On TPU the backward pass would be a second Pallas kernel; on this CPU
+container the custom_vjp recomputes through the jnp reference, which is
+mathematically identical (tested to 1e-5).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def attention(q, k, v, causal=True, window=0, softcap=0.0, q_offset=0,
+              use_kernel=False):
+    if use_kernel:
+        return flash_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset,
+        )
+    return attention_ref(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        q_offset=q_offset,
+    )
+
+
+def _fwd(q, k, v, causal, window, softcap, q_offset, use_kernel):
+    out = attention(q, k, v, causal, window, softcap, q_offset, use_kernel)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, softcap, q_offset, use_kernel, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            q_offset=q_offset),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash_attention (also the differentiable train path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q, k, v, *, causal: bool = True, window: int = 0, softcap: float = 0.0,
+    q_offset: int = 0,
+):
+    """Dense attention with GQA / sliding window / softcap / position offset.
+
+    q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D). Returns (B, H, Sq, D).
+    """
+    b, h, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = h // hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * (d ** -0.5)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,21 @@
+"""Jit'd wrappers wiring the partition_affinity kernel into the engines."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.partition_affinity.partition_affinity import partition_affinity
+
+
+def gather_labels(assignment, present, rows):
+    """HBM gather half of the scoring op (stays outside the kernel)."""
+    valid = rows >= 0
+    safe = jnp.where(valid, rows, 0)
+    nb_present = valid & present[safe]
+    return jnp.where(nb_present, assignment[safe], -1).astype(jnp.int32)
+
+
+def scores_for_state(state, rows, *, interpret: bool = True):
+    """Drop-in for repro.core.windowed.committed_scores using the kernel."""
+    labels = gather_labels(state.assignment, state.present, rows)
+    k_max = state.edge_load.shape[0]
+    return partition_affinity(labels, k_max=k_max, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the partition_affinity kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def partition_affinity_ref(labels, *, k_max: int):
+    """scores[w,k] = #{d: labels[w,d]==k};  deg[w] = #{d: labels[w,d]>=0}."""
+    onehot = labels[..., None] == jnp.arange(k_max, dtype=jnp.int32)
+    scores = jnp.sum(onehot, axis=1, dtype=jnp.int32)
+    deg = jnp.sum(labels >= 0, axis=1, dtype=jnp.int32)
+    return scores, deg

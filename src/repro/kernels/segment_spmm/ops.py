@@ -1,0 +1,37 @@
+"""Differentiable ELL aggregation: kernel forward, gather-transpose backward."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_spmm.segment_spmm import segment_spmm
+from repro.kernels.segment_spmm.ref import segment_spmm_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def ell_aggregate(x, adj_ell, mode="sum", use_kernel=False):
+    if use_kernel:
+        return segment_spmm(x, adj_ell, mode=mode)
+    return segment_spmm_ref(x, adj_ell, mode=mode)
+
+
+def _fwd(x, adj_ell, mode, use_kernel):
+    return ell_aggregate(x, adj_ell, mode, use_kernel), (x.shape, adj_ell)
+
+
+def _bwd(mode, use_kernel, res, g):
+    (n, f), adj_ell = res
+    valid = adj_ell >= 0
+    if mode == "mean":
+        cnt = jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+        g = g / cnt
+    gl = jnp.broadcast_to(g[:, None, :], adj_ell.shape + (f,))
+    gl = jnp.where(valid[..., None], gl, 0.0)
+    safe = jnp.where(valid, adj_ell, 0)
+    dx = jnp.zeros((n, f), g.dtype).at[safe.reshape(-1)].add(gl.reshape(-1, f))
+    return dx, None
+
+
+ell_aggregate.defvjp(_fwd, _bwd)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for segment_spmm (take + masked reduce over ELL rows)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def segment_spmm_ref(x, adj_ell, *, mode: str = "sum"):
+    valid = adj_ell >= 0
+    safe = jnp.where(valid, adj_ell, 0)
+    rows = jnp.take(x, safe, axis=0)                      # (N, Dmax, F)
+    rows = jnp.where(valid[..., None], rows.astype(jnp.float32), 0.0)
+    out = rows.sum(axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum(valid.sum(axis=1, keepdims=True), 1)
+        out = out / cnt
+    return out

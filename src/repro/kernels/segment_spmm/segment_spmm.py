@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: ELL-padded sparse aggregation (GNN message passing).
+
+Computes ``out[v] = reduce_d x[adj[v, d]]`` over an ELL (row-padded)
+adjacency — the SpMM at the heart of GCN/PNA/MeshGraphNet aggregation.
+
+TPU adaptation: scatter-free. Instead of the GPU scatter-add over an edge
+list, rows are processed in blocks; the neighbour ids are scalar-prefetched
+and the BlockSpec index_map streams exactly the needed (1, block_f) feature
+tiles HBM→VMEM (same gather-by-index_map pattern as embedding_bag — on TPU
+the pipelined DMA is the analogue of the GPU's gather warp). The output
+row tile accumulates in VMEM across the innermost neighbour-slot axis.
+
+Grid: (N, F/block_f, Dmax) — Dmax innermost for accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(adj_ref, x_ref, out_ref, *, n_slots: int, mean: bool):
+    i = pl.program_id(0)
+    sl = pl.program_id(2)
+
+    @pl.when(sl == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    valid = adj_ref[i, sl] >= 0
+    out_ref[...] += jnp.where(valid, x_ref[...].astype(jnp.float32), 0.0)
+
+    if mean:
+        @pl.when(sl == n_slots - 1)
+        def _finalize():
+            cnt = jnp.zeros((), jnp.float32)
+            for j in range(n_slots):
+                cnt += (adj_ref[i, j] >= 0).astype(jnp.float32)
+            out_ref[...] /= jnp.maximum(cnt, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_f", "interpret"))
+def segment_spmm(
+    x: jax.Array,        # (N, F) float — node features
+    adj_ell: jax.Array,  # (N, Dmax) int32, -1 padded — neighbour ids
+    *,
+    mode: str = "sum",   # 'sum' | 'mean'
+    block_f: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """(N, F) aggregated neighbour features."""
+    n, f = x.shape
+    _, dmax = adj_ell.shape
+    bf = min(block_f, f)
+    pad_f = (-f) % bf
+    if pad_f:
+        x = jnp.pad(x, ((0, 0), (0, pad_f)))
+    fp = x.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, fp // bf, dmax),
+        in_specs=[
+            pl.BlockSpec(
+                (1, bf),
+                lambda i, jf, sl, adj_ref: (jnp.maximum(adj_ref[i, sl], 0), jf),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, bf), lambda i, jf, sl, adj_ref: (i, jf)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_spmm_kernel, n_slots=dmax, mean=(mode == "mean")),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, fp), jnp.float32),
+        interpret=interpret,
+    )(adj_ell.astype(jnp.int32), x)
+    return out[:, :f]

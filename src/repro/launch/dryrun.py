@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes, prove memory fits, and extract the roofline terms.
+
+MUST be run as its own process (the two lines above lock the device count
+before jax initialises):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Per cell it records to artifacts/dryrun/<arch>__<shape>__<mesh>.json:
+  * memory_analysis()   — per-device argument/temp/output bytes (fits HBM?)
+  * cost_analysis()     — per-device HLO FLOPs + bytes accessed
+  * collective bytes    — parsed from compiled.as_text(): per-op-type wire
+                          bytes per device (ring-model) for all-gather /
+                          all-reduce / reduce-scatter / all-to-all /
+                          collective-permute
+  * roofline terms      — seconds, vs 197 TFLOP/s bf16, 819 GB/s HBM,
+                          50 GB/s/link ICI (TPU v5e-class constants)
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+# hardware constants (v5e-class chip; assignment-specified)
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (per chip, ring model)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shapes>.*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return n_devices
+
+
+def parse_collectives(hlo: str, n_devices: int) -> dict:
+    """Per-device wire bytes by op type (ring model), from optimized HLO."""
+    out: dict[str, dict] = {}
+    total = 0.0
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("shapes"))
+        g = max(_group_size(line, n_devices), 1)
+        if op == "all-gather":
+            wire = nbytes * (g - 1) / g
+        elif op == "all-reduce":
+            wire = 2.0 * nbytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            wire = nbytes * (g - 1)          # result shape is the shard
+        elif op == "all-to-all":
+            wire = nbytes * (g - 1) / g
+        else:                                 # collective-permute
+            wire = float(nbytes)
+        rec = out.setdefault(op, {"count": 0, "bytes": 0.0, "wire": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+        rec["wire"] += wire
+        total += wire
+    return {"per_op": out, "wire_bytes_per_device": total}
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             scan_hlo: bool = True, scheme: str = "baseline") -> dict:
+    import jax
+    from repro.configs import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_step
+
+    arch = get_arch(arch_id)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "scheme": scheme, "status": "ok"}
+    if shape_name in arch.skip_shapes:
+        rec["status"] = "skip"
+        rec["reason"] = arch.skip_shapes[shape_name]
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_devices = mesh.devices.size
+    bundle = build_step(arch_id, shape_name, mesh, scheme)
+    with mesh:
+        jitted = jax.jit(
+            bundle.fn,
+            in_shardings=bundle.in_shardings,
+            out_shardings=bundle.out_shardings,
+            donate_argnums=bundle.donate,
+        )
+        lowered = jitted.lower(*bundle.specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    rec["lower_s"] = round(t_lower, 2)
+    rec["compile_s"] = round(t_compile, 2)
+    rec["memory"] = {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "code_bytes": int(mem.generated_code_size_in_bytes),
+    }
+    live = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    rec["memory"]["live_bytes_per_device"] = int(live)
+    # raw XLA numbers (loop bodies counted ONCE — reference only)
+    rec["xla_cost"] = {
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+    }
+    # loop-aware HLO analysis (trip-count-correct; the roofline source)
+    from repro.launch.hlo_stats import analyze
+    st = analyze(compiled.as_text(), n_devices)
+    rec["cost"] = {
+        "flops_per_device": st["flops_per_device"],
+        "bytes_per_device": st["hbm_bytes_per_device"],
+    }
+    colls = st["collectives"]
+    rec["collectives"] = colls
+
+    flops_dev = rec["cost"]["flops_per_device"]
+    bytes_dev = rec["cost"]["bytes_per_device"]
+    wire_dev = colls["wire_bytes_per_device"]
+    t_c = flops_dev / PEAK_FLOPS
+    t_m = bytes_dev / HBM_BW
+    t_n = wire_dev / ICI_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))[1]
+    model_flops = float(bundle.meta.get("model_flops", 0.0))
+    rec["roofline"] = {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "dominant": dom,
+        "model_flops": model_flops,
+        "hlo_flops_global": flops_dev * n_devices,
+        "useful_flops_ratio": (model_flops / (flops_dev * n_devices)
+                               if flops_dev else 0.0),
+        "n_devices": n_devices,
+        "step_time_bound_s": max(t_c, t_m, t_n),
+    }
+    rec["meta"] = {k: (float(v) if isinstance(v, (int, float)) else v)
+                   for k, v in bundle.meta.items()}
+    return rec
+
+
+def _out_path(out_dir: str, arch: str, shape: str, mesh: str,
+              scheme: str = "baseline") -> str:
+    safe = arch.replace("/", "_")
+    suffix = "" if scheme == "baseline" else f"__{scheme}"
+    return os.path.join(out_dir, f"{safe}__{shape}__{mesh}{suffix}.json")
+
+
+def main() -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", type=str, default=None)
+    p.add_argument("--shape", type=str, default=None)
+    p.add_argument("--mesh", choices=("single", "multi", "both"),
+                   default="single")
+    p.add_argument("--all", action="store_true",
+                   help="run every (arch × shape) cell in subprocesses")
+    p.add_argument("--out", type=str, default="artifacts/dryrun")
+    p.add_argument("--jobs", type=int, default=2,
+                   help="parallel subprocesses for --all")
+    p.add_argument("--force", action="store_true",
+                   help="re-run cells that already have artifacts")
+    p.add_argument("--no-hlo-scan", action="store_true")
+    p.add_argument("--scheme", type=str, default="baseline",
+                   help="sharding scheme: baseline | opt | halo (§Perf)")
+    args = p.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    if args.all:
+        from repro.configs import ARCHS
+        cells = []
+        for arch_id, arch in ARCHS.items():
+            for shape in arch.shapes:
+                for mp in meshes:
+                    mesh_name = "multi" if mp else "single"
+                    path = _out_path(args.out, arch_id, shape, mesh_name)
+                    if not args.force and os.path.exists(path):
+                        with open(path) as f:
+                            prior = json.load(f)
+                        if prior.get("status") in ("ok", "skip"):
+                            continue   # re-run only errored cells
+                    cells.append((arch_id, shape, mesh_name))
+        print(f"dry-run: {len(cells)} cells to compile", flush=True)
+        procs: list[tuple[tuple, subprocess.Popen]] = []
+        failures = 0
+        while cells or procs:
+            while cells and len(procs) < args.jobs:
+                cell = cells.pop(0)
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", cell[0], "--shape", cell[1],
+                       "--mesh", "multi" if cell[2] == "multi" else "single",
+                       "--out", args.out]
+                if args.no_hlo_scan:
+                    cmd.append("--no-hlo-scan")
+                procs.append((cell, subprocess.Popen(cmd)))
+                print(f"  launch {cell}", flush=True)
+            done = [(c, pr) for c, pr in procs if pr.poll() is not None]
+            procs = [(c, pr) for c, pr in procs if pr.poll() is None]
+            for cell, pr in done:
+                st = "ok" if pr.returncode == 0 else f"RC={pr.returncode}"
+                failures += pr.returncode != 0
+                print(f"  done   {cell}: {st}", flush=True)
+            if procs:
+                time.sleep(2.0)
+        print(f"dry-run complete; {failures} failures", flush=True)
+        return 1 if failures else 0
+
+    assert args.arch and args.shape, "--arch and --shape (or --all) required"
+    for mp in meshes:
+        mesh_name = "multi" if mp else "single"
+        try:
+            rec = run_cell(args.arch, args.shape, mp,
+                           scan_hlo=not args.no_hlo_scan,
+                           scheme=args.scheme)
+        except Exception:
+            rec = {"arch": args.arch, "shape": args.shape,
+                   "mesh": mesh_name, "scheme": args.scheme,
+                   "status": "error", "traceback": traceback.format_exc()}
+        path = _out_path(args.out, args.arch, args.shape, mesh_name,
+                         args.scheme)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"{args.arch}:{args.shape}:{mesh_name} OK "
+                  f"compile={rec['compile_s']:.0f}s "
+                  f"mem={rec['memory']['live_bytes_per_device']/2**30:.2f}GiB "
+                  f"compute={r['compute_s']*1e3:.2f}ms "
+                  f"memory={r['memory_s']*1e3:.2f}ms "
+                  f"collective={r['collective_s']*1e3:.2f}ms "
+                  f"dom={r['dominant']}", flush=True)
+        elif rec["status"] == "skip":
+            print(f"{args.arch}:{args.shape}:{mesh_name} SKIP "
+                  f"({rec['reason'][:60]}…)", flush=True)
+        else:
+            print(f"{args.arch}:{args.shape}:{mesh_name} ERROR", flush=True)
+            print(rec["traceback"], flush=True)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

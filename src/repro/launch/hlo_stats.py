@@ -1,0 +1,296 @@
+"""Loop-aware HLO cost extraction for the roofline analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+undercounts a scan-over-layers model by ~n_layers×. This module parses the
+optimized HLO text instead:
+
+  * builds the computation call graph (fusions, calls, while bodies) with
+    multipliers from each while's ``known_trip_count`` backend config;
+  * FLOPs  — every ``dot`` (2 × result_elems × contraction_size), scaled by
+    the product of enclosing trip counts;
+  * HBM traffic — per *sequential* instruction: result bytes + operand
+    bytes (fusion internals excluded: a fusion is one read per operand and
+    one write per result, the TPU/CPU memory model);
+  * collective wire bytes — ring-model per-device bytes for all-gather /
+    all-reduce / reduce-scatter / all-to-all / collective-permute, scaled
+    by trip counts.
+
+Validated against cost_analysis() on loop-free modules (tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP = re.compile(r"^\s*(?:\(.*?\)|\S+)\s+([\w\-]+)\(")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLED = re.compile(
+    r"(?:calls=|to_apply=|body=|condition=|branch_computations=\{|"
+    r"called_computations=\{)%?([\w\.\-]+(?:,\s*%[\w\.\-]+)*)")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "bitcast", "constant",
+    "after-all", "while", "conditional", "call", "custom-call", "fusion2",
+}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "all-gather-start", "all-reduce-start",
+               "collective-permute-start")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """Total (elems, bytes) over all array shapes in a type string."""
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    type_str: str       # result type portion
+    rest: str           # full rhs text
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    shapes: dict        # instr name -> result type string
+
+
+def _split_type_op(rhs: str) -> tuple[str, str]:
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    rest = rhs[i + 1:].lstrip()
+                    om = re.match(r"([\w\-]+)\(", rest)
+                    return rhs[:i + 1], (om.group(1) if om else "unknown")
+        return rhs, "unknown"
+    parts = rhs.split(None, 1)
+    if len(parts) > 1:
+        om = re.match(r"([\w\-]+)\(", parts[1])
+        if om:
+            return parts[0], om.group(1)
+    return parts[0], "unknown"
+
+
+def parse_computations(hlo: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = ""
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if (not line.startswith(" ") and line.endswith("{")
+                and "->" in line and not line.startswith("HloModule")):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(2), [], {})
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # rhs looks like: TYPE op(...), attrs...  — TYPE may be a tuple
+        # containing parens and /*index=N*/ comments, so scan for balance.
+        type_str, op = _split_type_op(rhs)
+        # parameters: "%p = f32[...] parameter(0)"
+        cur.instrs.append(Instr(name, op, type_str, rhs, line))
+        cur.shapes[name] = type_str
+    return comps, entry
+
+
+def _dot_flops(instr: Instr, shapes: dict) -> float:
+    res_elems, _ = _shape_elems_bytes(instr.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    if not m:
+        return 2.0 * res_elems  # degenerate
+    cdims = [int(x) for x in m.group(1).split(",") if x]
+    ops = _OPERANDS.findall(instr.rest.split("(", 1)[1])
+    if not ops:
+        return 0.0
+    lhs = shapes.get(ops[0])
+    if lhs is None:
+        return 2.0 * res_elems
+    sm = _SHAPE.search(lhs)
+    if sm is None:
+        return 2.0 * res_elems
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    csize = 1
+    for c in cdims:
+        if c < len(dims):
+            csize *= dims[c]
+    return 2.0 * res_elems * csize
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return n_devices
+
+
+def _collective_wire(instr: Instr, n_devices: int) -> tuple[str, float, float]:
+    op = instr.op.replace("-start", "")
+    _, nbytes = _shape_elems_bytes(instr.type_str)
+    g = max(_group_size(instr.line, n_devices), 1)
+    if op == "all-gather":
+        wire = nbytes * (g - 1) / g
+    elif op == "all-reduce":
+        wire = 2.0 * nbytes * (g - 1) / g
+    elif op == "reduce-scatter":
+        wire = nbytes * (g - 1)
+    elif op == "all-to-all":
+        wire = nbytes * (g - 1) / g
+    else:  # collective-permute
+        wire = float(nbytes)
+    return op, float(nbytes), wire
+
+
+def _instr_bytes(instr: Instr, shapes: dict) -> float:
+    """HBM traffic proxy: result bytes + operand bytes."""
+    if instr.op in _SKIP_BYTES_OPS or instr.op.endswith("-done"):
+        return 0.0
+    _, wbytes = _shape_elems_bytes(instr.type_str)
+    rbytes = 0
+    arg_str = instr.rest.split("(", 1)[1] if "(" in instr.rest else ""
+    # strip attribute tail (operands come before the first "),")
+    arg_str = arg_str.split(")", 1)[0]
+    for op_name in _OPERANDS.findall(arg_str):
+        t = shapes.get(op_name)
+        if t is not None:
+            rbytes += _shape_elems_bytes(t)[1]
+    return float(wbytes + rbytes)
+
+
+def analyze(hlo: str, n_devices: int) -> dict:
+    comps, entry_name = parse_computations(hlo)
+
+    # ---- call graph with trip multipliers --------------------------------
+    edges: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    fusion_comps: set[str] = set()
+    for cname, comp in comps.items():
+        for ins in comp.instrs:
+            trip = 1.0
+            if ins.op == "while":
+                tm = _TRIP.search(ins.line)
+                trip = float(tm.group(1)) if tm else 1.0
+            for m in _CALLED.finditer(ins.line):
+                for callee in re.split(r",\s*", m.group(1)):
+                    callee = callee.lstrip("%")
+                    if callee in comps:
+                        mult = trip if ins.op == "while" else 1.0
+                        edges[cname].append((callee, mult))
+                        if ins.op == "fusion":
+                            fusion_comps.add(callee)
+
+    # ---- propagate multipliers from ENTRY --------------------------------
+    entry = entry_name if entry_name in comps else None
+    if entry is None:  # fallback: computation that nobody calls
+        called = {c for outs in edges.values() for c, _ in outs}
+        roots = [c for c in comps if c not in called]
+        entry = roots[-1] if roots else next(iter(comps))
+
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        c = order[i]
+        i += 1
+        for callee, m in edges[c]:
+            nm = mult[c] * m
+            if nm > mult[callee] + 1e-9:
+                mult[callee] = nm
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+                elif callee in order[i:]:
+                    pass
+                else:
+                    order.append(callee)
+    # (monotone relaxation; call graphs are DAGs so this converges)
+
+    # ---- accumulate -------------------------------------------------------
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll: dict[str, dict] = {}
+    wire_total = 0.0
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0.0:
+            continue
+        in_fusion = cname in fusion_comps
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                flops += m * _dot_flops(ins, comp.shapes)
+            elif ins.op in ("convolution",):
+                res_elems, _ = _shape_elems_bytes(ins.type_str)
+                flops += m * 2.0 * res_elems  # lower bound; no convs used
+            if ins.op.replace("-start", "") in (
+                    "all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute") \
+                    and not ins.op.endswith("-done"):
+                op, nbytes, wire = _collective_wire(ins, n_devices)
+                rec = coll.setdefault(op, {"count": 0.0, "bytes": 0.0,
+                                           "wire": 0.0})
+                rec["count"] += m
+                rec["bytes"] += m * nbytes
+                rec["wire"] += m * wire
+                wire_total += m * wire
+            if not in_fusion:
+                hbm_bytes += m * _instr_bytes(ins, comp.shapes)
+    return {
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm_bytes,
+        "collectives": {"per_op": coll,
+                        "wire_bytes_per_device": wire_total},
+        "n_computations": len(comps),
+    }
+
+
+if __name__ == "__main__":
+    import sys
+    with open(sys.argv[1]) as f:
+        print(json.dumps(analyze(f.read(), int(sys.argv[2])), indent=2))

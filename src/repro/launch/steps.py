@@ -1,0 +1,614 @@
+"""Step builders: one jit-able step per (arch × shape), with shardings.
+
+This is the layer the dry-run, the trainer and the server all share. For
+every assigned cell it produces a ``StepBundle``:
+
+  * ``fn``            — the pure step function (train / prefill / decode /
+                        serve), ready for jax.jit;
+  * ``specs``         — ShapeDtypeStruct stand-ins for every argument
+                        (weak-type-correct, shardable, no allocation);
+  * ``in_shardings`` / ``out_shardings`` — NamedShardings matching specs;
+  * ``donate``        — argument indices donated (params/opt/caches);
+  * ``meta``          — MODEL_FLOPS + family info for the roofline.
+
+Sharding scheme (DESIGN.md §6): FSDP on data(×pod) + TP on model for LMs
+(EP for MoE experts), graph parallelism over the flattened mesh for GNNs,
+row-sharded embedding tables for recsys.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.base import ArchDef
+from repro.configs.shapes import GNNShape, LMShape, RecSysShape
+from repro.graph.sampler import subgraph_sizes
+from repro.models import recsys as RS
+from repro.models import transformer as T
+from repro.models.gnn import (meshgraphnet as MGN, nequip as NQ, pna as PNA,
+                              schnet as SCH)
+from repro.optim.optimizers import adamw, apply_updates
+from repro.runtime import sharding as SHR
+
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    kind: str                      # 'train' | 'prefill' | 'decode' | 'serve'
+    fn: Callable
+    specs: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple
+    meta: dict
+
+
+def _rep(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def _sh(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def _all_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def _n_dp(mesh: Mesh) -> int:
+    n = 1
+    for a in SHR.batch_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def round_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# optimizer plumbing shared by the train steps
+# ---------------------------------------------------------------------------
+
+def make_opt():
+    return adamw(1e-4, weight_decay=0.1, clip_norm=1.0)
+
+
+def _opt_shardings(param_sh, mesh: Mesh):
+    return {"mu": param_sh, "nu": param_sh,
+            "count": _rep(mesh), "gnorm": _rep(mesh)}
+
+
+def _train_step_fn(loss_fn, cfg, micro: int = 1):
+    """micro > 1 ⇒ gradient accumulation over microbatches (halves live
+    activation temps per pass at the cost of re-gathering weights —
+    §Perf iteration 6). Grads accumulate in f32."""
+    opt = make_opt()
+
+    def step(params, opt_state, batch):
+        if micro > 1:
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape(micro, x.shape[0] // micro,
+                                    *x.shape[1:]), batch)
+
+            def one(carry, mb):
+                gsum, lsum = carry
+                (loss, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb, cfg)
+                gsum = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                one, (zeros, jnp.zeros((), jnp.float32)), mb_batch)
+            grads = jax.tree.map(lambda g: g / micro, gsum)
+            loss = lsum / micro
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, cfg)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss, gnorm=opt_state["gnorm"])
+        return params, opt_state, metrics
+
+    return step, opt
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_flops_fwd(cfg: T.LMConfig, tokens: int, kv_len: int | None = None):
+    """2·N_active·tokens + attention score/AV flops."""
+    n = cfg.active_param_count()
+    kv = kv_len if kv_len is not None else 0
+    attn = 0.0
+    for w in cfg.windows:
+        span = kv if kv else 0
+        if w > 0 and span:
+            span = min(span, int(w))
+        # train/prefill: causal ≈ S/2 per query; decode: full span
+        attn += 4.0 * cfg.n_heads * cfg.head_dim * tokens * (span or 0)
+    return 2.0 * n * tokens + attn
+
+
+def _lm_cfg_for_mesh(arch: ArchDef, mesh: Mesh) -> T.LMConfig:
+    cfg = arch.config
+    if cfg.moe is not None and cfg.moe.dispatch_groups == 1:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=_n_dp(mesh)))
+    return cfg
+
+
+def _lm_param_specs(cfg: T.LMConfig):
+    return jax.eval_shape(
+        functools.partial(T.init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def _lm_shardings(params_like, mesh: Mesh):
+    return SHR.shardings_from_rules(params_like, SHR.lm_param_rules(mesh),
+                                    mesh)
+
+
+def _lm_cache_sharding(mesh: Mesh, batch: int, n_kv_heads: int = 0):
+    da = SHR.batch_axes(mesh)
+    if batch % _n_dp(mesh) == 0 and batch >= _n_dp(mesh):
+        if n_kv_heads and n_kv_heads % mesh.shape["model"] == 0:
+            # KV heads divide the TP axis (phi3 MHA=32, moonshot 16):
+            # shard heads instead of sequence — the per-layer cache slice
+            # temps shrink by TP× (§Perf 4.4)
+            return _sh(mesh, None, da, None, "model", None)
+        return _sh(mesh, None, da, "model", None, None)
+    # tiny batch (long-context): shard the sequence over every axis
+    return _sh(mesh, None, None, da + ("model",), None, None)
+
+
+def build_lm(arch: ArchDef, shape: LMShape, mesh: Mesh,
+             scheme: str = "baseline") -> StepBundle:
+    cfg = _lm_cfg_for_mesh(arch, mesh)
+    da = SHR.batch_axes(mesh)
+    tp = mesh.shape["model"]
+    if scheme == "opt" and shape.kind == "train":
+        # Beyond-paper scheme (EXPERIMENTS.md §Perf): sequence parallelism —
+        # the residual stream is sharded (batch over data(,pod), seq over
+        # model) at every layer boundary, so activations are never
+        # replicated over the TP axis; XLA then gathers *weights* (ZeRO-3
+        # pattern) instead of all-reducing activations. MoE dispatch groups
+        # match the total activation shards.
+        cfg = dataclasses.replace(
+            cfg, act_pspec=(tuple(da), "model", None),
+            kv_pspec=(tuple(da), None, None, None),
+            # q-chunking would cut across the S/TP shard boundary → off;
+            # score memory is bounded by online-softmax KV chunking instead
+            attn_chunk=max(cfg.attn_chunk, shape.seq_len),
+            kv_chunk=512,
+            moe=None if cfg.moe is None else dataclasses.replace(
+                cfg.moe, dispatch_groups=_n_dp(mesh) * tp,
+                buf_pspec=(tuple(da), "model", None, None)))
+    params_like = _lm_param_specs(cfg)
+    if scheme == "opt" and shape.kind == "train":
+        param_sh = SHR.shardings_from_rules(
+            params_like, SHR.lm_param_rules_zero(mesh), mesh)
+    else:
+        param_sh = _lm_shardings(params_like, mesh)
+    b, s = shape.global_batch, shape.seq_len
+    bspec = _sh(mesh, da) if b % _n_dp(mesh) == 0 else _rep(mesh)
+
+    if shape.kind == "train":
+        if scheme == "opt" and s % tp == 0:
+            bspec = _sh(mesh, da, "model")
+        step, opt = _train_step_fn(T.loss_fn, cfg,
+                                   micro=2 if scheme == "opt" else 1)
+        opt_like = jax.eval_shape(opt.init, params_like)
+        opt_sh = _opt_shardings(param_sh, mesh)
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        batch_sh = {"tokens": bspec, "labels": bspec}
+        flops = 3.0 * _lm_flops_fwd(cfg, b * s, kv_len=s // 2)
+        return StepBundle(
+            name=f"{arch.arch_id}:{shape.name}", kind="train",
+            fn=step, specs=(params_like, opt_like, batch),
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, _rep(mesh)),
+            donate=(0, 1),
+            meta={"family": "lm", "model_flops": flops,
+                  "params": cfg.param_count(),
+                  "active_params": cfg.active_param_count(),
+                  "tokens": b * s},
+        )
+
+    if shape.kind == "prefill":
+        def step(params, tokens):
+            return T.prefill_step(params, tokens, cfg)
+        cache_sh = _lm_cache_sharding(mesh, b)
+        tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        logits_sh = (_sh(mesh, da, "model") if b % _n_dp(mesh) == 0
+                     else _sh(mesh, None, "model"))
+        flops = _lm_flops_fwd(cfg, b * s, kv_len=s // 2)
+        return StepBundle(
+            name=f"{arch.arch_id}:{shape.name}", kind="prefill",
+            fn=step, specs=(params_like, tokens),
+            in_shardings=(param_sh, bspec),
+            out_shardings=(logits_sh, cache_sh, cache_sh),
+            donate=(),
+            meta={"family": "lm", "model_flops": flops,
+                  "params": cfg.param_count(),
+                  "active_params": cfg.active_param_count(),
+                  "tokens": b * s},
+        )
+
+    # decode (decode_32k / long_500k): one new token, S_max-slot cache
+    def step(params, token, cache_k, cache_v, cache_len):
+        return T.decode_step_inplace(params, token, cache_k, cache_v,
+                                     cache_len, cfg)
+
+    cache_sh = _lm_cache_sharding(mesh, b, cfg.n_kv_heads)
+    cache = jax.ShapeDtypeStruct(
+        (cfg.n_layers, b, s, cfg.n_kv_heads, cfg.head_dim), cfg.jdtype)
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    clen = jax.ShapeDtypeStruct((), jnp.int32)
+    logits_sh = (_sh(mesh, da, "model") if b % _n_dp(mesh) == 0
+                 else _sh(mesh, None, "model"))
+    flops = _lm_flops_fwd(cfg, b, kv_len=s)
+    return StepBundle(
+        name=f"{arch.arch_id}:{shape.name}", kind="decode",
+        fn=step, specs=(params_like, token, cache, cache, clen),
+        in_shardings=(param_sh, bspec if b > 1 else _rep(mesh),
+                      cache_sh, cache_sh, _rep(mesh)),
+        out_shardings=(logits_sh, cache_sh, cache_sh),
+        donate=(2, 3),
+        meta={"family": "lm", "model_flops": flops,
+              "params": cfg.param_count(),
+              "active_params": cfg.active_param_count(),
+              "tokens": b},
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+_GNN_MODELS = {
+    "meshgraphnet": MGN,
+    "schnet": SCH,
+    "nequip": NQ,
+    "pna": PNA,
+}
+
+
+def _gnn_init_like(arch: ArchDef, d_feat: int):
+    mod = _GNN_MODELS[arch.arch_id]
+    cfg = arch.config
+    key = jax.random.PRNGKey(0)
+    if arch.arch_id in ("meshgraphnet", "pna"):
+        return mod, cfg, jax.eval_shape(
+            functools.partial(mod.init_params, cfg=cfg, d_node=d_feat), key)
+    return mod, cfg, jax.eval_shape(
+        functools.partial(mod.init_params, cfg=cfg), key)
+
+
+def _gnn_batch_specs(arch: ArchDef, n: int, e: int, d_feat: int,
+                     mol_batch: int = 0) -> dict:
+    f32, i32 = jnp.float32, jnp.int32
+    specs = {
+        "senders": jax.ShapeDtypeStruct((e,), i32),
+        "receivers": jax.ShapeDtypeStruct((e,), i32),
+        "node_mask": jax.ShapeDtypeStruct((n,), jnp.bool_),
+    }
+    needs_feat = arch.arch_id in ("meshgraphnet", "pna")
+    if needs_feat:
+        specs["node_feat"] = jax.ShapeDtypeStruct((n, d_feat), f32)
+    if "pos" in arch.gnn_inputs or arch.arch_id in ("schnet", "nequip"):
+        specs["positions"] = jax.ShapeDtypeStruct((n, 3), f32)
+    if arch.arch_id in ("schnet", "nequip"):
+        specs["species"] = jax.ShapeDtypeStruct((n,), i32)
+    if mol_batch:
+        specs["graph_id"] = jax.ShapeDtypeStruct((n,), i32)
+        specs["targets"] = jax.ShapeDtypeStruct((mol_batch, 1), f32)
+    else:
+        specs["targets"] = jax.ShapeDtypeStruct((n, 1), f32)
+    return specs
+
+
+def _gnn_flops_fwd(arch: ArchDef, n: int, e: int, d_feat: int) -> float:
+    cfg = arch.config
+    if arch.arch_id == "meshgraphnet":
+        h = cfg.d_hidden
+        per = e * (3 * h * h + h * h) + n * (2 * h * h + h * h)
+        enc = n * d_feat * h + e * 4 * h + n * h * cfg.out_dim
+        return 2.0 * (cfg.n_layers * per + enc)
+    if arch.arch_id == "pna":
+        h = cfg.d_hidden
+        n_agg = len(cfg.aggregators) * len(cfg.scalers)
+        per = e * (2 * h * h) + n * ((n_agg + 1) * h * h)
+        return 2.0 * (cfg.n_layers * per + n * d_feat * h)
+    if arch.arch_id == "schnet":
+        h, r = cfg.d_hidden, cfg.n_rbf
+        per = e * (r * h + h * h + h) + n * (2 * h * h)
+        return 2.0 * (cfg.n_interactions * per + n * h * h)
+    if arch.arch_id == "nequip":
+        c = cfg.channels
+        # paths for l_max=2: (l1,l2,l3) with |l1-l2|<=l3<=min(l1+l2,lmax)
+        import repro.models.gnn.so3 as so3
+        paths = so3.paths(cfg.l_max)
+        tp = sum((2 * l1 + 1) * (2 * l2 + 1) * (2 * l3 + 1)
+                 for (l1, l2, l3) in paths)
+        per = e * (cfg.n_rbf * 32 + 32 * len(paths) * c + c * tp) \
+            + n * (len(paths) * c * c * 9)
+        return 2.0 * cfg.n_layers * per
+    raise ValueError(arch.arch_id)
+
+
+def build_gnn(arch: ArchDef, shape: GNNShape, mesh: Mesh,
+              scheme: str = "baseline") -> StepBundle:
+    if scheme == "halo":
+        return build_gnn_halo(arch, shape, mesh)
+    ax = _all_axes(mesh)
+    n_dev = 1
+    for a in ax:
+        n_dev *= mesh.shape[a]
+
+    if shape.kind == "molecule":
+        n_mol = shape.mol_batch
+        n = n_mol * shape.n_nodes
+        e = round_to(2 * shape.n_edges * n_mol, n_dev)
+        n = round_to(n, n_dev)
+        d_feat = 16
+        mol = n_mol
+    elif shape.kind == "minibatch":
+        n_sub, e_sub = subgraph_sizes(shape.batch_nodes, shape.fanout)
+        n = round_to(n_sub, n_dev)
+        e = round_to(e_sub, n_dev)
+        d_feat = shape.d_feat
+        mol = 0
+    else:
+        n = round_to(shape.n_nodes, n_dev)
+        e = round_to(2 * shape.n_edges, n_dev)
+        d_feat = shape.d_feat
+        mol = 0
+
+    mod, cfg, params_like = _gnn_init_like(arch, d_feat)
+    param_sh = jax.tree.map(lambda _: _rep(mesh), params_like)
+    step, opt = _train_step_fn(mod.loss_fn, cfg)
+    opt_like = jax.eval_shape(opt.init, params_like)
+    opt_sh = _opt_shardings(param_sh, mesh)
+
+    batch = _gnn_batch_specs(arch, n, e, d_feat, mol)
+    node_sh = _sh(mesh, ax)
+    nodef_sh = _sh(mesh, ax, None)
+    batch_sh = {}
+    for k_, v in batch.items():
+        if k_ in ("senders", "receivers"):
+            batch_sh[k_] = _sh(mesh, ax)
+        elif k_ == "graph_id":
+            batch_sh[k_] = node_sh
+        elif k_ == "targets" and mol:
+            batch_sh[k_] = _sh(mesh, ax, None) if mol % n_dev == 0 \
+                else _rep(mesh)
+        elif v.ndim == 1:
+            batch_sh[k_] = node_sh
+        else:
+            batch_sh[k_] = nodef_sh
+
+    flops = 3.0 * _gnn_flops_fwd(arch, n, e, d_feat)
+    return StepBundle(
+        name=f"{arch.arch_id}:{shape.name}", kind="train",
+        fn=step, specs=(params_like, opt_like, batch),
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, _rep(mesh)),
+        donate=(0, 1),
+        meta={"family": "gnn", "model_flops": flops,
+              "n_nodes": n, "n_edges": e},
+    )
+
+
+def build_gnn_halo(arch: ArchDef, shape: GNNShape, mesh: Mesh) -> StepBundle:
+    """§Perf 'halo' scheme: SDP-blocked layout + boundary-only exchange.
+
+    B_max (published boundary rows per shard) is sized from the measured
+    SDP boundary fraction on a scaled proxy graph (artifacts/halo_frac.json,
+    produced by benchmarks/measure_halo.py); the hash-partition baseline
+    corresponds to halo_frac ≈ 1.
+    """
+    import json
+    import os
+    assert arch.arch_id in ("meshgraphnet",), \
+        "halo scheme is implemented for the meshgraphnet hillclimb cell"
+    assert shape.kind == "full"
+    from repro.runtime.gnn_halo_train import make_mgn_halo_loss
+
+    ax = _all_axes(mesh)
+    n_dev = 1
+    for a in ax:
+        n_dev *= mesh.shape[a]
+    n = round_to(shape.n_nodes, n_dev)
+    e2 = round_to(2 * shape.n_edges, n_dev)
+    nb = n // n_dev
+    e_max = round_to(int(1.25 * e2 / n_dev), 8)
+
+    frac = 0.5
+    path = "artifacts/halo_frac.json"
+    if os.path.exists(path):
+        with open(path) as f:
+            frac = json.load(f).get(shape.name, {}).get("sdp", frac)
+    b_max = min(nb, round_to(max(8, int(frac * nb)), 8))
+    h_max = min(8 * b_max, round_to(max(8, int(frac * nb * 4)), 8))
+
+    cfg = arch.config
+    d_feat = shape.d_feat
+    params_like = jax.eval_shape(
+        functools.partial(_GNN_MODELS["meshgraphnet"].init_params,
+                          cfg=cfg, d_node=d_feat), jax.random.PRNGKey(0))
+    param_sh = jax.tree.map(lambda _: _rep(mesh), params_like)
+    loss_fn = make_mgn_halo_loss(mesh, cfg, nb)
+    step, opt = _train_step_fn(loss_fn, cfg)
+    opt_like = jax.eval_shape(opt.init, params_like)
+    opt_sh = _opt_shardings(param_sh, mesh)
+
+    f32, i32 = jnp.float32, jnp.int32
+    batch = {
+        "node_feat": jax.ShapeDtypeStruct((n_dev, nb, d_feat), f32),
+        "targets": jax.ShapeDtypeStruct((n_dev, nb, 1), f32),
+        "node_mask": jax.ShapeDtypeStruct((n_dev, nb), jnp.bool_),
+        "publish_idx": jax.ShapeDtypeStruct((n_dev, b_max), i32),
+        "halo_map": jax.ShapeDtypeStruct((n_dev, h_max, 2), i32),
+        "senders": jax.ShapeDtypeStruct((n_dev, e_max), i32),
+        "receivers": jax.ShapeDtypeStruct((n_dev, e_max), i32),
+    }
+    batch_sh = {k: _sh(mesh, ax) for k in batch}
+    flops = 3.0 * _gnn_flops_fwd(arch, n, e2, d_feat)
+    return StepBundle(
+        name=f"{arch.arch_id}:{shape.name}:halo", kind="train",
+        fn=step, specs=(params_like, opt_like, batch),
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, _rep(mesh)),
+        donate=(0, 1),
+        meta={"family": "gnn", "model_flops": flops, "n_nodes": n,
+              "n_edges": e2, "halo_frac": frac, "b_max": b_max},
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_param_shardings(params_like, mesh: Mesh,
+                            all_axes: bool = False):
+    """Tables row-sharded (model axis, or the whole mesh when all_axes —
+    the §Perf 'opt' scheme); towers replicated."""
+    rows = _all_axes(mesh) if all_axes else "model"
+
+    def rule(path, _):
+        if "table" in path:
+            return _sh(mesh, rows, None)
+        return _rep(mesh)
+    paths, vals, treedef = SHR.tree_paths(params_like)
+    return jax.tree_util.tree_unflatten(
+        treedef, [rule(p, v) for p, v in zip(paths, vals)])
+
+
+def _recsys_flops_fwd(cfg: RS.TwoTowerConfig, b: int) -> float:
+    d = cfg.embed_dim
+    tower = 0.0
+    dims_u = [cfg.user_fields * d, *cfg.tower_mlp]
+    dims_i = [cfg.item_fields * d, *cfg.tower_mlp]
+    for a, bb in zip(dims_u[:-1], dims_u[1:]):
+        tower += a * bb
+    for a, bb in zip(dims_i[:-1], dims_i[1:]):
+        tower += a * bb
+    lookups = (cfg.user_fields + cfg.item_fields) * cfg.field_slots * d
+    return 2.0 * b * (tower + lookups)
+
+
+def build_recsys(arch: ArchDef, shape: RecSysShape, mesh: Mesh,
+                 scheme: str = "baseline") -> StepBundle:
+    cfg: RS.TwoTowerConfig = arch.config
+    params_like = jax.eval_shape(
+        functools.partial(RS.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    param_sh = _recsys_param_shardings(params_like, mesh,
+                                       all_axes=scheme == "opt")
+    da = SHR.batch_axes(mesh)
+    ax = _all_axes(mesh)
+    n_dev = 1
+    for a in ax:
+        n_dev *= mesh.shape[a]
+    b = shape.batch
+    i32, f32 = jnp.int32, jnp.float32
+
+    def ids_spec(bb, fields):
+        return jax.ShapeDtypeStruct((bb, fields, cfg.field_slots), i32)
+
+    if shape.kind == "train":
+        step, opt = _train_step_fn(RS.loss_fn, cfg)
+        opt_like = jax.eval_shape(opt.init, params_like)
+        opt_sh = _opt_shardings(param_sh, mesh)
+        batch = {"user_ids": ids_spec(b, cfg.user_fields),
+                 "item_ids": ids_spec(b, cfg.item_fields),
+                 "log_q": jax.ShapeDtypeStruct((b,), f32)}
+        bsh = _sh(mesh, da)
+        batch_sh = {"user_ids": _sh(mesh, da, None, None),
+                    "item_ids": _sh(mesh, da, None, None),
+                    "log_q": bsh}
+        flops = 3.0 * (_recsys_flops_fwd(cfg, b)
+                       + 2.0 * b * b * cfg.tower_mlp[-1])
+        return StepBundle(
+            name=f"{arch.arch_id}:{shape.name}", kind="train",
+            fn=step, specs=(params_like, opt_like, batch),
+            in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, _rep(mesh)),
+            donate=(0, 1),
+            meta={"family": "recsys", "model_flops": flops, "batch": b},
+        )
+
+    if shape.kind == "retrieval":
+        nc = shape.n_candidates
+
+        def step(params, batch):
+            return RS.score_candidates(params, batch, cfg)
+
+        batch = {"user_ids": ids_spec(b, cfg.user_fields),
+                 "cand_item_emb": jax.ShapeDtypeStruct(
+                     (nc, cfg.tower_mlp[-1]), f32)}
+        batch_sh = {"user_ids": _rep(mesh),
+                    "cand_item_emb": _sh(mesh, ax, None)}
+        flops = _recsys_flops_fwd(cfg, b) + 2.0 * b * nc * cfg.tower_mlp[-1]
+        return StepBundle(
+            name=f"{arch.arch_id}:{shape.name}", kind="serve",
+            fn=step, specs=(params_like, batch),
+            in_shardings=(param_sh, batch_sh),
+            out_shardings=_sh(mesh, None, ax),
+            donate=(),
+            meta={"family": "recsys", "model_flops": flops, "batch": b},
+        )
+
+    # serve_p99 / serve_bulk: pairwise scores
+    def step(params, batch):
+        return RS.serve_score(params, batch, cfg)
+
+    wide = b % n_dev == 0
+    bsh = _sh(mesh, ax) if wide else (_sh(mesh, da) if b % _n_dp(mesh) == 0
+                                      else _rep(mesh))
+    id_sh_axes = ax if wide else (da if b % _n_dp(mesh) == 0 else None)
+    id_sh = (_sh(mesh, id_sh_axes, None, None) if id_sh_axes
+             else _rep(mesh))
+    batch = {"user_ids": ids_spec(b, cfg.user_fields),
+             "item_ids": ids_spec(b, cfg.item_fields)}
+    batch_sh = {"user_ids": id_sh, "item_ids": id_sh}
+    flops = _recsys_flops_fwd(cfg, b)
+    return StepBundle(
+        name=f"{arch.arch_id}:{shape.name}", kind="serve",
+        fn=step, specs=(params_like, batch),
+        in_shardings=(param_sh, batch_sh),
+        out_shardings=bsh,
+        donate=(),
+        meta={"family": "recsys", "model_flops": flops, "batch": b},
+    )
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def build_step(arch_id: str, shape_name: str, mesh: Mesh,
+               scheme: str = "baseline") -> StepBundle:
+    arch = get_arch(arch_id)
+    shape = arch.shapes[shape_name]
+    if shape_name in arch.skip_shapes:
+        raise ValueError(
+            f"{arch_id}:{shape_name} is skip-marked: "
+            f"{arch.skip_shapes[shape_name]}")
+    if arch.family == "lm":
+        return build_lm(arch, shape, mesh, scheme)
+    if arch.family == "gnn":
+        return build_gnn(arch, shape, mesh, scheme)
+    return build_recsys(arch, shape, mesh, scheme)

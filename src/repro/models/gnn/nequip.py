@@ -1,0 +1,124 @@
+"""NequIP [arXiv:2101.03164]: E(3)-equivariant interatomic potential.
+
+Assigned config: 5 layers, 32 channels, l_max=2, 8 bessel RBFs, cutoff 5.
+Features are irrep channel stacks {l: (N, C, 2l+1)}; each convolution
+couples features with spherical harmonics of edge unit vectors through
+Clebsch–Gordan tensors (repro.models.gnn.so3 — computed from first
+principles, no e3nn), modulated by a radial MLP per path, aggregated with
+segment-sum, mixed channel-wise per l, and gated (scalar silu / norm gate
+for l>0). Exact equivariance is property-tested.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.gnn import common as C
+from repro.models.gnn import so3
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    channels: int = 32
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_species: int = 100
+    out_dim: int = 1
+
+
+def init_params(key, cfg: NequIPConfig):
+    paths = so3.paths(cfg.l_max)
+    c = cfg.channels
+    ke, kl, ko = jax.random.split(key, 3)
+
+    def layer_init(k):
+        kr, km = jax.random.split(k)
+        p = {"radial": L.mlp_init(kr, [cfg.n_rbf, 32, len(paths) * c])}
+        mix_keys = jax.random.split(km, cfg.l_max + 1)
+        for l in range(cfg.l_max + 1):
+            n_in = sum(1 for (_, _, l3) in paths if l3 == l)
+            p[f"mix{l}"] = (jax.random.normal(mix_keys[l], (n_in * c, c))
+                            * (n_in * c) ** -0.5)
+        return p
+
+    return {
+        "embed": jax.random.normal(ke, (cfg.n_species, c)) * 0.5,
+        "layers": L.stack_layer_params(layer_init, kl, cfg.n_layers),
+        "head": L.mlp_init(ko, [c, 32, cfg.out_dim]),
+    }
+
+
+def apply(params, batch, cfg: NequIPConfig):
+    """→ per-node invariant outputs (N, out_dim)."""
+    snd, rcv = batch["senders"], batch["receivers"]
+    n = batch["species"].shape[0]
+    c = cfg.channels
+    paths = so3.paths(cfg.l_max)
+
+    _, dist, unit = C.edge_vectors(batch["positions"], snd, rcv)
+    rbf = C.bessel_rbf(dist, cfg.n_rbf, cfg.cutoff)          # (E, R)
+    emask = (snd >= 0).astype(jnp.float32)
+    sh = {}  # real spherical harmonics of edge unit vectors (jnp, traced)
+    for l in range(cfg.l_max + 1):
+        if l == 0:
+            sh[l] = jnp.ones(snd.shape + (1,))
+        elif l == 1:
+            x, y, z = unit[:, 0], unit[:, 1], unit[:, 2]
+            sh[l] = jnp.stack([y, z, x], axis=-1)
+        else:
+            x, y, z = unit[:, 0], unit[:, 1], unit[:, 2]
+            s3 = float(np.sqrt(3.0))
+            sh[l] = jnp.stack([
+                s3 * x * y, s3 * y * z, 0.5 * (3 * z**2 - 1.0),
+                s3 * x * z, 0.5 * s3 * (x**2 - y**2)], axis=-1)
+
+    cg = {p: jnp.asarray(so3.clebsch_gordan(*p), jnp.float32) for p in paths}
+
+    feats = {0: jnp.take(params["embed"], batch["species"], axis=0)[..., None]}
+    for l in range(1, cfg.l_max + 1):
+        feats[l] = jnp.zeros((n, c, 2 * l + 1))
+
+    def layer(feats, lp):
+        radial = L.mlp_apply(lp["radial"], rbf, act=jax.nn.silu)   # (E, P*c)
+        radial = radial.reshape(radial.shape[0], len(paths), c)
+        msgs = {l: [] for l in range(cfg.l_max + 1)}
+        for pi, (l1, l2, l3) in enumerate(paths):
+            xj = C.gather_src(feats[l1], snd)                       # (E,c,2l1+1)
+            m = jnp.einsum("eci,ej,ijn->ecn", xj, sh[l2], cg[(l1, l2, l3)])
+            m = m * radial[:, pi, :, None] * emask[:, None, None]
+            msgs[l3].append(C.segment_sum_pad(m, rcv, n))           # (N,c,2l3+1)
+        new = {}
+        for l in range(cfg.l_max + 1):
+            stack = jnp.concatenate(msgs[l], axis=1)                # (N,P_l*c,d)
+            mixed = jnp.einsum("npd,pc->ncd", stack, lp[f"mix{l}"])
+            if l == 0:
+                new[l] = feats[0] + jax.nn.silu(mixed)
+            else:  # norm gate keeps equivariance
+                norm = jnp.linalg.norm(mixed, axis=-1, keepdims=True)
+                gate = jax.nn.sigmoid(norm - 1.0)
+                new[l] = feats[l] + mixed * gate
+        return new
+
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda x, i=i: x[i], params["layers"])
+        feats = layer(feats, lp)
+    return L.mlp_apply(params["head"], feats[0][..., 0], act=jax.nn.silu)
+
+
+def loss_fn(params, batch, cfg: NequIPConfig):
+    per_node = apply(params, batch, cfg)
+    if "graph_id" in batch:
+        n_mol = batch["targets"].shape[0]
+        pred = C.segment_sum_pad(per_node, batch["graph_id"], n_mol)
+    else:
+        pred = per_node
+    loss = C.mse_loss(pred, batch["targets"],
+                      None if "graph_id" in batch else batch.get("node_mask"))
+    return loss, {"mse": loss}

@@ -1,0 +1,291 @@
+"""Shared neural layers (no flax/optax offline — built from jnp directly).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take a PRNG key;
+  * layer-stack params are vmap-stacked with a leading (L,) axis and
+    consumed by lax.scan (keeps HLO small for 40–60 layer models);
+  * per-layer heterogeneity (local/global attention windows) is passed as
+    scanned per-layer scalars, not Python branches, so the stack stays
+    homogeneous.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32):
+    return {"w": _normal(key, (d_in, d_out), d_in ** -0.5, dtype)}
+
+
+def dense(p, x):
+    return x @ p["w"]
+
+
+def mlp_init(key, dims: list[int], dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return {f"l{i}": dense_init(k, dims[i], dims[i + 1], dtype)
+            for i, k in enumerate(keys)}
+
+
+def mlp_apply(p, x, act=jax.nn.relu, final_act=False):
+    n = len(p)
+    for i in range(n):
+        x = dense(p[f"l{i}"], x)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    m = x.mean(-1, keepdims=True)
+    v = ((x - m) ** 2).mean(-1, keepdims=True)
+    return (x - m) * jax.lax.rsqrt(v + eps) * p["g"] + p["b"]
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    v = jnp.mean(x.astype(jnp.float32) ** 2, -1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(v + eps) * p["g"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D). positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (traced window/softcap so layer stacks stay scannable)
+# --------------------------------------------------------------------------
+
+def attention_traced(q, k, v, *, q_positions, k_positions, window, softcap,
+                     causal: bool = True):
+    """Dense attention with traced per-layer window (0 ⇒ unbounded).
+
+    q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D). window/softcap are traced
+    scalars so gemma2's local/global alternation runs under one lax.scan.
+    The Pallas `flash_attention` kernel implements the identical math for
+    static configs (serving path); tests assert both agree.
+    """
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = h // hkv
+    qg = q.reshape(b, sq, hkv, group, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    softcap = jnp.asarray(softcap, jnp.float32)
+    s = jnp.where(softcap > 0, jnp.tanh(s / jnp.where(softcap > 0, softcap, 1.0))
+                  * softcap, s)
+    qp = q_positions[:, None, None, :, None]
+    kp = k_positions[:, None, None, None, :]
+    mask = jnp.ones((b, 1, 1, sq, sk), dtype=bool)
+    if causal:
+        mask &= qp >= kp
+    w = jnp.asarray(window, jnp.int32)
+    mask &= jnp.where(w > 0, (qp - kp) < w, True)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, q_positions, k_positions, window, softcap,
+                      causal: bool = True, chunk: int = 512):
+    """Exact attention computed in query chunks (each chunk sees all of K).
+
+    Memory per step is O(B·H·chunk·Sk) instead of O(B·H·Sq·Sk); each chunk
+    is rematerialised in the backward pass (jax.checkpoint), so long-context
+    training/prefill never materialises the full score matrix. Numerics are
+    identical to attention_traced (same per-row softmax).
+    """
+    b, sq, h, d = q.shape
+    if sq <= chunk or sq % chunk != 0:
+        return attention_traced(q, k, v, q_positions=q_positions,
+                                k_positions=k_positions, window=window,
+                                softcap=softcap, causal=causal)
+    nc = sq // chunk
+    qc = jnp.moveaxis(q.reshape(b, nc, chunk, h, d), 1, 0)
+    qp = jnp.moveaxis(q_positions.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def one(args):
+        qi, qpi = args
+        return attention_traced(qi, k, v, q_positions=qpi,
+                                k_positions=k_positions, window=window,
+                                softcap=softcap, causal=causal)
+
+    out = jax.lax.map(one, (qc, qp))                  # (nc, b, chunk, h, d)
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, h, d)
+
+
+def attention_kv_chunked(q, k, v, *, q_positions, k_positions, window,
+                         softcap, causal: bool = True, kv_chunk: int = 1024):
+    """Exact attention with online softmax over KV chunks (flash-style).
+
+    The jnp analogue of kernels/flash_attention (which is the TPU VMEM
+    codepath): running (max, denom, acc) carried over KV blocks via
+    lax.scan, each block rematerialised in the backward pass. Score memory
+    is O(B·H·Sq·kv_chunk); no full (Sq, Sk) matrix ever exists. Used by
+    the sequence-parallel training scheme where Sq is already sharded but
+    the gathered K/V span the full sequence (§Perf iteration 4).
+    """
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    if sk <= kv_chunk or sk % kv_chunk != 0:
+        return attention_traced(q, k, v, q_positions=q_positions,
+                                k_positions=k_positions, window=window,
+                                softcap=softcap, causal=causal)
+    group = h // hkv
+    nc = sk // kv_chunk
+    scale = d ** -0.5
+    qg = q.reshape(b, sq, hkv, group, d).astype(jnp.float32)
+    kc = jnp.moveaxis(k.reshape(b, nc, kv_chunk, hkv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nc, kv_chunk, hkv, d), 1, 0)
+    kpc = jnp.moveaxis(k_positions.reshape(b, nc, kv_chunk), 1, 0)
+    qp = q_positions[:, None, None, :, None]
+    softcap_t = jnp.asarray(softcap, jnp.float32)
+    w = jnp.asarray(window, jnp.int32)
+
+    @jax.checkpoint
+    def block(carry, xs):
+        m, l, acc = carry
+        ki, vi, kpi = xs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                       ki.astype(jnp.float32)) * scale
+        s = jnp.where(softcap_t > 0,
+                      jnp.tanh(s / jnp.where(softcap_t > 0, softcap_t, 1.0))
+                      * softcap_t, s)
+        kp = kpi[:, None, None, None, :]
+        mask = jnp.ones(s.shape, bool)
+        if causal:
+            mask &= qp >= kp
+        mask &= jnp.where(w > 0, (qp - kp) < w, True)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)                       # (b,hkv,g,sq)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd", p, vi.astype(jnp.float32))
+        acc = acc * jnp.moveaxis(alpha, 3, 1)[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, group, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, sq, hkv, group, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(block, (m0, l0, a0), (kc, vc, kpc))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / jnp.moveaxis(l, 3, 1)[..., None]
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+              dtype=jnp.float32):
+    """Projections stored 2D (d, H*hd): the combined head dim is divisible
+    by the TP axis for every assigned arch (56 or 40 heads are not), so
+    pjit boundary shardings stay even; models reshape to heads inside."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    return {
+        "wq": _normal(kq, (d_model, n_heads * head_dim), s, dtype),
+        "wk": _normal(kk, (d_model, n_kv * head_dim), s, dtype),
+        "wv": _normal(kv, (d_model, n_kv * head_dim), s, dtype),
+        "wo": _normal(ko, (n_heads * head_dim, d_model),
+                      (n_heads * head_dim) ** -0.5, dtype),
+    }
+
+
+def gated_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": _normal(k1, (d_model, d_ff), d_model ** -0.5, dtype),
+        "wg": _normal(k2, (d_model, d_ff), d_model ** -0.5, dtype),
+        "wo": _normal(k3, (d_ff, d_model), d_ff ** -0.5, dtype),
+    }
+
+
+def gated_mlp(p, x, act=jax.nn.silu):
+    """SwiGLU (silu) / GeGLU (gelu)."""
+    return (act(x @ p["wg"]) * (x @ p["wi"])) @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+
+def softmax_xent(logits, labels, *, label_mask=None):
+    """Token cross-entropy; logits (..., V) fp32-accumulated."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if label_mask is not None:
+        return jnp.sum(nll * label_mask) / jnp.maximum(jnp.sum(label_mask), 1)
+    return jnp.mean(nll)
+
+
+def chunked_softmax_xent(x, head, labels, *, label_mask=None,
+                         final_softcap: float = 0.0, chunk: int = 8192):
+    """Cross-entropy over a huge vocab without materialising (T, V) logits.
+
+    x: (T, d) final hidden states; head: (d, V); labels: (T,).
+    Token chunks are scanned; each chunk's logits are rematerialised in the
+    backward pass. At V=256k / T=1M this keeps live logits to chunk×V.
+    """
+    t, _ = x.shape
+    mask = (jnp.ones((t,), jnp.float32) if label_mask is None
+            else label_mask.astype(jnp.float32))
+    if t <= chunk or t % chunk != 0:
+        return _xent_block(x, head, labels, mask, final_softcap)
+    nc = t // chunk
+    xs = (x.reshape(nc, chunk, -1), labels.reshape(nc, chunk),
+          mask.reshape(nc, chunk))
+
+    @jax.checkpoint
+    def one(args):
+        xc, lc, mc = args
+        return _xent_block(xc, head, lc, mc, final_softcap, mean=False)
+
+    nll, cnt = jax.lax.map(one, xs)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(cnt), 1.0)
+
+
+def _xent_block(x, head, labels, mask, final_softcap, mean: bool = True):
+    logits = (x @ head).astype(jnp.float32)
+    if final_softcap > 0:
+        logits = final_softcap * jnp.tanh(logits / final_softcap)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    if mean:
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def stack_layer_params(init_fn, key, n_layers: int):
+    """vmap-stacked per-layer params with a leading (L,) axis for lax.scan."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_fn)(keys)

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-based dispatch (GShard
+style, scatter formulation — no (T, E, C) one-hot dispatch tensor).
+
+SDP tie-in (DESIGN.md §3): token→expert dispatch is the same
+affinity-vs-load assignment problem the paper solves for vertices. The
+optional ``balance_bias`` implements the paper's communication-aware
+balance guard as an aux-loss-free router bias (DeepSeek-style): experts
+over mean load get their logits pushed down before top-k.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    balance_bias: float = 0.0   # >0 ⇒ SDP-style load-bias routing
+    aux_loss_coef: float = 0.01
+    dispatch_groups: int = 1    # >1 ⇒ group-local dispatch (per-DP-shard
+    #   capacity): the cumsum/scatter stays inside each token group, so a
+    #   data-sharded step never all-reduces the (E, C, d) dispatch buffer.
+    #   Real systems dispatch per device (GShard/MegaBlocks); set this to
+    #   the DP world size in distributed steps.
+    buf_pspec: tuple = ()       # optional PartitionSpec entries for the
+    #   (G, E, C, d) dispatch buffer, e.g. (("data",), "model", None, None)
+    #   — groups stay data-sharded, experts expert-parallel on model, so
+    #   the expert GEMMs are local (no d-contraction psum). §Perf 4.2.
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32):
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    s = d_model ** -0.5
+    return {
+        "router": (jax.random.normal(kr, (d_model, e)) * s).astype(jnp.float32),
+        "wi": (jax.random.normal(k1, (e, d_model, f)) * s).astype(dtype),
+        "wg": (jax.random.normal(k2, (e, d_model, f)) * s).astype(dtype),
+        "wo": (jax.random.normal(k3, (e, f, d_model)) * f ** -0.5).astype(dtype),
+    }
+
+
+def moe_apply(p, x, cfg: MoEConfig, *, expert_load=None):
+    """x: (B, S, d) → (y (B, S, d), aux_loss, new_expert_load).
+
+    Dispatch is scatter-based (no (T, E, C) one-hot) and *group-local* when
+    cfg.dispatch_groups > 1: tokens are split into G contiguous groups with
+    per-group capacity, so the running-count cumsum and the dispatch scatter
+    never cross a data shard — the buffer stays G-sharded and the only
+    cross-shard traffic is the expert-weight gather the partitioner owns.
+    """
+    import math
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    # group-local dispatch degrades gracefully for tiny token counts
+    # (single-token decode): use the largest group count dividing T
+    g = max(1, math.gcd(t, max(1, cfg.dispatch_groups)))
+    tg = t // g
+    xf = x.reshape(t, d)
+
+    logits = xf.astype(jnp.float32) @ p["router"]          # (T, E)
+    if cfg.balance_bias > 0.0 and expert_load is not None:
+        mean = jnp.mean(expert_load) + 1e-6
+        logits = logits - cfg.balance_bias * (expert_load - mean) / mean
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)                 # (T, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # Switch-style load-balancing aux loss (computed pre-capacity).
+    density = jnp.mean(jax.nn.one_hot(expert[:, 0], e), axis=0)
+    router_mean = jnp.mean(probs, axis=0)
+    aux = cfg.aux_loss_coef * e * jnp.sum(density * router_mean)
+
+    cap = int(cfg.capacity_factor * tg * k / e) + 1
+    fe = expert.reshape(g, tg * k)                         # token-major/group
+    oh = jax.nn.one_hot(fe, e, dtype=jnp.int32)            # (G, Tg*k, E)
+    pos = jnp.cumsum(oh, axis=1) - 1                       # running count
+    pos = jnp.take_along_axis(pos, fe[..., None], axis=2)[..., 0]
+    keep = pos < cap
+    idx_e = jnp.where(keep, fe, e)                         # drop row → e
+    idx_c = jnp.where(keep, pos, 0)
+
+    xr = jnp.repeat(xf, k, axis=0).reshape(g, tg * k, d)   # (G, Tg*k, d)
+    buf = jnp.zeros((g, e + 1, cap, d), x.dtype)
+    buf = jax.vmap(lambda bu, ie, ic, xv: bu.at[ie, ic].add(xv))(
+        buf, idx_e, idx_c, xr)
+    h = buf[:, :e]                                         # (G, E, C, d)
+    if cfg.buf_pspec:
+        from jax.sharding import PartitionSpec as P
+        h = jax.lax.with_sharding_constraint(h, P(*cfg.buf_pspec))
+    act = jax.nn.silu(jnp.einsum("gecd,edf->gecf", h, p["wg"]))
+    h = act * jnp.einsum("gecd,edf->gecf", h, p["wi"])
+    out = jnp.einsum("gecf,efd->gecd", h, p["wo"])         # (G, E, C, d)
+
+    y = jax.vmap(lambda o, ie, ic: o[jnp.minimum(ie, e - 1), ic])(
+        out, idx_e, idx_c)                                 # (G, Tg*k, d)
+    y = y * keep[..., None] * gate.reshape(g, tg * k)[..., None]
+    y = y.reshape(t, k, d).sum(axis=1).reshape(b, s, d).astype(x.dtype)
+
+    load = jnp.sum(oh * keep[..., None], axis=(0, 1)).astype(jnp.float32)
+    return y, aux, load

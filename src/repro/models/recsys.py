@@ -1,0 +1,105 @@
+"""Two-tower retrieval [Yi et al., RecSys'19]: sampled-softmax retrieval.
+
+Assigned config: embed_dim 256, tower MLPs 1024-512-256, dot interaction.
+Embedding tables are the hot path (built on jnp.take + segment-sum —
+repro.kernels.embedding_bag provides the TPU kernel). Training uses
+in-batch sampled softmax with logQ correction; SDP partitions the
+user–item co-access graph to place hot rows (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.kernels.embedding_bag.ops import bag_lookup
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str = "two-tower-retrieval"
+    embed_dim: int = 256
+    tower_mlp: tuple = (1024, 512, 256)
+    user_vocab: int = 50_331_648   # ≈50M, multiple of 512 (even row shards)
+    item_vocab: int = 50_331_648
+    user_fields: int = 8     # multi-hot categorical fields per user
+    item_fields: int = 4
+    field_slots: int = 8     # ids per field (bag size, -1 padded)
+    temperature: float = 0.05
+    dtype: str = "float32"
+
+
+def init_params(key, cfg: TwoTowerConfig):
+    ku, ki, kum, kim = jax.random.split(key, 4)
+    d = cfg.embed_dim
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "user_table": (jax.random.normal(ku, (cfg.user_vocab, d)) * 0.01).astype(dt),
+        "item_table": (jax.random.normal(ki, (cfg.item_vocab, d)) * 0.01).astype(dt),
+        "user_tower": L.mlp_init(kum, [cfg.user_fields * d, *cfg.tower_mlp]),
+        "item_tower": L.mlp_init(kim, [cfg.item_fields * d, *cfg.tower_mlp]),
+    }
+
+
+def _tower(table, tower_p, ids, n_fields: int, use_kernel: bool):
+    """ids (B, F, S) multi-hot → (B, out) L2-normalised tower embedding."""
+    b = ids.shape[0]
+    flat = ids.reshape(b * n_fields, -1)
+    bags = bag_lookup(table, flat, "mean", use_kernel)       # (B*F, d)
+    x = bags.reshape(b, -1)                                  # (B, F*d)
+    x = L.mlp_apply(tower_p, x, act=jax.nn.relu)
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+
+
+def user_embed(params, batch, cfg: TwoTowerConfig, use_kernel=False):
+    return _tower(params["user_table"], params["user_tower"],
+                  batch["user_ids"], cfg.user_fields, use_kernel)
+
+
+def item_embed(params, batch, cfg: TwoTowerConfig, use_kernel=False):
+    return _tower(params["item_table"], params["item_tower"],
+                  batch["item_ids"], cfg.item_fields, use_kernel)
+
+
+def loss_fn(params, batch, cfg: TwoTowerConfig):
+    """In-batch sampled softmax with logQ correction (RecSys'19 eq. 5)."""
+    u = user_embed(params, batch, cfg)                       # (B, d)
+    v = item_embed(params, batch, cfg)                       # (B, d)
+    logits = (u @ v.T) / cfg.temperature                     # (B, B)
+    logits = logits - batch["log_q"][None, :]                # logQ correction
+    labels = jnp.arange(u.shape[0])
+    loss = L.softmax_xent(logits, labels)
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return loss, {"xent": loss, "in_batch_acc": acc}
+
+
+def score_candidates(params, batch, cfg: TwoTowerConfig):
+    """Retrieval scoring: one/many queries × many candidate items.
+
+    batch: user_ids (B, F, S), cand_item_emb (Nc, d) [precomputed corpus
+    embeddings, the standard serving layout]. → (B, Nc) scores."""
+    u = user_embed(params, batch, cfg)
+    return u @ batch["cand_item_emb"].T / cfg.temperature
+
+
+def serve_score(params, batch, cfg: TwoTowerConfig):
+    """Online inference: score B (user, item) pairs."""
+    u = user_embed(params, batch, cfg)
+    v = item_embed(params, batch, cfg)
+    return jnp.sum(u * v, axis=-1) / cfg.temperature
+
+
+def make_batch(cfg: TwoTowerConfig, batch: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    return {
+        "user_ids": rng.integers(
+            -1, cfg.user_vocab, (batch, cfg.user_fields, cfg.field_slots)
+        ).astype(np.int32),
+        "item_ids": rng.integers(
+            -1, cfg.item_vocab, (batch, cfg.item_fields, cfg.field_slots)
+        ).astype(np.int32),
+        "log_q": rng.standard_normal(batch).astype(np.float32) * 0.1,
+    }

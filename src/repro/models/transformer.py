@@ -1,0 +1,342 @@
+"""Decoder-only LM covering the 5 assigned architectures.
+
+One homogeneous layer stack under lax.scan; per-layer heterogeneity
+(gemma2 local/global alternation, llama4 chunked-local) rides through the
+scan as a per-layer window array. Supports:
+  * GQA + RoPE (+ per-arch theta), SwiGLU/GeGLU,
+  * attention & final logit soft-capping (gemma2),
+  * sliding-window layers (gemma2 local-4096, llama4 chunked-8192),
+  * MoE FFN (moonshot 64e/top-6, llama4 16e/top-1),
+  * train forward, prefill (returns KV cache), and single-token decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 10000.0
+    act: str = "silu"              # 'silu' (SwiGLU) | 'gelu' (GeGLU)
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    window_pattern: tuple[int, ...] = (0,)   # cycled; 0 = global
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    moe: Optional[MoEConfig] = None
+    dtype: str = "bfloat16"
+    remat: bool = True
+    attn_chunk: int = 512     # query-chunk size for long-context attention
+    xent_chunk: int = 8192    # token-chunk size for vocab cross-entropy
+    # Optional PartitionSpec entries for the (B, S, d) residual stream,
+    # e.g. (("pod","data"), "model", None) — sequence parallelism. Applied
+    # as with_sharding_constraint at every layer boundary; () disables.
+    # Needs an ambient mesh (the dry-run/launcher provide one).
+    act_pspec: tuple = ()
+    # Optional PartitionSpec for K/V (B, S, Hkv, hd) inside attention.
+    # With sequence parallelism, constraining K/V to (da, None, None, None)
+    # forces ONE all-gather of K/V per layer instead of psum-ing f32
+    # attention outputs over the sharded KV sequence (§Perf iteration 3).
+    kv_pspec: tuple = ()
+    # >0 ⇒ online-softmax attention over KV chunks of this size (exact,
+    # flash-style; the jnp analogue of kernels/flash_attention). Bounds
+    # score memory when q-chunking is disabled (§Perf iteration 4).
+    kv_chunk: int = 0
+
+    @property
+    def jdtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def windows(self) -> np.ndarray:
+        pat = self.window_pattern
+        return np.asarray([pat[i % len(pat)] for i in range(self.n_layers)],
+                          np.int32)
+
+    def param_count(self) -> int:
+        d, h, kv, hd, f, v = (self.d_model, self.n_heads, self.n_kv_heads,
+                              self.head_dim, self.d_ff, self.vocab)
+        attn = d * hd * (h + 2 * kv) + h * hd * d
+        if self.moe is not None:
+            m = self.moe
+            ffn = d * m.n_experts + 3 * m.n_experts * d * m.d_ff_expert
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        """6·N_active·D convention for MoE rooflines."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        m = self.moe
+        attn = d * self.head_dim * (self.n_heads + 2 * self.n_kv_heads) \
+            + self.n_heads * self.head_dim * d
+        ffn = d * m.n_experts + 3 * m.top_k * d * m.d_ff_expert
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ffn + 2 * d) + emb + d
+
+
+def init_params(key, cfg: LMConfig):
+    dt = cfg.jdtype
+    ke, kl, kh = jax.random.split(key, 3)
+
+    def layer_init(k):
+        ka, km, kn = jax.random.split(k, 3)
+        p = {
+            "attn": L.attn_init(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim, dt),
+            "ln1": L.rmsnorm_init(cfg.d_model),
+            "ln2": L.rmsnorm_init(cfg.d_model),
+        }
+        if cfg.moe is not None:
+            p["moe"] = moe_init(km, cfg.d_model, cfg.moe, dt)
+        else:
+            p["mlp"] = L.gated_mlp_init(km, cfg.d_model, cfg.d_ff, dt)
+        return p
+
+    params = {
+        "embed": (jax.random.normal(ke, (cfg.vocab, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(dt),
+        "layers": L.stack_layer_params(layer_init, kl, cfg.n_layers),
+        "ln_f": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(kh, (cfg.d_model, cfg.vocab))
+                             * cfg.d_model ** -0.5).astype(dt)
+    return params
+
+
+def _act(cfg):
+    return jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+
+
+def _layer_fwd(cfg: LMConfig, lp, x, window, *, q_positions, k_positions,
+               kv=None):
+    """One block. kv=(k_cache, v_cache) for decode (cache already includes
+    positions < len(k_positions)-1; the new kv is appended here)."""
+    h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    b, s, _ = h.shape
+    hd = cfg.head_dim
+    q = (h @ lp["attn"]["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (h @ lp["attn"]["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (h @ lp["attn"]["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    q = L.rope(q, q_positions, cfg.rope_theta)
+    k = L.rope(k, q_positions, cfg.rope_theta)
+    if cfg.kv_pspec and kv is None:
+        from jax.sharding import PartitionSpec as P
+        k = jax.lax.with_sharding_constraint(k, P(*cfg.kv_pspec))
+        v = jax.lax.with_sharding_constraint(v, P(*cfg.kv_pspec))
+    new_kv = (k, v)
+    if kv is not None:
+        k = jnp.concatenate([kv[0], k], axis=1)
+        v = jnp.concatenate([kv[1], v], axis=1)
+    if kv is None and cfg.kv_chunk > 0 and k.shape[1] > cfg.kv_chunk:
+        o = L.attention_kv_chunked(
+            q, k, v, q_positions=q_positions, k_positions=k_positions,
+            window=window, softcap=cfg.attn_softcap, kv_chunk=cfg.kv_chunk,
+        )
+    elif kv is None and q.shape[1] > cfg.attn_chunk:
+        o = L.attention_chunked(
+            q, k, v, q_positions=q_positions, k_positions=k_positions,
+            window=window, softcap=cfg.attn_softcap, chunk=cfg.attn_chunk,
+        )
+    else:
+        o = L.attention_traced(
+            q, k, v, q_positions=q_positions, k_positions=k_positions,
+            window=window, softcap=cfg.attn_softcap,
+        )
+    x = x + o.reshape(b, s, cfg.n_heads * hd) @ lp["attn"]["wo"]
+    h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux, load = moe_apply(lp["moe"], h, cfg.moe)
+    else:
+        y = L.gated_mlp(lp["mlp"], h, _act(cfg))
+        aux = jnp.zeros((), jnp.float32)
+        load = None
+    return x + y, aux, new_kv
+
+
+def _constrain(x, cfg: LMConfig):
+    """Sequence-parallel sharding constraint on the residual stream."""
+    if not cfg.act_pspec:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*cfg.act_pspec))
+
+
+def backbone(params, tokens, cfg: LMConfig, *, collect_cache: bool = False):
+    """Shared trunk. tokens (B, S) → (x (B, S, d) post-ln_f, extra), where
+    extra is the stacked KV cache (L, B, S, Hkv, hd)×2 if collect_cache
+    else the summed MoE aux loss."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = _constrain(x, cfg)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    windows = jnp.asarray(cfg.windows)
+
+    def body(x, xs):
+        lp, w = xs
+        x = _constrain(x, cfg)
+        y, aux, kvs = _layer_fwd(cfg, lp, x, w, q_positions=pos,
+                                 k_positions=pos)
+        y = _constrain(y, cfg)
+        out = kvs if collect_cache else aux
+        return y, out
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, extra = jax.lax.scan(body_fn, x, (params["layers"], windows))
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if not collect_cache:
+        extra = jnp.sum(extra)
+    return x, extra
+
+
+def _head(params, cfg: LMConfig):
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward(params, tokens, cfg: LMConfig, *, collect_cache: bool = False):
+    """Train / prefill forward. tokens (B, S) → logits (B, S, V)
+    [+ stacked KV cache (L, B, S, Hkv, hd) if collect_cache]."""
+    x, extra = backbone(params, tokens, cfg, collect_cache=collect_cache)
+    logits = (x @ _head(params, cfg)).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, extra
+
+
+def loss_fn(params, batch, cfg: LMConfig):
+    """Token cross-entropy via the vocab-chunked head (never materialises
+    the (T, V) logits — required at V=256k, T=1M)."""
+    x, aux = backbone(params, batch["tokens"], cfg)
+    b, s, d = x.shape
+    mask = batch.get("mask")
+    loss = L.chunked_softmax_xent(
+        x.reshape(b * s, d), _head(params, cfg),
+        batch["labels"].reshape(b * s),
+        label_mask=None if mask is None else mask.reshape(b * s),
+        final_softcap=cfg.final_softcap, chunk=cfg.xent_chunk,
+    )
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+def prefill_step(params, tokens, cfg: LMConfig):
+    """Serving prefill: returns last-position logits (B, V) + KV cache
+    (L, B, S, Hkv, hd)×2 — the full-sequence logits are never needed."""
+    x, cache = backbone(params, tokens, cfg, collect_cache=True)
+    logits = (x[:, -1] @ _head(params, cfg)).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, cache[0], cache[1]
+
+
+def decode_step(params, token, cache_k, cache_v, cfg: LMConfig):
+    """One-token decode. token (B, 1); cache_[kv] (L, B, S, Hkv, hd) holds
+    positions 0..S-1; the new token sits at position S.
+
+    Returns (logits (B, V), new_k (L, B, 1, Hkv, hd), new_v)."""
+    b, _ = token.shape
+    s_cache = cache_k.shape[2]
+    x = jnp.take(params["embed"], token, axis=0)
+    qpos = jnp.full((b, 1), s_cache, jnp.int32)
+    kpos = jnp.broadcast_to(jnp.arange(s_cache + 1, dtype=jnp.int32)[None],
+                            (b, s_cache + 1))
+    windows = jnp.asarray(cfg.windows)
+
+    def body(x, xs):
+        lp, w, ck, cv = xs
+        y, _, new_kv = _layer_fwd(cfg, lp, x, w, q_positions=qpos,
+                                  k_positions=kpos, kv=(ck, cv))
+        return y, new_kv
+
+    x, new_kv = jax.lax.scan(body, x, (params["layers"], windows,
+                                       cache_k, cache_v))
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ head).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, new_kv[0], new_kv[1]
+
+
+def decode_step_inplace(params, token, cache_k, cache_v, cache_len,
+                        cfg: LMConfig):
+    """Production decode: preallocated cache, in-place slot write.
+
+    token (B, 1); cache_[kv] (L, B, S_max, Hkv, hd) with positions
+    0..cache_len-1 valid; the new token is written at slot ``cache_len``
+    (traced scalar) via dynamic_update_slice — no buffer growth, the cache
+    layout/sharding is step-invariant (vLLM-style slot write). Causal
+    masking at q_pos == cache_len hides the garbage beyond the write point.
+
+    The caches ride through the layer scan as part of the CARRY (not as
+    stacked xs/ys): XLA aliases carry buffers in place, so the step's live
+    memory is one cache copy, not two — this is what lets the 32k-context
+    decode cells fit a 16 GB HBM chip (EXPERIMENTS.md §Perf).
+
+    Returns (logits (B, V), cache_k, cache_v) with the slot written.
+    """
+    b, _ = token.shape
+    n_l, _, s_max = cache_k.shape[:3]
+    x = jnp.take(params["embed"], token, axis=0)
+    qpos = jnp.full((b, 1), cache_len, jnp.int32)
+    kpos = jnp.broadcast_to(jnp.arange(s_max, dtype=jnp.int32)[None],
+                            (b, s_max))
+    windows = jnp.asarray(cfg.windows)
+    hd = cfg.head_dim
+
+    def body(carry, xs):
+        x, ck_all, cv_all = carry
+        lp, w, li = xs
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q = (h @ lp["attn"]["wq"]).reshape(b, 1, cfg.n_heads, hd)
+        k1 = (h @ lp["attn"]["wk"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        v1 = (h @ lp["attn"]["wv"]).reshape(b, 1, cfg.n_kv_heads, hd)
+        q = L.rope(q, qpos, cfg.rope_theta)
+        k1 = L.rope(k1, qpos, cfg.rope_theta)
+        ck_all = jax.lax.dynamic_update_slice(
+            ck_all, k1.astype(ck_all.dtype)[None],
+            (li, 0, cache_len, 0, 0))
+        cv_all = jax.lax.dynamic_update_slice(
+            cv_all, v1.astype(cv_all.dtype)[None],
+            (li, 0, cache_len, 0, 0))
+        ck = jax.lax.dynamic_index_in_dim(ck_all, li, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(cv_all, li, 0, keepdims=False)
+        o = L.attention_traced(q, ck, cv, q_positions=qpos,
+                               k_positions=kpos, window=w,
+                               softcap=cfg.attn_softcap)
+        x = x + o.reshape(b, 1, cfg.n_heads * hd) @ lp["attn"]["wo"]
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            y, _, _ = moe_apply(lp["moe"], h, cfg.moe)
+        else:
+            y = L.gated_mlp(lp["mlp"], h, _act(cfg))
+        return (x + y, ck_all, cv_all), None
+
+    (x, new_k, new_v), _ = jax.lax.scan(
+        body, (x, cache_k, cache_v),
+        (params["layers"], windows, jnp.arange(n_l, dtype=jnp.int32)))
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = (x[:, 0] @ _head(params, cfg)).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, new_k, new_v

@@ -1,0 +1,15 @@
+from repro.optim.optimizers import (
+    adamw, sgd_momentum, cosine_schedule, linear_warmup_cosine,
+    clip_by_global_norm, apply_updates, Optimizer,
+)
+from repro.optim.compression import (
+    int8_compress, int8_decompress, compressed_allreduce_grads,
+    init_error_feedback,
+)
+
+__all__ = [
+    "adamw", "sgd_momentum", "cosine_schedule", "linear_warmup_cosine",
+    "clip_by_global_norm", "apply_updates", "Optimizer",
+    "int8_compress", "int8_decompress", "compressed_allreduce_grads",
+    "init_error_feedback",
+]

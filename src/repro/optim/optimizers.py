@@ -1,0 +1,110 @@
+"""Optimizers from scratch (no optax offline): AdamW, SGD+momentum,
+schedules, global-norm clipping. Functional optax-like API:
+
+    opt = adamw(schedule, ...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+Optimizer state dtype is fp32 regardless of param dtype (bf16 training).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def lr(step):
+        t = jnp.minimum(step, total_steps) / max(total_steps, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+    return lr
+
+
+def linear_warmup_cosine(base_lr: float, warmup: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup, 1), final_frac)
+    def lr(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, base_lr * w, cos(step - warmup))
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw(lr: Callable | float, b1=0.9, b2=0.95, eps=1e-8,
+          weight_decay=0.1, clip_norm: float = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+            "gnorm": jnp.zeros((), jnp.float32),
+        }
+
+    def update(grads, state, params):
+        if clip_norm > 0:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            _, gnorm = clip_by_global_norm(grads, 1e30)
+        c = state["count"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g.astype(jnp.float32) ** 2,
+                          state["nu"], grads)
+        mh = jax.tree.map(lambda m: m / (1 - b1 ** c), mu)
+        vh = jax.tree.map(lambda v: v / (1 - b2 ** c), nu)
+        step_lr = lr_fn(c)
+        upd = jax.tree.map(
+            lambda m, v, p: (-step_lr * (m / (jnp.sqrt(v) + eps)
+                                         + weight_decay * p.astype(jnp.float32))
+                             ).astype(p.dtype),
+            mh, vh, params)
+        return upd, {"mu": mu, "nu": nu, "count": c, "gnorm": gnorm}
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr: Callable | float, momentum=0.9,
+                 clip_norm: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "mom": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        if clip_norm > 0:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        c = state["count"] + 1
+        mom = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            state["mom"], grads)
+        upd = jax.tree.map(lambda m, p: (-lr_fn(c) * m).astype(p.dtype),
+                           mom, params)
+        return upd, {"mom": mom, "count": c}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u, params, updates)

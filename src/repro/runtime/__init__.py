@@ -1,0 +1,1 @@
+"""Distributed runtime: sharding rules, halo-sharded GNN, elastic re-mesh."""

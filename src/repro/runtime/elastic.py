@@ -1,0 +1,74 @@
+"""Elastic re-meshing: the paper's §4.2.3 scale-out/in at the runtime level.
+
+SDP adds/removes partitions as load changes; the runtime analogue adds or
+removes devices (pods) between steps. Because checkpoints are host-complete
+(repro.checkpoint), a re-scale is: build a new mesh from the surviving
+device list → re-derive shardings from the same rules → restore. Training
+state is bitwise preserved; only placement changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclasses.dataclass
+class ElasticState:
+    mesh: Mesh
+    params: object
+    opt_state: object
+    step: int
+
+
+class ElasticRunner:
+    """Owns mesh construction + re-scale transitions.
+
+    mesh_factory(devices) must return a Mesh using exactly those devices;
+    shardings_fn(mesh, params_like) returns the pytree of NamedShardings.
+    """
+
+    def __init__(self, mesh_factory: Callable, shardings_fn: Callable,
+                 ckpt: CheckpointManager):
+        self.mesh_factory = mesh_factory
+        self.shardings_fn = shardings_fn
+        self.ckpt = ckpt
+
+    def place(self, devices: Sequence, params, opt_state, step: int) -> ElasticState:
+        mesh = self.mesh_factory(devices)
+        sh_p = self.shardings_fn(mesh, params)
+        sh_o = self.shardings_fn(mesh, opt_state)
+        params = jax.tree.map(jax.device_put, params, sh_p)
+        opt_state = jax.tree.map(jax.device_put, opt_state, sh_o)
+        return ElasticState(mesh, params, opt_state, step)
+
+    def rescale(self, state: ElasticState, devices: Sequence) -> ElasticState:
+        """Scale to a new device set (grown or shrunk), preserving state.
+
+        Mirrors SDP scale-in: checkpoint (migrate), rebuild mesh (machine
+        set), restore under new shardings (reassign load)."""
+        self.ckpt.maybe_save(state.step, {"params": state.params,
+                                          "opt": state.opt_state},
+                             blocking=True) or self.ckpt.wait()
+        host = {"params": jax.tree.map(np.asarray, state.params),
+                "opt": jax.tree.map(np.asarray, state.opt_state)}
+        mesh = self.mesh_factory(devices)
+        sh_p = self.shardings_fn(mesh, host["params"])
+        sh_o = self.shardings_fn(mesh, host["opt"])
+        params = jax.tree.map(jax.device_put, host["params"], sh_p)
+        opt_state = jax.tree.map(jax.device_put, host["opt"], sh_o)
+        return ElasticState(mesh, params, opt_state, state.step)
+
+    def recover(self, devices: Sequence, like_params, like_opt) -> ElasticState | None:
+        """Crash recovery: restore latest checkpoint onto a fresh mesh."""
+        restored, step = self.ckpt.restore(
+            {"params": like_params, "opt": like_opt})
+        if restored is None:
+            return None
+        return self.place(devices, restored["params"], restored["opt"],
+                          step or 0)

@@ -1,0 +1,75 @@
+"""Fault-tolerant training loop wrapper.
+
+Policies implemented (designed for 1000+ nodes, exercised here in-process):
+  * periodic async checkpoints (never blocks the step);
+  * crash recovery: any exception inside a step → restore latest
+    checkpoint, skip the poisoned batch, continue;
+  * straggler mitigation: steps slower than `straggler_factor` × rolling
+    median are journaled; after `straggler_patience` consecutive slow
+    steps the `on_straggler` hook fires (in production: re-shard away from
+    the slow host — the SDP scale-in migration at the resource level);
+  * a bounded retry budget so a persistently failing step aborts loudly
+    instead of spinning.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+class FaultTolerantLoop:
+    def __init__(self, ckpt: CheckpointManager, *, max_retries: int = 3,
+                 straggler_patience: int = 3,
+                 on_straggler: Callable[[int], None] | None = None):
+        self.ckpt = ckpt
+        self.max_retries = max_retries
+        self.straggler_patience = straggler_patience
+        self.on_straggler = on_straggler
+        self.retries = 0
+        self.slow_streak = 0
+        self.events: list[dict] = []
+
+    def run(self, state, batches, step_fn, *, start_step: int = 0,
+            like=None):
+        """state: (params, opt_state) pytree; step_fn(state, batch) →
+        (state, metrics). Returns (state, final_step)."""
+        step = start_step
+        it = iter(batches)
+        while True:
+            try:
+                batch = next(it)
+            except StopIteration:
+                break
+            t0 = time.monotonic()
+            try:
+                state, metrics = step_fn(state, batch)
+                self.retries = 0
+            except Exception as err:  # noqa: BLE001 — node failure analogue
+                self.retries += 1
+                self.events.append({"step": step, "event": "failure",
+                                    "err": repr(err)})
+                if self.retries > self.max_retries:
+                    raise
+                restored, rstep = self.ckpt.restore(like or state)
+                if restored is not None:
+                    state, step = restored, rstep
+                self.ckpt.record_step(step, 0.0, status="restored")
+                continue
+            dt = time.monotonic() - t0
+            self.ckpt.record_step(step, dt)
+            if self.ckpt.is_straggler(dt):
+                self.slow_streak += 1
+                self.events.append({"step": step, "event": "straggler",
+                                    "t": dt})
+                if (self.slow_streak >= self.straggler_patience
+                        and self.on_straggler is not None):
+                    self.on_straggler(step)
+                    self.slow_streak = 0
+            else:
+                self.slow_streak = 0
+            step += 1
+            self.ckpt.maybe_save(step, state)
+        self.ckpt.wait()
+        return state, step

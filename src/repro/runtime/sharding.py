@@ -1,0 +1,173 @@
+"""Sharding rules: param/input PartitionSpecs per workload family.
+
+Scheme (DESIGN.md §6): FSDP over the data axis (params+optimizer state
+sharded on a non-contracting dim), Megatron TP over the model axis
+(attention combined head dim, FFN inner dim, vocab), EP for MoE experts,
+sequence sharding for long-context KV caches. The pod axis composes with
+data for cross-pod DP.
+
+All pjit-boundary shardings are even: attention projections are stored 2D
+(d, H·hd) precisely so the TP dim divides 16 for every assigned arch.
+"""
+from __future__ import annotations
+
+import re
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _match(rules, path: str):
+    for pat, spec in rules:
+        if re.search(pat, path):
+            return spec
+    return P()
+
+
+def tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    return paths, [v for _, v in flat], treedef
+
+
+def specs_from_rules(tree, rules) -> object:
+    """Pytree of PartitionSpec, matched by /-joined param path."""
+    paths, vals, treedef = tree_paths(tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [_match(rules, p) for p in paths])
+
+
+def shardings_from_rules(tree, rules, mesh: Mesh):
+    specs = specs_from_rules(tree, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# LM rules. Layer-stacked params carry a leading (L,) axis → specs start
+# with None. fsdp = the data axis (or ("pod","data") multi-pod).
+# --------------------------------------------------------------------------
+
+def lm_param_rules(mesh: Mesh, *, fsdp: bool = True) -> list:
+    da = batch_axes(mesh)
+    d = da if fsdp else None
+    return [
+        (r"embed$",            P("model", d)),       # (V, d)
+        (r"lm_head$",          P(d, "model")),       # (d, V)
+        (r"attn/wq$",          P(None, d, "model")),  # (L, d, H·hd)
+        (r"attn/wk$",          P(None, d, "model")),
+        (r"attn/wv$",          P(None, d, "model")),
+        (r"attn/wo$",          P(None, "model", d)),  # (L, H·hd, d)
+        (r"mlp/w[ig]$",        P(None, d, "model")),  # (L, d, ff)
+        (r"mlp/wo$",           P(None, "model", d)),  # (L, ff, d)
+        (r"moe/router$",       P(None, d, None)),     # (L, d, E)
+        (r"moe/w[ig]$",        P(None, "model", d, None)),  # (L, E, d, f) EP
+        (r"moe/wo$",           P(None, "model", d, None)),  # (L, E, f, d) EP
+        (r"ln", P()),
+    ]
+
+
+def lm_param_rules_zero(mesh: Mesh) -> list:
+    """ZeRO-3 rules for the §Perf 'opt' scheme: dense layer weights are
+    sharded on ONE dim over the WHOLE mesh, so the forward all-gathers each
+    layer's weights once (cheap: weights ≪ activations at these batch
+    sizes) and the backward reduce-scatters the gradients — no
+    activation-sized all-reduces remain. Embedding/head keep the vocab-TP
+    layout (the chunked xent contracts d over data with a small psum).
+    MoE experts keep EP on model."""
+    da = batch_axes(mesh)
+    allax = da + ("model",)
+    return [
+        (r"embed$",            P("model", da)),
+        (r"lm_head$",          P(da, "model")),
+        (r"attn/w[qkvo]$",     P(None, allax, None)),
+        (r"mlp/w[ig]$",        P(None, allax, None)),   # (L, d, ff)
+        (r"mlp/wo$",           P(None, None, allax)),   # (L, ff, d): ff may
+        # not divide 512 (deepseek 19200), d always does
+        (r"moe/router$",       P(None, da, None)),
+        # experts expert-parallel on model + ff sharded on data: the first
+        # expert GEMM contracts unsharded d (no psum); the second contracts
+        # ff/data, which reduce-scatters onto the data-sharded group dim —
+        # and opt-state/grad-accum memory for the 96B expert params stays
+        # 256-way sharded (§Perf 4.2 iterations 2-3)
+        (r"moe/w[ig]$",        P(None, "model", None, da)),  # (L,E,d,f)
+        (r"moe/wo$",           P(None, "model", da, None)),  # (L,E,f,d)
+        (r"ln", P()),
+    ]
+
+
+def lm_input_specs(mesh: Mesh, *, batch: int) -> dict:
+    da = batch_axes(mesh)
+    n_dp = 1
+    for a in da:
+        n_dp *= mesh.shape[a]
+    bspec = P(da) if batch % n_dp == 0 else (
+        P("data") if batch % mesh.shape["data"] == 0 else P())
+    return {"tokens": bspec, "labels": bspec}
+
+
+def lm_cache_spec(mesh: Mesh, *, batch: int, seq: int) -> P:
+    """KV cache (L, B, S, Hkv·hd packed as (Hkv, hd))… stored (L,B,S,H,hd):
+    batch on data when divisible, else sequence over (data, model)."""
+    da = batch_axes(mesh)
+    n_dp = 1
+    for a in da:
+        n_dp *= mesh.shape[a]
+    if batch % n_dp == 0:
+        return P(None, da, "model", None, None)   # seq also on model
+    # long-context, tiny batch: shard sequence over everything
+    axes = da + ("model",)
+    return P(None, None, axes, None, None)
+
+
+# --------------------------------------------------------------------------
+# GNN rules: node/edge arrays sharded on data(+pod); weights replicated
+# (they are tiny); the SDP halo path uses shard_map (gnn_sharded.py).
+# --------------------------------------------------------------------------
+
+def gnn_param_rules(mesh: Mesh) -> list:
+    return [(r".*", P())]
+
+
+def gnn_input_specs(mesh: Mesh) -> dict:
+    da = batch_axes(mesh)
+    return {
+        "senders": P(da), "receivers": P(da),
+        "node_feat": P(da, None), "node_mask": P(da),
+        "targets": P(da, None), "positions": P(da, None),
+        "species": P(da), "graph_id": P(da),
+    }
+
+
+# --------------------------------------------------------------------------
+# RecSys rules: embedding tables row-sharded over the whole mesh; towers
+# replicated (small); batch on data(+pod).
+# --------------------------------------------------------------------------
+
+def recsys_param_rules(mesh: Mesh) -> list:
+    da = batch_axes(mesh)
+    rows = da + ("model",)
+    return [
+        (r"(user|item)_table$", P(rows, None)),
+        (r"tower", P()),
+    ]
+
+
+def recsys_input_specs(mesh: Mesh, *, batch: int) -> dict:
+    da = batch_axes(mesh)
+    n_dp = 1
+    for a in da:
+        n_dp *= mesh.shape[a]
+    bspec = P(da) if batch % n_dp == 0 else P()
+    return {
+        "user_ids": P(*bspec, None, None) if bspec != P() else P(),
+        "item_ids": P(*bspec, None, None) if bspec != P() else P(),
+        "log_q": bspec,
+        "cand_item_emb": P(("data", "model"), None),
+    }

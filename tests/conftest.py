@@ -1,0 +1,11 @@
+import warnings
+
+import numpy as np
+import pytest
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,172 @@
+"""GNN model tests: 4 assigned archs (reduced configs), equivariance,
+molecule readout, minibatch sampler integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.graph.generators import make_graph
+from repro.graph.sampler import make_minibatch, subgraph_sizes
+from repro.models.gnn import common as C
+from repro.models.gnn import so3
+
+GNN_ARCHS = ["meshgraphnet", "schnet", "nequip", "pna"]
+
+
+def _model(arch_id):
+    from repro.launch.steps import _GNN_MODELS
+    return _GNN_MODELS[arch_id]
+
+
+def _batch_for(arch_id, seed=0):
+    g = make_graph("mesh", 80, 220, seed=seed)
+    return C.graph_to_batch(g, 12, with_positions=True, seed=seed)
+
+
+@pytest.mark.parametrize("arch_id", GNN_ARCHS)
+def test_smoke_full_graph(arch_id):
+    """Per-arch smoke: reduced config, one forward+backward, no NaNs."""
+    cfg = ARCHS[arch_id].smoke_config
+    mod = _model(arch_id)
+    batch = _batch_for(arch_id)
+    if arch_id in ("meshgraphnet", "pna"):
+        params = mod.init_params(jax.random.PRNGKey(0), cfg, d_node=12)
+    else:
+        params = mod.init_params(jax.random.PRNGKey(0), cfg)
+    (loss, _), grads = jax.value_and_grad(
+        mod.loss_fn, has_aux=True)(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    for g_ in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(g_)).all()
+
+
+@pytest.mark.parametrize("arch_id", GNN_ARCHS)
+def test_smoke_molecule_batch(arch_id):
+    """Batched-small-graphs shape: per-graph readout loss."""
+    cfg = ARCHS[arch_id].smoke_config
+    mod = _model(arch_id)
+    batch = C.batch_molecules(6, 10, 18, seed=1, d_feat=12)
+    if arch_id in ("meshgraphnet", "pna"):
+        params = mod.init_params(jax.random.PRNGKey(0), cfg, d_node=12)
+    else:
+        params = mod.init_params(jax.random.PRNGKey(0), cfg)
+    loss, _ = mod.loss_fn(params, batch, cfg)
+    assert np.isfinite(float(loss))
+
+
+def test_minibatch_sampler_shapes():
+    g = make_graph("social", 200, 800, seed=0)
+    fanouts = (5, 3)
+    batch = make_minibatch(g, 8, 16, fanouts, seed=0)
+    n, e = subgraph_sizes(16, fanouts)
+    assert batch["node_feat"].shape == (n, 8)
+    assert batch["senders"].shape == (e,)
+    assert batch["positions"].shape == (n, 3)
+    valid = batch["senders"] >= 0
+    assert valid.any()
+    # edges point into the subgraph
+    assert batch["receivers"][valid].max() < n
+    assert batch["node_mask"][:16].all() and not batch["node_mask"][16:].any()
+
+
+def test_padded_edges_are_noops():
+    """-1-padded edges must not change any model's output."""
+    cfg = ARCHS["pna"].smoke_config
+    mod = _model("pna")
+    batch = _batch_for("pna")
+    params = mod.init_params(jax.random.PRNGKey(0), cfg, d_node=12)
+    out1 = mod.apply(params, batch, cfg)
+    batch2 = dict(batch)
+    pad = 37
+    batch2["senders"] = np.concatenate(
+        [batch["senders"], -np.ones(pad, np.int32)])
+    batch2["receivers"] = np.concatenate(
+        [batch["receivers"], -np.ones(pad, np.int32)])
+    out2 = mod.apply(params, batch2, cfg)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SO(3) machinery + NequIP equivariance
+# ---------------------------------------------------------------------------
+
+def test_wigner_d_is_representation():
+    rng = np.random.default_rng(0)
+    rots = so3._rand_rotations(2, seed=1)
+    for l in (1, 2):
+        d1 = so3.wigner_d(l, rots[0])
+        d2 = so3.wigner_d(l, rots[1])
+        d12 = so3.wigner_d(l, rots[0] @ rots[1])
+        np.testing.assert_allclose(d1 @ d2, d12, atol=1e-8)
+        # orthogonality
+        np.testing.assert_allclose(d1 @ d1.T, np.eye(d1.shape[0]),
+                                   atol=1e-8)
+
+
+def test_clebsch_gordan_equivariance_identity():
+    """C must intertwine: D3[n,m] C[i,j,m] == D1[i,k] D2[j,l] C[k,l,n]
+    (the so3.clebsch_gordan docstring identity) for random rotations."""
+    for (l1, l2, l3) in so3.paths(2):
+        c = so3.clebsch_gordan(l1, l2, l3)
+        if np.allclose(c, 0):
+            continue
+        r = so3._rand_rotations(1, seed=3)[0]
+        d1, d2, d3 = (so3.wigner_d(l, r) for l in (l1, l2, l3))
+        lhs = np.einsum("mn,ijm->ijn", d3, c)
+        rhs = np.einsum("ik,jl,kln->ijn", d1, d2, c)
+        np.testing.assert_allclose(lhs, rhs, atol=1e-7)
+
+
+def test_nequip_rotation_invariance():
+    """Rotating all positions must leave NequIP's scalar output unchanged."""
+    cfg = ARCHS["nequip"].smoke_config
+    mod = _model("nequip")
+    params = mod.init_params(jax.random.PRNGKey(0), cfg)
+    batch = C.batch_molecules(3, 8, 14, seed=2)
+    out1 = mod.apply(params, batch, cfg)
+    r = so3._rand_rotations(1, seed=4)[0]
+    batch2 = dict(batch)
+    batch2["positions"] = batch["positions"] @ r.T
+    out2 = mod.apply(params, batch2, cfg)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_nequip_translation_invariance():
+    cfg = ARCHS["nequip"].smoke_config
+    mod = _model("nequip")
+    params = mod.init_params(jax.random.PRNGKey(0), cfg)
+    batch = C.batch_molecules(2, 8, 14, seed=5)
+    out1 = mod.apply(params, batch, cfg)
+    batch2 = dict(batch)
+    batch2["positions"] = batch["positions"] + np.array([1.7, -0.3, 2.2],
+                                                        np.float32)
+    out2 = mod.apply(params, batch2, cfg)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_schnet_rotation_invariance():
+    cfg = ARCHS["schnet"].smoke_config
+    mod = _model("schnet")
+    params = mod.init_params(jax.random.PRNGKey(0), cfg)
+    batch = C.batch_molecules(2, 8, 14, seed=6)
+    out1 = mod.apply(params, batch, cfg)
+    r = so3._rand_rotations(1, seed=7)[0]
+    batch2 = dict(batch)
+    batch2["positions"] = batch["positions"] @ r.T
+    out2 = mod.apply(params, batch2, cfg)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_segment_ops_padding():
+    x = jnp.ones((5, 3))
+    seg = jnp.asarray([0, 0, 1, -1, -1], jnp.int32)
+    out = C.segment_sum_pad(x, seg, 2)
+    np.testing.assert_allclose(np.asarray(out),
+                               [[2, 2, 2], [1, 1, 1]])
+    mean = C.segment_mean_pad(x * 2, seg, 2)
+    np.testing.assert_allclose(np.asarray(mean), [[2, 2, 2], [2, 2, 2]])

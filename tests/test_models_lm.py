@@ -1,0 +1,170 @@
+"""LM model tests: all 5 assigned archs (reduced configs), decode
+consistency, chunked attention/xent equivalence, MoE dispatch."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+
+LM_ARCHS = [a for a, d in ARCHS.items() if d.family == "lm"]
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_smoke_forward_backward(arch_id):
+    """Per-arch smoke: one train step on CPU, shapes + finiteness."""
+    cfg = ARCHS[arch_id].smoke_config
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    logits, _ = T.forward(params, toks, cfg)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    (loss, metrics), grads = jax.value_and_grad(
+        T.loss_fn, has_aux=True)(params, batch, cfg)
+    assert np.isfinite(float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch_id", LM_ARCHS)
+def test_prefill_decode_consistency(arch_id):
+    """prefill + in-place decode == full forward at the next position."""
+    cfg = ARCHS[arch_id].smoke_config
+    if cfg.moe is not None:
+        pytest.skip("MoE capacity depends on token count; dense-only check")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 9), 0, cfg.vocab)
+    s_max = 12
+    _, ck, cv = T.prefill_step(params, toks[:, :-1], cfg)
+    # pad prefill cache (B, 8) into the preallocated (B, s_max) slots
+    pad = s_max - ck.shape[2]
+    ck = jnp.pad(ck, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cv = jnp.pad(cv, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    logits_dec, _, _ = T.decode_step_inplace(
+        params, toks[:, -1:], ck, cv, jnp.int32(toks.shape[1] - 1), cfg)
+    logits_full, _ = T.forward(params, toks, cfg)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_equals_direct():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    b, s, h, d = 2, 64, 4, 16
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, 2, d))
+    v = jax.random.normal(ks[2], (b, s, 2, d))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    for window, softcap in ((0, 0.0), (16, 0.0), (0, 25.0)):
+        a = L.attention_traced(q, k, v, q_positions=pos, k_positions=pos,
+                               window=window, softcap=softcap)
+        c = L.attention_chunked(q, k, v, q_positions=pos, k_positions=pos,
+                                window=window, softcap=softcap, chunk=16)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_xent_equals_direct():
+    key = jax.random.PRNGKey(1)
+    t, d, v = 64, 16, 97
+    x = jax.random.normal(key, (t, d))
+    head = jax.random.normal(jax.random.PRNGKey(2), (d, v))
+    labels = jax.random.randint(jax.random.PRNGKey(3), (t,), 0, v)
+    mask = (jnp.arange(t) % 3 != 0).astype(jnp.float32)
+    direct = L.softmax_xent((x @ head)[None], labels[None],
+                            label_mask=mask[None])
+    chunked = L.chunked_softmax_xent(x, head, labels, label_mask=mask,
+                                     chunk=16)
+    np.testing.assert_allclose(float(chunked), float(direct), rtol=1e-5)
+    # gradient parity
+    g1 = jax.grad(lambda h: L.chunked_softmax_xent(
+        x, h, labels, label_mask=mask, chunk=16))(head)
+    g2 = jax.grad(lambda h: L.softmax_xent(
+        (x @ h)[None], labels[None], label_mask=mask[None]))(head)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_gemma2_window_pattern():
+    cfg = ARCHS["gemma2-9b"].config
+    w = cfg.windows
+    assert w[0] == 4096 and w[1] == 0 and len(w) == 42
+    assert (w[::2] == 4096).all() and (w[1::2] == 0).all()
+
+
+def test_param_counts_match_public_sizes():
+    """Total params must be in the ballpark of the public model sizes."""
+    expect = {"gemma2-9b": (8.5e9, 10.5e9),
+              "deepseek-coder-33b": (31e9, 35e9),
+              "phi3-mini-3.8b": (3.5e9, 4.2e9),
+              "llama4-scout-17b-a16e": (95e9, 112e9)}  # 109B total public
+    for arch_id, (lo, hi) in expect.items():
+        n = ARCHS[arch_id].config.param_count()
+        assert lo <= n <= hi, f"{arch_id}: {n:.3e}"
+    # active params: scout publishes ~17B active INCLUDING a shared expert
+    # the assigned config omits (16e top-1 only) — so expect ~11B here
+    a = ARCHS["llama4-scout-17b-a16e"].config.active_param_count()
+    assert 9e9 <= a <= 20e9
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def _moe_setup(g=1, e=8, k=2, t=32, d=16):
+    cfg = MoEConfig(n_experts=e, top_k=k, d_ff_expert=32,
+                    dispatch_groups=g, capacity_factor=8.0)
+    p = moe_init(jax.random.PRNGKey(0), d, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, t // 2, d))
+    return cfg, p, x
+
+
+def test_moe_group_dispatch_matches_global_at_high_capacity():
+    """With capacity ≫ tokens nothing is dropped, so G=1 and G=4 agree."""
+    cfg1, p, x = _moe_setup(g=1)
+    cfg4 = dataclasses.replace(cfg1, dispatch_groups=4)
+    y1, _, l1 = moe_apply(p, x, cfg1)
+    y4, _, l4 = moe_apply(p, x, cfg4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l4))
+
+
+def test_moe_capacity_drops_tokens():
+    cfg, p, x = _moe_setup()
+    tight = dataclasses.replace(cfg, capacity_factor=0.25)
+    _, _, load_full = moe_apply(p, x, cfg)
+    _, _, load_tight = moe_apply(p, x, tight)
+    assert float(load_tight.sum()) < float(load_full.sum())
+    t = x.shape[0] * x.shape[1]
+    assert float(load_full.sum()) == t * cfg.top_k  # nothing dropped
+
+
+def test_moe_balance_bias_shifts_load():
+    """SDP-style balance guard: biasing against a hot expert moves load."""
+    cfg, p, x = _moe_setup()
+    biased = dataclasses.replace(cfg, balance_bias=50.0)
+    _, _, load0 = moe_apply(p, x, cfg)
+    hot = jnp.zeros(cfg.n_experts).at[int(jnp.argmax(load0))].set(1e3)
+    _, _, load1 = moe_apply(p, x, biased, expert_load=hot)
+    assert float(load1[int(jnp.argmax(load0))]) <= float(load0.max())
+
+
+def test_moe_grad_flows():
+    cfg, p, x = _moe_setup()
+
+    def f(p):
+        y, aux, _ = moe_apply(p, x, cfg)
+        return jnp.sum(y ** 2) + aux
+
+    g = jax.grad(f)(p)
+    for leaf in jax.tree.leaves(g):
+        assert np.isfinite(np.asarray(leaf)).all()
+    assert float(jnp.sum(jnp.abs(g["router"]))) > 0

@@ -1,0 +1,108 @@
+"""Hypothesis property tests on the partitioner's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (EngineConfig, recompute_counters, run_stream,
+                        state_metrics)
+from repro.core.offline import cut_of, offline_partition
+from repro.graph.csr import from_edge_list
+from repro.graph.generators import make_graph
+from repro.graph import stream as gstream
+
+
+@st.composite
+def random_graph(draw, max_n=40):
+    n = draw(st.integers(5, max_n))
+    m = draw(st.integers(0, 3 * n))
+    edges = draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        min_size=m, max_size=m))
+    return from_edge_list(np.asarray(edges, np.int64).reshape(-1, 2), n=n) \
+        if edges else from_edge_list(np.zeros((0, 2), np.int64), n=n)
+
+
+@st.composite
+def engine_case(draw):
+    g = draw(random_graph())
+    k_max = draw(st.integers(2, 6))
+    k_init = draw(st.integers(1, k_max))
+    max_cap = draw(st.sampled_from([20, 60, 10**9]))
+    policy = draw(st.sampled_from(["sdp", "greedy", "ldg", "hash"]))
+    seed = draw(st.integers(0, 5))
+    dynamic = draw(st.booleans())
+    return g, policy, EngineConfig(
+        k_max=k_max, k_init=k_init, max_cap=max_cap,
+        autoscale=policy == "sdp"), seed, dynamic
+
+
+@given(engine_case())
+@settings(max_examples=25, deadline=None)
+def test_invariants(case):
+    g, policy, cfg, seed, dynamic = case
+    s = (gstream.dynamic_schedule(g, n_intervals=2, seed=seed)
+         if dynamic else gstream.build_stream(g, seed=seed))
+    state, trace = run_stream(s, policy=policy, cfg=cfg, seed=seed)
+
+    # 1. incremental counters == from-scratch recomputation
+    rec = recompute_counters(np.asarray(state.assignment),
+                             np.asarray(state.present),
+                             np.asarray(state.adj), cfg.k_max)
+    assert int(state.total_edges) == rec["total_edges"]
+    assert int(state.cut_edges) == rec["cut_edges"]
+    np.testing.assert_array_equal(np.asarray(state.edge_load),
+                                  rec["edge_load"])
+
+    # 2. structural invariants
+    m = state_metrics(state)
+    assert 0.0 <= m["edge_cut_ratio"] <= 1.0
+    assert 1 <= m["num_partitions"] <= cfg.k_max
+    a = np.asarray(state.assignment)
+    act = np.asarray(state.active)
+    present = np.asarray(state.present)
+    assert (a[present] >= 0).all()
+    assert act[a[present]].all(), "vertex assigned to inactive partition"
+    assert (a[~present] == -1).all()
+    # vertex counts add up
+    assert int(np.asarray(state.vertex_count).sum()) == int(present.sum())
+
+    # 3. trace is consistent with the final state
+    assert int(np.asarray(trace.cut_edges)[-1]) == int(state.cut_edges)
+
+
+@given(random_graph(max_n=30), st.integers(2, 4), st.integers(0, 3))
+@settings(max_examples=15, deadline=None)
+def test_offline_partitioner_invariants(g, k, seed):
+    if g.n < k:
+        return
+    a = offline_partition(g, k, seed=seed)
+    assert a.shape == (g.n,)
+    assert a.min() >= 0 and a.max() < k
+    sizes = np.bincount(a, minlength=k)
+    # BFS-grow + FM keeps blocks within a generous 2× balance envelope
+    assert sizes.max() <= max(2 * g.n / k + 1, sizes.min() + g.n // 2)
+    assert 0 <= cut_of(g, a) <= g.num_edges
+
+
+@given(st.integers(0, 4), st.floats(10.0, 40.0), st.floats(1.0, 10.0))
+@settings(max_examples=10, deadline=None)
+def test_dynamic_schedule_protocol(seed, add_pct, del_pct):
+    """§5.3.1: every interval adds ~add% and deletes ~del% of |V|."""
+    g = make_graph("mesh", 60, 160, seed=seed)
+    s = gstream.dynamic_schedule(g, add_pct=add_pct, del_pct=del_pct,
+                                 n_intervals=3, seed=seed)
+    n_add = int(round(g.n * add_pct / 100))
+    n_del = int(round(g.n * del_pct / 100))
+    adds = int((s.etype == gstream.EVENT_ADD).sum())
+    dels = int((s.etype == gstream.EVENT_DEL_VERTEX).sum())
+    assert adds <= 3 * n_add
+    assert dels <= 3 * n_del
+    if n_add:
+        assert adds >= min(3 * n_add, g.n) - 2 * n_add  # cursor exhaustion ok
+    # no vertex deleted while absent
+    present: set = set()
+    for i in range(s.num_events):
+        if s.etype[i] == gstream.EVENT_ADD:
+            present.add(int(s.vertex[i]))
+        elif s.etype[i] == gstream.EVENT_DEL_VERTEX:
+            assert int(s.vertex[i]) in present
+            present.discard(int(s.vertex[i]))

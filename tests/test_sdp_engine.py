@@ -1,0 +1,147 @@
+"""Faithful engine vs the dict/set oracle (paper Algorithm 1 semantics)."""
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, run_reference, run_stream,
+                        recompute_counters, state_metrics)
+from repro.graph.datasets import load_dataset
+from repro.graph.generators import make_graph
+from repro.graph import stream as gstream
+
+
+def _assert_match(state, ref):
+    """JAX engine state must match the oracle exactly."""
+    n = state.assignment.shape[0]
+    a = np.asarray(state.assignment)
+    for v in range(n):
+        if v in ref.assignment:
+            assert a[v] == ref.assignment[v], f"vertex {v}"
+        else:
+            assert a[v] == -1, f"vertex {v} should be absent"
+    np.testing.assert_array_equal(np.asarray(state.edge_load), ref.edge_load)
+    np.testing.assert_array_equal(np.asarray(state.vertex_count),
+                                  ref.vertex_count)
+    np.testing.assert_array_equal(np.asarray(state.active), ref.active)
+    assert int(state.total_edges) == ref.total_edges
+    assert int(state.cut_edges) == ref.cut_edges
+    assert int(state.num_partitions) == ref.num_partitions
+    assert int(state.denied_scaleout) == ref.denied
+    assert int(state.scale_events) == ref.scale_events
+
+
+CASES = [
+    ("sdp", EngineConfig(k_max=8, k_init=1, max_cap=150)),
+    ("sdp", EngineConfig(k_max=4, k_init=2, max_cap=80,
+                         balance_guard="alg1")),
+    ("sdp", EngineConfig(k_max=8, k_init=1, max_cap=10**9)),  # no scaling
+    ("greedy", EngineConfig(k_max=6, k_init=4, autoscale=False)),
+    ("ldg", EngineConfig(k_max=6, k_init=4, autoscale=False)),
+    ("fennel", EngineConfig(k_max=6, k_init=4, autoscale=False)),
+    ("hash", EngineConfig(k_max=6, k_init=3, autoscale=False)),
+    ("random", EngineConfig(k_max=6, k_init=3, autoscale=False)),
+]
+
+
+@pytest.mark.parametrize("policy,cfg", CASES)
+def test_engine_matches_oracle_static(policy, cfg):
+    g = make_graph("mesh", 120, 350, seed=1)
+    s = gstream.build_stream(g, seed=2)
+    state, _ = run_stream(s, policy=policy, cfg=cfg, seed=3)
+    ref = run_reference(s, policy=policy, cfg=cfg, seed=3)
+    _assert_match(state, ref)
+
+
+@pytest.mark.parametrize("policy,cfg", CASES[:3])
+def test_engine_matches_oracle_dynamic(policy, cfg):
+    """Add/delete protocol (§5.3.1) including vertex+edge deletions."""
+    g = make_graph("social", 90, 260, seed=4)
+    s = gstream.dynamic_schedule(g, n_intervals=4, seed=5,
+                                 del_edges_per_interval=5)
+    state, _ = run_stream(s, policy=policy, cfg=cfg, seed=6)
+    ref = run_reference(s, policy=policy, cfg=cfg, seed=6)
+    _assert_match(state, ref)
+
+
+def test_counters_match_recompute():
+    """Incremental counters == from-scratch recomputation (Eq. 9/10)."""
+    g = load_dataset("grqc", scale=0.05)
+    s = gstream.dynamic_schedule(g, n_intervals=3, seed=0)
+    cfg = EngineConfig(k_max=8, k_init=1, max_cap=120)
+    state, _ = run_stream(s, policy="sdp", cfg=cfg)
+    rec = recompute_counters(np.asarray(state.assignment),
+                             np.asarray(state.present),
+                             np.asarray(state.adj), cfg.k_max)
+    assert int(state.total_edges) == rec["total_edges"]
+    assert int(state.cut_edges) == rec["cut_edges"]
+    np.testing.assert_array_equal(np.asarray(state.edge_load),
+                                  rec["edge_load"])
+    np.testing.assert_array_equal(np.asarray(state.vertex_count),
+                                  rec["vertex_count"])
+
+
+def test_scale_out_triggers():
+    """Eq. 5: small MAXCAP forces extra partitions."""
+    g = make_graph("mesh", 150, 400, seed=0)
+    s = gstream.build_stream(g, seed=0)
+    small, _ = run_stream(s, policy="sdp",
+                          cfg=EngineConfig(k_max=8, k_init=1, max_cap=60))
+    big, _ = run_stream(s, policy="sdp",
+                        cfg=EngineConfig(k_max=8, k_init=1, max_cap=10**9))
+    assert int(small.num_partitions) > int(big.num_partitions) == 1
+    assert int(small.scale_events) > 0
+
+
+def test_scale_in_merges_partitions():
+    """Deleting most vertices should trigger §4.2.3 scale-in migration."""
+    g = make_graph("mesh", 100, 300, seed=1)
+    add = gstream.build_stream(g, seed=1)
+    rng = np.random.default_rng(2)
+    present = np.asarray(add.vertex)
+    dels = rng.choice(present, size=int(0.9 * present.size), replace=False)
+    del_stream = gstream.VertexStream(
+        etype=np.full(dels.size, gstream.EVENT_DEL_VERTEX, np.int32),
+        vertex=dels.astype(np.int32),
+        nbrs=-np.ones((dels.size, add.max_deg), np.int32),
+        n=add.n)
+    s = gstream.concat_streams([add, del_stream])
+    cfg = EngineConfig(k_max=8, k_init=1, max_cap=60,
+                       tolerance_param=60.0, dest_param=5.0)
+    state, trace = run_stream(s, policy="sdp", cfg=cfg)
+    peak = int(np.asarray(trace.num_partitions).max())
+    assert int(state.num_partitions) < peak, "scale-in never fired"
+
+
+def test_sdp_beats_hash_on_edge_cut():
+    """Directional claim from the paper: SDP ≪ hash/random edge-cut."""
+    g = load_dataset("3elt", scale=0.2)
+    s = gstream.build_stream(g, seed=0)
+    cfg = EngineConfig(k_max=4, k_init=4, autoscale=False)
+    cuts = {}
+    for pol in ("sdp", "hash"):
+        st, _ = run_stream(s, policy=pol, cfg=cfg)
+        cuts[pol] = state_metrics(st)["edge_cut_ratio"]
+    assert cuts["sdp"] < 0.5 * cuts["hash"]
+
+
+def test_duplicate_add_ignored():
+    g = make_graph("mesh", 30, 80, seed=0)
+    s1 = gstream.build_stream(g, seed=0)
+    dup = gstream.concat_streams([s1, s1])  # every vertex added twice
+    cfg = EngineConfig(k_max=4, k_init=2, autoscale=False)
+    st1, _ = run_stream(s1, policy="greedy", cfg=cfg)
+    st2, _ = run_stream(dup, policy="greedy", cfg=cfg)
+    np.testing.assert_array_equal(np.asarray(st1.assignment),
+                                  np.asarray(st2.assignment))
+    assert int(st1.total_edges) == int(st2.total_edges)
+
+
+def test_chunked_run_equals_single_shot():
+    """run_stream(chunk=...) must be resumable without drift."""
+    g = make_graph("mesh", 80, 220, seed=3)
+    s = gstream.build_stream(g, seed=3)
+    cfg = EngineConfig(k_max=4, k_init=1, max_cap=100)
+    a, _ = run_stream(s, policy="sdp", cfg=cfg)
+    b, _ = run_stream(s, policy="sdp", cfg=cfg, chunk=17)
+    np.testing.assert_array_equal(np.asarray(a.assignment),
+                                  np.asarray(b.assignment))
+    assert int(a.cut_edges) == int(b.cut_edges)
