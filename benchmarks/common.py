@@ -10,6 +10,7 @@ import json
 import os
 import time
 
+import jax
 import numpy as np
 
 from repro.core import EngineConfig, run_stream, state_metrics, trace_at
@@ -56,6 +57,7 @@ def save_rows(name: str, rows: list[dict]):
 def timed(fn, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)
+    jax.block_until_ready(out)  # async dispatch would under-report
     return out, time.perf_counter() - t0
 
 
@@ -67,3 +69,23 @@ def run_policy_stream(stream, policy, cfg, seed=0):
     m["seconds"] = dt
     m["events_per_s"] = stream.num_events / max(dt, 1e-9)
     return state, trace, m
+
+
+def run_sweep_rows(stream, runs):
+    """All (policy × seed × config) lanes in ONE vmapped device program
+    (repro.runtime.sweep) instead of a host loop re-scanning the stream
+    per run. Returns [(state, trace, metrics), ...] in lane order;
+    ``seconds`` is the amortised per-lane wall-clock."""
+    from repro.runtime.sweep import run_sweep
+    results, dt = timed(run_sweep, stream, runs)
+    out = []
+    for r in results:
+        m = state_metrics(r.state)
+        m["policy"] = r.policy
+        m["seconds"] = dt / max(len(results), 1)
+        m["sweep_seconds"] = dt
+        m["sweep_lanes"] = len(results)
+        m["events_per_s"] = (stream.num_events * len(results)
+                             / max(dt, 1e-9))
+        out.append((r.state, r.trace, m))
+    return out

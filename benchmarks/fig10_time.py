@@ -1,15 +1,37 @@
 """Paper Fig. 10: execution time. Compares the paper-faithful scan engine,
 the windowed TPU engine (beyond-paper), the windowed+Pallas-kernel path,
-and the pure-Python oracle (the paper's Java-artifact analogue)."""
+and the pure-Python oracle (the paper's Java-artifact analogue).
+
+Also benchmarks the mixed-event window engine on a delete-heavy
+*interleaved* churn stream — the regime where the legacy driver split
+windows at every deletion boundary and degenerated to window-size-1
+chunks — and writes the comparison to BENCH_mixed_window.json.
+"""
 from __future__ import annotations
 
 import time
+
+import jax
 
 from benchmarks import common as C
 from repro.core import run_reference, run_stream, run_stream_windowed
 from repro.graph import stream as gstream
 
 DATASETS = ("3elt", "grqc", "wiki-vote")
+CHURN_DATASETS = ("grqc",)
+
+
+def _time_engines(engines, num_events, extra):
+    rows = []
+    for name, fn in engines.items():
+        jax.block_until_ready(fn())  # warm compile
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        dt = time.perf_counter() - t0
+        rows.append({**extra, "engine": name, "seconds": dt,
+                     "events": num_events,
+                     "events_per_s": num_events / max(dt, 1e-9)})
+    return rows
 
 
 def run(quick: bool = True) -> list:
@@ -29,26 +51,51 @@ def run(quick: bool = True) -> list:
         }
         if not quick:
             engines.pop("python_oracle")  # O(minutes) at full scale
-        for name, fn in engines.items():
-            fn()  # warm compile
-            t0 = time.perf_counter()
-            fn()
-            dt = time.perf_counter() - t0
-            rows.append({"dataset": ds, "engine": name, "seconds": dt,
-                         "events": s.num_events,
-                         "events_per_s": s.num_events / max(dt, 1e-9)})
+        rows += _time_engines(engines, s.num_events,
+                              {"dataset": ds, "stream": "static"})
+
+    churn_rows = []
+    for ds in CHURN_DATASETS:
+        g = C.bench_graph(ds, quick)
+        cs = gstream.interleaved_churn(g, warmup_frac=0.2, del_every=3,
+                                       edge_del_every=5, seed=0)
+        cfg = C.default_cfg(k=4)
+        engines = {
+            "faithful_scan": lambda: run_stream(cs, policy="sdp", cfg=cfg),
+            "windowed_legacy": lambda: run_stream_windowed(
+                cs, policy="sdp", cfg=cfg, window=256, mixed=False),
+            "windowed_mixed": lambda: run_stream_windowed(
+                cs, policy="sdp", cfg=cfg, window=256),
+        }
+        churn_rows += _time_engines(engines, cs.num_events,
+                                    {"dataset": ds, "stream": "churn"})
+
+    rows += churn_rows
     C.save_rows("fig10_time", rows)
+    C.save_rows("BENCH_mixed_window", churn_rows)
     return rows
 
 
 def summarize(rows) -> list[str]:
     out = []
     for ds in DATASETS:
-        d = {r["engine"]: r for r in rows if r["dataset"] == ds}
+        d = {r["engine"]: r for r in rows
+             if r["dataset"] == ds and r.get("stream") == "static"}
         base = d.get("python_oracle") or d["faithful_scan"]
         win = d["windowed_256"]
         speed = base["seconds"] / max(win["seconds"], 1e-9)
         out.append(f"fig10/{ds},{win['seconds']*1e6/win['events']:.1f},"
                    f"windowed_speedup_vs_{'oracle' if 'python_oracle' in d else 'faithful'}={speed:.1f}x"
                    f";events_per_s={win['events_per_s']:.0f}")
+    for ds in CHURN_DATASETS:
+        d = {r["engine"]: r for r in rows
+             if r["dataset"] == ds and r.get("stream") == "churn"}
+        if not d:
+            continue
+        mixed = d["windowed_mixed"]
+        legacy = d["windowed_legacy"]
+        speed = legacy["seconds"] / max(mixed["seconds"], 1e-9)
+        out.append(f"fig10/churn/{ds},{mixed['seconds']:.3f},"
+                   f"mixed_vs_legacy_windowed={speed:.1f}x"
+                   f";events_per_s={mixed['events_per_s']:.0f}")
     return out

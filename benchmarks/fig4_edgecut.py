@@ -7,6 +7,7 @@ import numpy as np
 from benchmarks import common as C
 from repro.core import trace_at
 from repro.graph import stream as gstream
+from repro.runtime.sweep import SweepRun
 
 DATASETS = ("3elt", "grqc", "wiki-vote", "astroph")
 
@@ -19,13 +20,14 @@ def run(quick: bool = True) -> list:
         # capture at every 25% of the stream (paper protocol)
         t = s.num_events
         marks = [max(1, t * i // 4) for i in (1, 2, 3, 4)]
-        for policy in ("sdp",) + C.BASELINES:
-            cfg = C.default_cfg(k=4)
-            _, trace, m = C.run_policy_stream(s, policy, cfg)
+        # all policies in one vmapped device program
+        runs = [SweepRun(policy, C.default_cfg(k=4))
+                for policy in ("sdp",) + C.BASELINES]
+        for (_, trace, m) in C.run_sweep_rows(s, runs):
             at = trace_at(trace, marks)
             for frac, ratio in zip((25, 50, 75, 100),
                                    at["edge_cut_ratio"]):
-                rows.append({"dataset": ds, "policy": policy,
+                rows.append({"dataset": ds, "policy": m["policy"],
                              "pct_streamed": frac,
                              "edge_cut_ratio": float(ratio),
                              "seconds": m["seconds"]})

@@ -5,6 +5,7 @@ from __future__ import annotations
 from benchmarks import common as C
 from repro.core import trace_at
 from repro.graph import stream as gstream
+from repro.runtime.sweep import SweepRun
 
 DATASETS = ("email-enron", "grqc", "3elt", "wiki-vote")
 
@@ -16,8 +17,8 @@ def run(quick: bool = True) -> list:
         s = gstream.dynamic_schedule(g, add_pct=25.0, del_pct=5.0,
                                      n_intervals=4, seed=0,
                                      del_edges_per_interval=10)
-        cfg = C.default_cfg(k=4)
-        _, trace, m = C.run_policy_stream(s, "sdp", cfg)
+        (_, trace, m), = C.run_sweep_rows(
+            s, [SweepRun("sdp", C.default_cfg(k=4))])
         at = trace_at(trace, s.intervals)
         for i, (ratio, tot) in enumerate(zip(at["edge_cut_ratio"],
                                              at["total_edges"])):

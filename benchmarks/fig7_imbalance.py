@@ -1,9 +1,12 @@
 """Paper Fig. 7: load-imbalance (Eq. 10, normalised) comparison."""
 from __future__ import annotations
 
+import numpy as np
+
 from benchmarks import common as C
 from repro.core import normalized_load_imbalance
 from repro.graph import stream as gstream
+from repro.runtime.sweep import SweepRun
 
 DATASETS = ("3elt", "grqc", "wiki-vote", "astroph", "email-enron")
 
@@ -13,12 +16,12 @@ def run(quick: bool = True) -> list:
     for ds in DATASETS:
         g = C.bench_graph(ds, quick)
         s = gstream.dynamic_schedule(g, n_intervals=4, seed=0)
-        for policy in ("sdp",) + C.BASELINES:
-            st, _, m = C.run_policy_stream(s, policy, C.default_cfg(k=4))
-            import numpy as np
+        runs = [SweepRun(policy, C.default_cfg(k=4))
+                for policy in ("sdp",) + C.BASELINES]
+        for (st, _, m) in C.run_sweep_rows(s, runs):
             imb = normalized_load_imbalance(np.asarray(st.edge_load),
                                             np.asarray(st.active))
-            rows.append({"dataset": ds, "policy": policy,
+            rows.append({"dataset": ds, "policy": m["policy"],
                          "norm_load_imbalance": imb,
                          "load_imbalance": m["load_imbalance"],
                          "seconds": m["seconds"]})

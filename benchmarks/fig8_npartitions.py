@@ -4,6 +4,7 @@ from __future__ import annotations
 
 from benchmarks import common as C
 from repro.graph import stream as gstream
+from repro.runtime.sweep import SweepRun
 
 DATASETS = ("3elt", "grqc")
 KS = (2, 4, 8, 16)
@@ -14,8 +15,9 @@ def run(quick: bool = True) -> list:
     for ds in DATASETS:
         g = C.bench_graph(ds, quick)
         s = gstream.build_stream(g, seed=0)
-        for k in KS:
-            _, _, m = C.run_policy_stream(s, "sdp", C.default_cfg(k=k))
+        # one vmapped program sweeps every k (k_init varies, k_max shared)
+        runs = [SweepRun("sdp", C.default_cfg(k=k)) for k in KS]
+        for k, (_, _, m) in zip(KS, C.run_sweep_rows(s, runs)):
             rows.append({"dataset": ds, "k": k,
                          "edge_cut_ratio": m["edge_cut_ratio"],
                          "seconds": m["seconds"]})

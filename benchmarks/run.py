@@ -5,6 +5,13 @@
 Prints ``name,value,derived`` CSV per row-group and writes JSON artifacts
 to artifacts/bench/. The roofline table additionally needs dry-run
 artifacts (repro.launch.dryrun --all).
+
+Policy/config comparisons (fig4/6/7/8) run through the vmapped sweep
+runtime (repro.runtime.sweep): all lanes of a comparison execute as ONE
+jitted device program instead of a host loop re-scanning the stream per
+policy. fig10 additionally times the mixed-event window engine against
+the legacy delete-splitting driver on an interleaved churn stream and
+writes BENCH_mixed_window.json.
 """
 from __future__ import annotations
 
@@ -43,6 +50,8 @@ def main() -> int:
             print(f"#{name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
+            import traceback
+            traceback.print_exc()
             print(f"{name},ERROR,{type(e).__name__}:{e}", flush=True)
     return 1 if failures else 0
 

@@ -2,7 +2,9 @@
 from repro.core.config import EngineConfig, POLICIES
 from repro.core.state import PartitionState, init_state, state_metrics
 from repro.core.engine import run_events, run_stream, trace_at, EventTrace
-from repro.core.windowed import run_stream_windowed, run_window_adds
+from repro.core.windowed import (
+    run_stream_windowed, run_window_adds, run_window_mixed,
+)
 from repro.core.metrics import (
     recompute_counters, edge_cut_ratio, load_imbalance,
     normalized_load_imbalance,
@@ -13,7 +15,7 @@ from repro.core.ref import run_reference
 __all__ = [
     "EngineConfig", "POLICIES", "PartitionState", "init_state", "state_metrics",
     "run_events", "run_stream", "trace_at", "EventTrace",
-    "run_stream_windowed", "run_window_adds",
+    "run_stream_windowed", "run_window_adds", "run_window_mixed",
     "recompute_counters", "edge_cut_ratio", "load_imbalance",
     "normalized_load_imbalance", "offline_partition", "cut_of", "run_reference",
 ]

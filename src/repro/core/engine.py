@@ -19,11 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.config import EngineConfig
+from repro.core.config import EngineConfig, POLICIES
 from repro.core.state import PartitionState, init_state
-from repro.graph.stream import (
-    EVENT_ADD, EVENT_DEL_EDGE, EVENT_DEL_VERTEX, VertexStream,
-)
+from repro.graph.stream import VertexStream
 
 _BIG = jnp.int32(2**30)
 
@@ -34,6 +32,47 @@ class EventTrace(NamedTuple):
     cut_edges: jax.Array
     num_partitions: jax.Array
     load_std: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# engine knobs
+# ---------------------------------------------------------------------------
+
+class Knobs(NamedTuple):
+    """Numeric policy/scaling knobs derived from EngineConfig on the host.
+
+    All Python-level arithmetic (products, percentages) happens in
+    ``make_knobs`` so that the static path (fields are weak Python scalars,
+    embedded as f32 constants at trace time) and the dynamic sweep path
+    (fields are traced f32 scalars, see repro.runtime.sweep) perform
+    bit-identical f32 operations.
+    """
+    max_cap: jax.Array | float            # Eq. 5 MAXCAP
+    scale_in_l: jax.Array | float         # Eq. 6 l = tolerance*MAXCAP/100
+    scale_in_dest: jax.Array | float      # Eq. 7 destinationThreshold
+    ldg_cap_num: jax.Array | float        # ldg_slack * n (cap = this / k)
+    fennel_gamma: jax.Array | float
+    fennel_gm1: jax.Array | float         # gamma - 1
+    fennel_alpha_scale: jax.Array | float
+
+
+def make_knobs(cfg: EngineConfig, n: int) -> Knobs:
+    """Host-side knob derivation shared by every engine path."""
+    return Knobs(
+        max_cap=cfg.max_cap,
+        scale_in_l=cfg.tolerance_param * cfg.max_cap / 100.0,
+        scale_in_dest=cfg.max_cap - cfg.dest_param * cfg.max_cap / 100.0,
+        ldg_cap_num=cfg.ldg_slack * n,
+        fennel_gamma=cfg.fennel_gamma,
+        fennel_gm1=cfg.fennel_gamma - 1.0,
+        fennel_alpha_scale=cfg.fennel_alpha_scale,
+    )
+
+
+def knobs_arrays(cfg: EngineConfig, n: int) -> Knobs:
+    """Knobs as f32 scalars — the traced/vmapped form for the sweep runtime."""
+    kn = make_knobs(cfg, n)
+    return Knobs(*(jnp.float32(x) for x in kn))
 
 
 # ---------------------------------------------------------------------------
@@ -95,26 +134,35 @@ def _affinity_choice(state: PartitionState, scores: jax.Array, key: jax.Array):
     return jnp.where(best > 0, p_tie, p_rand)
 
 
-def _choose_sdp(state, scores, deg, v, key, cfg: EngineConfig, n: int):
-    """§4.2.2 communication-aware balance guard wrapped around Alg. 3."""
+def _sdp_guard_inputs(state):
     avg_d, load_dev = load_stats(state)
     cut = jnp.maximum(state.cut_edges.astype(jnp.float32), 1.0)
     w_dev = (state.total_edges.astype(jnp.float32) / cut) * load_dev  # Eq. 4
     th = w_dev - load_dev                                             # Eq. 3
+    return avg_d, load_dev, th
+
+
+def _choose_sdp_text(state, scores, deg, v, key, kn: Knobs, n: int):
+    """§4.2.2 text semantics: imbalance (AVG_d > TH) ⇒ least-loaded."""
+    avg_d, _, th = _sdp_guard_inputs(state)
     p_min = masked_argmin(state.edge_load, state.active)
     p_aff = _affinity_choice(state, scores, key)
-    multi = state.num_partitions > 1
-    if cfg.balance_guard == "text":
-        guard = multi & (avg_d > th)          # §4.2.2: imbalance ⇒ least-loaded
-        return jnp.where(guard, p_min, p_aff)
-    sigma = load_dev                          # Alg. 1 listing: σ > TH ⇒ affinity
-    guard = multi & (sigma > th)
+    guard = (state.num_partitions > 1) & (avg_d > th)
+    return jnp.where(guard, p_min, p_aff)
+
+
+def _choose_sdp_alg1(state, scores, deg, v, key, kn: Knobs, n: int):
+    """Alg. 1 listing semantics: σ > TH ⇒ affinity path, else least-loaded."""
+    _, load_dev, th = _sdp_guard_inputs(state)
+    p_min = masked_argmin(state.edge_load, state.active)
+    p_aff = _affinity_choice(state, scores, key)
+    guard = (state.num_partitions > 1) & (load_dev > th)
     return jnp.where(guard, p_aff, p_min)
 
 
-def _choose_ldg(state, scores, deg, v, key, cfg: EngineConfig, n: int):
+def _choose_ldg(state, scores, deg, v, key, kn: Knobs, n: int):
     k = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
-    cap = cfg.ldg_slack * n / k
+    cap = kn.ldg_cap_num / k
     w = 1.0 - state.vertex_count.astype(jnp.float32) / cap
     h = scores.astype(jnp.float32) * jnp.maximum(w, 0.0)
     h = jnp.where(state.active, h, -jnp.inf)
@@ -123,52 +171,53 @@ def _choose_ldg(state, scores, deg, v, key, cfg: EngineConfig, n: int):
     return masked_argmin(state.vertex_count, tied)
 
 
-def _choose_fennel(state, scores, deg, v, key, cfg: EngineConfig, n: int):
-    g = cfg.fennel_gamma
+def _choose_fennel(state, scores, deg, v, key, kn: Knobs, n: int):
     m = state.total_edges.astype(jnp.float32) + deg.astype(jnp.float32)
     nt = jnp.maximum(jnp.sum(state.vertex_count).astype(jnp.float32), 1.0)
     k = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
-    alpha = cfg.fennel_alpha_scale * jnp.sqrt(k) * m / (nt**1.5)
-    cost = alpha * g * state.vertex_count.astype(jnp.float32) ** (g - 1.0)
+    alpha = kn.fennel_alpha_scale * jnp.sqrt(k) * m / (nt**1.5)
+    cost = alpha * kn.fennel_gamma * \
+        state.vertex_count.astype(jnp.float32) ** kn.fennel_gm1
     h = jnp.where(state.active, scores.astype(jnp.float32) - cost, -jnp.inf)
     best = jnp.max(h)
     tied = state.active & (h >= best - 1e-6)
     return masked_argmin(state.vertex_count, tied)
 
 
-def _choose_hash(state, scores, deg, v, key, cfg: EngineConfig, n: int):
+def _choose_hash(state, scores, deg, v, key, kn: Knobs, n: int):
     idx = jnp.mod(v, jnp.maximum(state.num_partitions, 1))
     return nth_active(state.active, idx)
 
 
-def _choose_random(state, scores, deg, v, key, cfg: EngineConfig, n: int):
+def _choose_random(state, scores, deg, v, key, kn: Knobs, n: int):
     idx = jax.random.randint(key, (), 0, jnp.maximum(state.num_partitions, 1))
     return nth_active(state.active, idx)
 
 
-def _choose_greedy(state, scores, deg, v, key, cfg: EngineConfig, n: int):
+def _choose_greedy(state, scores, deg, v, key, kn: Knobs, n: int):
     return _affinity_choice(state, scores, key)
 
 
-_POLICY_FNS = {
-    "sdp": _choose_sdp,
-    "ldg": _choose_ldg,
-    "fennel": _choose_fennel,
-    "hash": _choose_hash,
-    "random": _choose_random,
-    "greedy": _choose_greedy,
-}
+POLICY_INDEX = {p: i for i, p in enumerate(POLICIES)}
+
+
+def policy_fns(balance_guard: str):
+    """Policy table in POLICIES order — indexable by POLICY_INDEX for the
+    static engines or by a traced lax.switch index in the sweep runtime."""
+    sdp = _choose_sdp_text if balance_guard == "text" else _choose_sdp_alg1
+    return (sdp, _choose_ldg, _choose_fennel, _choose_hash, _choose_random,
+            _choose_greedy)
 
 
 # ---------------------------------------------------------------------------
 # scaling (§4.2.3)
 # ---------------------------------------------------------------------------
 
-def scale_out(state: PartitionState, cfg: EngineConfig) -> PartitionState:
+def scale_out(state: PartitionState, kn: Knobs) -> PartitionState:
     """Eq. 5: if MAXCAP ≤ |E|/|P|, activate one more partition."""
     p = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
     adding_threshold = state.total_edges.astype(jnp.float32) / p
-    want = cfg.max_cap <= adding_threshold
+    want = kn.max_cap <= adding_threshold
     slot_free = ~jnp.all(state.active)
     do = want & slot_free
     slot = jnp.argmax(~state.active).astype(jnp.int32)  # first inactive slot
@@ -190,18 +239,24 @@ def _recompute_cut(assignment, present, adj) -> jax.Array:
     return (jnp.sum(both & diff, dtype=jnp.int32) // 2).astype(jnp.int32)
 
 
-def scale_in(state: PartitionState, cfg: EngineConfig) -> PartitionState:
+def scale_in_trigger(small, kn: Knobs):
+    """Eqs. 6–8 trigger: (src, dst, do). `small` is any state carrying
+    active/edge_load/num_partitions — shared with the windowed journal."""
+    under = small.active & (small.edge_load.astype(jnp.float32) < kn.scale_in_l)
+    n_under = jnp.sum(under, dtype=jnp.int32)
+    src = masked_argmin(small.edge_load, small.active)
+    mask2 = small.active.at[src].set(False)
+    dst = masked_argmin(small.edge_load, mask2)
+    fits = (small.edge_load[src] + small.edge_load[dst]).astype(
+        jnp.float32) <= kn.scale_in_dest
+    do = (small.num_partitions > 1) & (n_under >= 2) & fits
+    return src, dst, do
+
+
+def scale_in(state: PartitionState, kn: Knobs) -> PartitionState:
     """Eqs. 6–8: if ≥2 machines under l, migrate min-load machine into the
     next-least-loaded one (if it fits under destinationThreshold)."""
-    l = cfg.tolerance_param * cfg.max_cap / 100.0
-    dest_threshold = cfg.max_cap - cfg.dest_param * cfg.max_cap / 100.0
-    under = state.active & (state.edge_load.astype(jnp.float32) < l)
-    n_under = jnp.sum(under, dtype=jnp.int32)
-    src = masked_argmin(state.edge_load, state.active)
-    mask2 = state.active.at[src].set(False)
-    dst = masked_argmin(state.edge_load, mask2)
-    fits = (state.edge_load[src] + state.edge_load[dst]).astype(jnp.float32) <= dest_threshold
-    do = (state.num_partitions > 1) & (n_under >= 2) & fits
+    src, dst, do = scale_in_trigger(state, kn)
 
     def migrate(s: PartitionState) -> PartitionState:
         assignment = jnp.where(s.assignment == src, dst, s.assignment)
@@ -223,19 +278,22 @@ def scale_in(state: PartitionState, cfg: EngineConfig) -> PartitionState:
 # event branches
 # ---------------------------------------------------------------------------
 
-def _apply_add(state: PartitionState, v, row, key, policy: str, cfg: EngineConfig):
-    if policy == "sdp" and cfg.autoscale:
-        state = scale_out(state, cfg)
-    scores, deg, nb_present, safe_row = neighbor_stats(state, row)
+def _commit_add(state: PartitionState, v, row, p, scores, deg):
+    """Apply an ADD decision (partition p, scores vs current presence).
+    Shared by the faithful, mixed-window, and sweep engines.
+
+    Non-fresh (duplicate) adds scatter to the out-of-bounds row n, which
+    drop-mode scatters skip — cheaper inside a scan than a full-array
+    select, and identical values."""
     n = state.assignment.shape[0]
-    p = _POLICY_FNS[policy](state, scores, deg, v, key, cfg, n)
     fresh = ~state.present[v]  # ignore duplicate adds
+    tgt = jnp.where(fresh, v, n)
     d = jnp.where(fresh, deg, 0)
     sc = jnp.where(fresh, scores, 0)
     return state._replace(
-        assignment=jnp.where(fresh, state.assignment.at[v].set(p), state.assignment),
+        assignment=state.assignment.at[tgt].set(p, mode="drop"),
         present=state.present.at[v].set(True),
-        adj=jnp.where(fresh, state.adj.at[v].set(row), state.adj),
+        adj=state.adj.at[tgt].set(row, mode="drop"),
         vertex_count=state.vertex_count.at[p].add(fresh.astype(jnp.int32)),
         edge_load=(state.edge_load + sc).at[p].add(d),
         total_edges=state.total_edges + d,
@@ -243,27 +301,46 @@ def _apply_add(state: PartitionState, v, row, key, policy: str, cfg: EngineConfi
     )
 
 
-def _apply_del_vertex(state: PartitionState, v, row, key, policy: str, cfg: EngineConfig):
+def _apply_add(state: PartitionState, v, row, key, policy: str, cfg: EngineConfig):
+    n = state.assignment.shape[0]
+    kn = make_knobs(cfg, n)
+    if policy == "sdp" and cfg.autoscale:
+        state = scale_out(state, kn)
+    scores, deg, _, _ = neighbor_stats(state, row)
+    choose = policy_fns(cfg.balance_guard)[POLICY_INDEX[policy]]
+    p = choose(state, scores, deg, v, key, kn, n)
+    return _commit_add(state, v, row, p, scores, deg)
+
+
+def _del_vertex_core(state: PartitionState, v):
+    """Remove vertex v and its incident edges (no scale-in)."""
+    n = state.assignment.shape[0]
     was = state.present[v]
     own_row = state.adj[v]
     scores, deg, _, _ = neighbor_stats(state, own_row)
     p = jnp.maximum(state.assignment[v], 0)
     d = jnp.where(was, deg, 0)
     sc = jnp.where(was, scores, 0)
-    state = state._replace(
-        assignment=jnp.where(was, state.assignment.at[v].set(-1), state.assignment),
+    return state._replace(
+        assignment=state.assignment.at[jnp.where(was, v, n)].set(
+            -1, mode="drop"),
         present=state.present.at[v].set(False),
         vertex_count=state.vertex_count.at[p].add(-was.astype(jnp.int32)),
         edge_load=(state.edge_load - sc).at[p].add(-d),
         total_edges=state.total_edges - d,
         cut_edges=state.cut_edges - (d - sc[p]),
     )
+
+
+def _apply_del_vertex(state: PartitionState, v, row, key, policy: str, cfg: EngineConfig):
+    state = _del_vertex_core(state, v)
     if policy == "sdp" and cfg.autoscale:
-        state = scale_in(state, cfg)
+        state = scale_in(state, make_knobs(cfg, state.assignment.shape[0]))
     return state
 
 
-def _apply_del_edge(state: PartitionState, v, row, key, policy: str, cfg: EngineConfig):
+def _del_edge_core(state: PartitionState, v, row):
+    """Remove edge (v, row[0]) if it exists (no config dependence)."""
     u = row[0]
     safe_u = jnp.maximum(u, 0)
     in_adj = jnp.any(state.adj[v] == u) & (u >= 0)
@@ -272,14 +349,22 @@ def _apply_del_edge(state: PartitionState, v, row, key, policy: str, cfg: Engine
     pu = jnp.maximum(state.assignment[safe_u], 0)
     e = exists.astype(jnp.int32)
     cutdec = (exists & (pv != pu)).astype(jnp.int32)
-    adj = state.adj.at[v].set(jnp.where(state.adj[v] == u, -1, state.adj[v]))
-    adj = adj.at[safe_u].set(jnp.where(adj[safe_u] == v, -1, adj[safe_u]))
+    # row-wise edits only (u < 0 rewrites the rows with themselves) — a
+    # full-array select here is a per-event O(n·max_deg) copy in the scan
+    row_v = jnp.where((state.adj[v] == u) & (u >= 0), -1, state.adj[v])
+    adj = state.adj.at[v].set(row_v)
+    row_u = jnp.where((adj[safe_u] == v) & (u >= 0), -1, adj[safe_u])
+    adj = adj.at[safe_u].set(row_u)
     return state._replace(
-        adj=jnp.where(u >= 0, adj, state.adj),
+        adj=adj,
         edge_load=state.edge_load.at[pv].add(-e).at[pu].add(-e),
         total_edges=state.total_edges - e,
         cut_edges=state.cut_edges - cutdec,
     )
+
+
+def _apply_del_edge(state: PartitionState, v, row, key, policy: str, cfg: EngineConfig):
+    return _del_edge_core(state, v, row)
 
 
 def _apply_pad(state, v, row, key, policy, cfg):

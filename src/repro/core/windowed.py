@@ -2,7 +2,7 @@
 
 The paper assigns strictly one vertex at a time; that serialises the hot
 affinity gather and starves the VPU/MXU. This engine processes a *window*
-of W arriving vertices per device step:
+of W arriving events per device step:
 
   1. committed scores (W, K) — one batched gather+one-hot-histogram against
      the state as of window start (the `partition_affinity` Pallas kernel);
@@ -11,14 +11,27 @@ of W arriving vertices per device step:
      cut / scaling counters.
 
 The decomposition is exact: for window vertex i, the faithful engine's
-score is (committed neighbours) + (window neighbours assigned before i),
-which is precisely scores_committed[i] + the fixup increment. RNG uses the
-same fold_in(base_key, global_event_index) scheme, so the windowed engine
-is **bit-identical** to repro.core.engine — verified by tests — while the
-O(W·max_deg·K) work is batched.
+score is (committed neighbours) + (window neighbours whose presence or
+label changed before i), which is precisely scores_committed[i] plus the
+fixup increment. RNG uses the same fold_in(base_key, global_event_index)
+scheme, so the windowed engine is **bit-identical** to repro.core.engine —
+verified by tests — while the O(W·max_deg·K) work is batched.
 
-Deletion events are processed through the faithful branch (they are rare
-and O(max_deg)); windows are split at deletion boundaries.
+Two window kernels exist:
+
+* ``run_window_adds`` — ADD-only windows, carries just the O(K) counter
+  slice through the fixup scan (the fast path for insert-only streams);
+* ``run_window_mixed`` — arbitrary interleavings of ADD / DEL_VERTEX /
+  DEL_EDGE processed entirely on device. ADD slots keep the batched
+  committed-score decomposition; a per-slot label journal (``cur_label``)
+  plus a precomputed last-touch map corrects each ADD's scores for
+  neighbours whose presence changed earlier in the same window, and the
+  DEL branches reuse the faithful engine's deletion semantics verbatim.
+
+The host driver slices the stream into *fixed* windows — deletion events
+no longer split windows, so delete-heavy churn streams (the paper's
+real-time regime) keep the batched fast path instead of degenerating into
+window-size-1 chunks.
 """
 from __future__ import annotations
 
@@ -32,7 +45,9 @@ import numpy as np
 from repro.core import engine as eng
 from repro.core.config import EngineConfig
 from repro.core.state import PartitionState, init_state
-from repro.graph.stream import EVENT_ADD, VertexStream
+from repro.graph.stream import (
+    EVENT_ADD, EVENT_DEL_EDGE, EVENT_DEL_VERTEX, EVENT_PAD, VertexStream,
+)
 
 
 class SmallState(NamedTuple):
@@ -60,7 +75,9 @@ def committed_scores(state: PartitionState, rows: jax.Array):
 
     This is the reference (jnp) path; `repro.kernels.partition_affinity`
     provides the Pallas TPU kernel with identical semantics (swap via
-    ``use_kernel=True`` in run_stream_windowed).
+    ``use_kernel=True`` in run_stream_windowed). Tolerates committed
+    states with deletion holes: absent neighbours (present=False) score
+    as empty regardless of their stale assignment entries.
     """
     valid = rows >= 0
     safe = jnp.where(valid, rows, 0)
@@ -89,6 +106,8 @@ def run_window_adds(
     w = vs.shape[0]
     k_max = state.edge_load.shape[0]
     base_key = state.key
+    kn = eng.make_knobs(cfg, n)
+    choose = eng.policy_fns(cfg.balance_guard)[eng.POLICY_INDEX[policy]]
     is_add = vs >= 0
     safe_vs = jnp.where(is_add, vs, 0)
 
@@ -108,14 +127,14 @@ def run_window_adds(
         if policy == "sdp" and cfg.autoscale:
             # faithful engine scales out per ADD event only (pads skip it)
             small = jax.lax.cond(
-                is_add[i], lambda s: eng.scale_out(s, cfg), lambda s: s, small
+                is_add[i], lambda s: eng.scale_out(s, kn), lambda s: s, small
             )
         intra = (win_pos[i] >= 0) & (win_pos[i] < i)
         nb_wa = jnp.where(intra, w_assign[jnp.where(intra, win_pos[i], 0)], -1)
         onehot = nb_wa[:, None] == jnp.arange(k_max, dtype=jnp.int32)
         sc = scores_c[i] + jnp.sum(onehot, axis=0, dtype=jnp.int32)
         deg = deg_c[i] + jnp.sum(intra, dtype=jnp.int32)
-        p = eng._POLICY_FNS[policy](small, sc, deg, safe_vs[i], key, cfg, n)
+        p = choose(small, sc, deg, safe_vs[i], key, kn, n)
         do = is_add[i] & ~state.present[safe_vs[i]]
         d = jnp.where(do, deg, 0)
         scm = jnp.where(do, sc, 0)
@@ -154,6 +173,189 @@ def run_window_adds(
     )
 
 
+def _scale_in_journal(small: SmallState, label_now, adj, kn):
+    """engine.scale_in (§4.2.3, Eqs. 6–8) on the window-local journal
+    representation (label_now ≡ assignment, label_now >= 0 ≡ present).
+    The trigger is shared with the faithful engine so the two cannot
+    drift; only the migrate body differs (journal instead of state)."""
+    src, dst, do = eng.scale_in_trigger(small, kn)
+
+    def migrate(args):
+        sm, ln = args
+        ln2 = jnp.where(ln == src, dst, ln)
+        cut = eng._recompute_cut(ln2, ln2 >= 0, adj)
+        sm2 = sm._replace(
+            edge_load=sm.edge_load.at[dst].add(
+                sm.edge_load[src]).at[src].set(0),
+            vertex_count=sm.vertex_count.at[dst].add(
+                sm.vertex_count[src]).at[src].set(0),
+            active=sm.active.at[src].set(False),
+            num_partitions=sm.num_partitions - 1,
+            cut_edges=cut,
+            scale_events=sm.scale_events + 1,
+        )
+        return sm2, ln2
+
+    return jax.lax.cond(do, migrate, lambda a: a, (small, label_now))
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "cfg"))
+def run_window_mixed(
+    state: PartitionState,
+    ets: jax.Array,      # (W,) event types (EVENT_* codes)
+    vs: jax.Array,       # (W,) subject vertex ids (-1 pad allowed)
+    rows: jax.Array,     # (W, max_deg) neighbour rows / deletion operands
+    t0: jax.Array,       # () global event index of window start
+    *,
+    policy: str,
+    cfg: EngineConfig,
+) -> PartitionState:
+    """Process one window of interleaved ADD / DEL_VERTEX / DEL_EDGE events
+    entirely on device, bit-identical to the faithful engine.
+
+    Because deletions (and earlier adds) inside the window change
+    neighbour presence mid-window, scores are read from a dense
+    per-vertex label journal ``label_now`` (≡ present ? assignment : -1,
+    maintained with one O(1) scatter per slot) rather than from the
+    window-start snapshot: the snapshot's batched committed scores would
+    cancel exactly against the per-slot correction term, so hoisting them
+    here would be pure redundant work (the ADD-only kernel above keeps
+    the hoist — there the intra-window fixup is genuinely sparse). Any
+    add → delete → re-add chain inside the window is tracked exactly.
+
+    The fixup scan carries only (counters, label_now, adj), and no
+    conditional touches the O(n·max_deg) adjacency as a *written*
+    operand: one slot holds exactly one event type, so each branch's
+    effect (repro.core.engine._apply_add / _del_vertex_core /
+    _del_edge_core semantics) is computed as a masked O(max_deg·K)
+    contribution to the counters plus at most two row-level drop-mode
+    scatters into adj. XLA conditionals copy every large operand a
+    branch writes — which is what made per-event processing of this
+    state memory-bound in the first place. The scale-in cond below
+    *reads* adj (cut recompute, copy-free) and writes only the O(n)
+    label journal — same per-delete cost as the faithful engine's
+    assignment rewrite, negligible next to adj.
+    """
+    n = state.assignment.shape[0]
+    w = vs.shape[0]
+    k_max = state.edge_load.shape[0]
+    base_key = state.key
+    kn = eng.make_knobs(cfg, n)
+    choose = eng.policy_fns(cfg.balance_guard)[eng.POLICY_INDEX[policy]]
+
+    ets = jnp.where(vs >= 0, ets, EVENT_PAD)
+    is_add = ets == EVENT_ADD
+    is_dv = ets == EVENT_DEL_VERTEX
+    is_de = ets == EVENT_DEL_EDGE
+    safe_vs = jnp.where(vs >= 0, vs, 0)
+
+    rows_add = jnp.where(is_add[:, None], rows, -1)
+    safe_rows = jnp.maximum(rows_add, 0)
+
+    arange_k = jnp.arange(k_max, dtype=jnp.int32)
+    autoscaling = policy == "sdp" and cfg.autoscale
+
+    def onehot_sum(labels):
+        return jnp.sum(labels[:, None] == arange_k, axis=0, dtype=jnp.int32)
+
+    def step(carry, i):
+        small, label_now, adj = carry
+        key = jax.random.fold_in(base_key, t0 + i)
+        v = safe_vs[i]
+        row = rows[i]
+        add_i, dv_i, de_i = is_add[i], is_dv[i], is_de[i]
+        own_row = adj[v]                          # (D,) pre-event adjacency
+        u = row[0]
+        safe_u = jnp.maximum(u, 0)
+
+        # --- ADD: corrected scores + policy choice (faithful _apply_add) ---
+        if autoscaling:
+            scaled = eng.scale_out(small, kn)
+            small = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(add_i, a, b), scaled, small)
+        eff = jnp.where(rows_add[i] >= 0, label_now[safe_rows[i]], -1)
+        sc_add = onehot_sum(eff)
+        deg_add = jnp.sum(eff >= 0, dtype=jnp.int32)
+        p = choose(small, sc_add, deg_add, v, key, kn, n)
+        fresh = add_i & (label_now[v] < 0)
+        d_add = jnp.where(fresh, deg_add, 0)
+        sc_a = jnp.where(fresh, sc_add, 0)
+
+        # --- DEL_VERTEX (faithful _del_vertex_core over the journal) ---
+        was = dv_i & (label_now[v] >= 0)
+        dv_labels = jnp.where(own_row >= 0,
+                              label_now[jnp.maximum(own_row, 0)], -1)
+        p_dv = jnp.maximum(label_now[v], 0)
+        d_dv = jnp.where(was, jnp.sum(dv_labels >= 0, dtype=jnp.int32), 0)
+        sc_d = jnp.where(was, onehot_sum(dv_labels), 0)
+
+        # --- DEL_EDGE (faithful _del_edge_core over the journal) ---
+        in_adj = jnp.any(own_row == u) & (u >= 0)
+        exists = de_i & (label_now[v] >= 0) & (label_now[safe_u] >= 0) & in_adj
+        pv = jnp.maximum(label_now[v], 0)
+        pu = jnp.maximum(label_now[safe_u], 0)
+        e = exists.astype(jnp.int32)
+        cutdec = (exists & (pv != pu)).astype(jnp.int32)
+
+        # --- masked counter merge (one event type per slot ⇒ exact) ---
+        small = small._replace(
+            vertex_count=(small.vertex_count
+                          .at[p].add(fresh.astype(jnp.int32))
+                          .at[p_dv].add(-was.astype(jnp.int32))),
+            edge_load=((small.edge_load + sc_a - sc_d)
+                       .at[p].add(d_add).at[p_dv].add(-d_dv)
+                       .at[pv].add(-e).at[pu].add(-e)),
+            total_edges=small.total_edges + d_add - d_dv - e,
+            cut_edges=(small.cut_edges + (d_add - sc_a[p])
+                       - (d_dv - sc_d[p_dv]) - cutdec),
+        )
+
+        # --- row-level array updates (never a full-array select) ---
+        new_lbl = jnp.where(add_i, jnp.where(fresh, p, label_now[v]),
+                            jnp.where(dv_i, -1, label_now[v]))
+        label_now = label_now.at[jnp.where(vs[i] >= 0, v, n)].set(
+            new_lbl, mode="drop")
+        row_v_de = jnp.where((own_row == u) & (u >= 0), -1, own_row)
+        w1_val = jnp.where(add_i, row, jnp.where(de_i, row_v_de, own_row))
+        w1_tgt = jnp.where(fresh | de_i, v, n)
+        adj = adj.at[w1_tgt].set(w1_val, mode="drop")
+        row_u = adj[safe_u]                       # after write 1 (self-loops)
+        row_u_de = jnp.where((row_u == v) & (u >= 0), -1, row_u)
+        adj = adj.at[jnp.where(de_i, safe_u, n)].set(row_u_de, mode="drop")
+
+        # --- scale-in after DEL_VERTEX (faithful _apply_del_vertex) ---
+        if autoscaling:
+            small, label_now = jax.lax.cond(
+                dv_i,
+                lambda sm, ln: _scale_in_journal(sm, ln, adj, kn),
+                lambda sm, ln: (sm, ln),
+                small, label_now,
+            )
+        return (small, label_now, adj), None
+
+    small0 = _small(state)
+    label_now0 = jnp.where(state.present, state.assignment, -1)
+    (small, label_now, adj), _ = jax.lax.scan(
+        step, (small0, label_now0, state.adj),
+        jnp.arange(w, dtype=jnp.int32),
+    )
+    return state._replace(
+        assignment=label_now, present=label_now >= 0, adj=adj,
+        active=small.active, edge_load=small.edge_load,
+        vertex_count=small.vertex_count, num_partitions=small.num_partitions,
+        total_edges=small.total_edges, cut_edges=small.cut_edges,
+        denied_scaleout=small.denied_scaleout, scale_events=small.scale_events,
+    )
+
+
+def _pad_to(arr, length, fill):
+    pad = length - arr.shape[0]
+    if pad <= 0:
+        return jnp.asarray(arr)
+    shape = (pad,) + arr.shape[1:]
+    return jnp.concatenate([jnp.asarray(arr), jnp.full(shape, fill, arr.dtype)])
+
+
 def run_stream_windowed(
     stream: VertexStream,
     *,
@@ -162,9 +364,18 @@ def run_stream_windowed(
     seed: int = 0,
     window: int = 256,
     use_kernel: bool = False,
+    mixed: bool = True,
 ) -> PartitionState:
-    """Host driver: windows of ADDs through run_window_adds, other events
-    through the faithful engine. Deterministically equal to run_stream."""
+    """Host driver: fixed windows of ``window`` events per device step.
+
+    Pure-ADD windows take the small-carry ``run_window_adds`` kernel
+    (where ``use_kernel`` routes the batched committed scores through the
+    Pallas kernel); windows containing deletions take ``run_window_mixed``,
+    which scores from its label journal instead. Both are bit-identical to
+    ``run_stream``. ``mixed=False`` restores the legacy behaviour (windows
+    split at every deletion boundary, deletions through the faithful scan)
+    — kept for the fig10 benchmark comparison.
+    """
     cfg = cfg or EngineConfig()
     state = init_state(stream.n, stream.max_deg, cfg.k_max, cfg.k_init, seed)
     if use_kernel:
@@ -176,6 +387,39 @@ def run_stream_windowed(
     et = np.asarray(stream.etype)
     vx = jnp.asarray(stream.vertex)
     nb = jnp.asarray(stream.nbrs)
+
+    if not mixed:
+        return _run_stream_windowed_legacy(
+            stream, state, et, vx, nb, policy=policy, cfg=cfg,
+            window=window, score_fn=score_fn,
+        )
+
+    T = stream.num_events
+    for t in range(0, T, window):
+        end = min(t + window, T)
+        ets_w = _pad_to(et[t:end], window, EVENT_PAD)
+        vs_w = _pad_to(vx[t:end], window, -1)
+        rows_w = _pad_to(nb[t:end], window, -1)
+        if np.all(et[t:end] == EVENT_ADD):
+            state = run_window_adds(
+                state, vs_w, rows_w, jnp.int32(t),
+                policy=policy, cfg=cfg, score_fn=score_fn,
+            )
+        else:
+            state = run_window_mixed(
+                state, ets_w, vs_w, rows_w, jnp.int32(t),
+                policy=policy, cfg=cfg,
+            )
+    return state
+
+
+def _run_stream_windowed_legacy(
+    stream, state, et, vx, nb, *, policy, cfg, window, score_fn
+):
+    """Pre-mixed-window driver: ADD runs through run_window_adds, any other
+    event through the faithful scan, windows split at deletion boundaries.
+    A delete-heavy interleaved stream degenerates to window-size-1 chunks —
+    benchmarked against the mixed path in benchmarks/fig10_time.py."""
     t = 0
     T = stream.num_events
     while t < T:
@@ -183,14 +427,8 @@ def run_stream_windowed(
             end = t
             while end < T and et[end] == EVENT_ADD and end - t < window:
                 end += 1
-            w = end - t
-            vs_w = vx[t:end]
-            rows_w = nb[t:end]
-            if w < window:  # pad to fixed window for compile-cache hits
-                vs_w = jnp.concatenate([vs_w, jnp.full(window - w, -1, jnp.int32)])
-                rows_w = jnp.concatenate(
-                    [rows_w, jnp.full((window - w, stream.max_deg), -1, jnp.int32)]
-                )
+            vs_w = _pad_to(vx[t:end], window, -1)
+            rows_w = _pad_to(nb[t:end], window, -1)
             state = run_window_adds(
                 state, vs_w, rows_w, jnp.int32(t),
                 policy=policy, cfg=cfg, score_fn=score_fn,

@@ -185,6 +185,92 @@ def dynamic_schedule(
     )
 
 
+def interleaved_churn(
+    g: Graph,
+    *,
+    warmup_frac: float = 0.25,
+    del_every: int = 3,
+    edge_del_every: int = 0,
+    readd_every: int = 0,
+    max_deg: Optional[int] = None,
+    seed: int = 0,
+) -> VertexStream:
+    """Fine-grained interleaved churn stream (the xDGP-style regime).
+
+    After a warm-up of ``warmup_frac`` of the vertices, the remaining adds
+    arrive interleaved with deletions: every ``del_every`` adds a random
+    *present* vertex is deleted, every ``edge_del_every`` adds a random
+    present edge is deleted, and every ``readd_every`` adds a previously
+    deleted vertex is re-added. Unlike ``dynamic_schedule`` (contiguous
+    add/delete phases), the deletions here land inside nearly every engine
+    window, which is exactly what defeated the old delete-splitting
+    windowed driver.
+    """
+    rng = np.random.default_rng(seed)
+    if max_deg is None:
+        max_deg = int(np.diff(g.indptr).max(initial=1))
+    order = rng.permutation(g.n).astype(np.int32)
+    truncated = 0
+
+    def row_of(v: int) -> np.ndarray:
+        nonlocal truncated
+        row = -np.ones(max_deg, dtype=np.int32)
+        nb = g.neighbors(int(v))
+        if nb.size > max_deg:
+            truncated += nb.size - max_deg
+            nb = rng.choice(nb, size=max_deg, replace=False)
+        row[: nb.size] = nb
+        return row
+
+    etypes: list[int] = []
+    vertices: list[int] = []
+    nbr_rows: list[np.ndarray] = []
+
+    def emit(et: int, v: int, row: np.ndarray):
+        etypes.append(et)
+        vertices.append(int(v))
+        nbr_rows.append(row)
+
+    present: list[int] = []
+    deleted: list[int] = []
+    n_warm = int(round(g.n * warmup_frac))
+    for v in order[:n_warm]:
+        emit(EVENT_ADD, v, row_of(v))
+        present.append(int(v))
+
+    count = 0
+    for v in order[n_warm:]:
+        emit(EVENT_ADD, v, row_of(v))
+        present.append(int(v))
+        count += 1
+        if del_every and count % del_every == 0 and present:
+            i = int(rng.integers(len(present)))
+            dv = present.pop(i)
+            deleted.append(dv)
+            emit(EVENT_DEL_VERTEX, dv, -np.ones(max_deg, np.int32))
+        if edge_del_every and count % edge_del_every == 0 and present:
+            ev = int(present[int(rng.integers(len(present)))])
+            nb = g.neighbors(ev)
+            if nb.size:
+                row = -np.ones(max_deg, np.int32)
+                row[0] = int(rng.choice(nb))
+                emit(EVENT_DEL_EDGE, ev, row)
+        if readd_every and count % readd_every == 0 and deleted:
+            rv = deleted.pop(int(rng.integers(len(deleted))))
+            emit(EVENT_ADD, rv, row_of(rv))
+            present.append(rv)
+
+    return VertexStream(
+        etype=np.asarray(etypes, np.int32),
+        vertex=np.asarray(vertices, np.int32),
+        nbrs=(np.stack(nbr_rows) if nbr_rows
+              else np.zeros((0, max_deg), np.int32)),
+        n=g.n,
+        intervals=(len(etypes),),
+        truncated_nbrs=truncated,
+    )
+
+
 def pad_stream(s: VertexStream, multiple: int) -> VertexStream:
     """Pad the event tensor length to a multiple (for fixed-window engines)."""
     t = s.num_events

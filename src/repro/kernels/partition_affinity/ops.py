@@ -15,7 +15,14 @@ def gather_labels(assignment, present, rows):
 
 
 def scores_for_state(state, rows, *, interpret: bool = True):
-    """Drop-in for repro.core.windowed.committed_scores using the kernel."""
+    """Drop-in for repro.core.windowed.committed_scores using the kernel.
+
+    Tolerates in-window deletions: on churn streams the windowed driver
+    still routes its pure-ADD windows here, so the committed state may
+    carry deletion holes — vertices with present=False but stale
+    assignment entries. ``gather_labels`` masks those to -1 (scored as
+    empty), matching the faithful engine's presence semantics.
+    """
     labels = gather_labels(state.assignment, state.present, rows)
     k_max = state.edge_load.shape[0]
     return partition_affinity(labels, k_max=k_max, interpret=interpret)

@@ -1,0 +1,185 @@
+"""Vmapped sweep runtime: many (policy × seed × config) streams in ONE
+jitted device program.
+
+The figure benchmarks previously looped over policies/configs on the host,
+re-dispatching the whole stream scan per run. Here every run becomes a
+*lane* of a vmapped engine: `PartitionState` is stacked along a leading
+axis, the numeric knobs (`repro.core.engine.Knobs`) become traced f32
+scalars, and the policy becomes a traced index dispatched with
+``lax.switch``. Because `make_knobs` performs all host-side arithmetic
+before the values enter the graph, the dynamic lanes execute bit-identical
+f32 ops to the static single-run engine — verified by tests/test_sweep.py.
+
+Static requirements across lanes: identical ``k_max`` (array shapes) and
+``balance_guard`` (trace-time branch). ``k_init``, ``seed``, ``autoscale``
+and all numeric knobs vary freely per lane.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine as eng
+from repro.core.config import EngineConfig
+from repro.core.state import PartitionState, init_state
+from repro.graph.stream import VertexStream
+
+
+class SweepRun(NamedTuple):
+    """One lane of a sweep: a policy/config/seed triple over the stream."""
+    policy: str = "sdp"
+    cfg: EngineConfig = EngineConfig()
+    seed: int = 0
+
+
+class SweepResult(NamedTuple):
+    policy: str
+    cfg: EngineConfig
+    seed: int
+    state: PartitionState
+    trace: eng.EventTrace
+
+
+@functools.partial(
+    jax.jit, static_argnames=("balance_guard", "autoscale_mode"))
+def sweep_events(
+    states: PartitionState,   # stacked (L, ...) lanes
+    kns: eng.Knobs,           # stacked (L,) f32 knobs
+    policy_idx: jax.Array,    # (L,) int32 into POLICIES order
+    autoscale: jax.Array,     # (L,) bool (cfg.autoscale per lane)
+    etype: jax.Array,         # (T,) shared stream
+    vertex: jax.Array,        # (T,)
+    nbrs: jax.Array,          # (T, max_deg)
+    t0: jax.Array,            # () global index of first event
+    *,
+    balance_guard: str,
+    autoscale_mode: str,      # "off" | "dynamic"
+):
+    """Run one chunk of the shared stream across all lanes; resumable."""
+    choose_table = eng.policy_fns(balance_guard)
+    n = states.assignment.shape[1]
+    sdp_idx = eng.POLICY_INDEX["sdp"]
+
+    def one_lane(state, kn, pidx, auto):
+        base_key = state.key
+        do_scale = auto & (pidx == sdp_idx)
+
+        def apply_add(s, v, row, key):
+            if autoscale_mode == "dynamic":
+                s = jax.lax.cond(
+                    do_scale, lambda x: eng.scale_out(x, kn), lambda x: x, s)
+            scores, deg, _, _ = eng.neighbor_stats(s, row)
+            p = jax.lax.switch(
+                pidx, list(choose_table), s, scores, deg, v, key, kn, n)
+            return eng._commit_add(s, v, row, p, scores, deg)
+
+        def apply_del_vertex(s, v, row, key):
+            s = eng._del_vertex_core(s, v)
+            if autoscale_mode == "dynamic":
+                s = jax.lax.cond(
+                    do_scale, lambda x: eng.scale_in(x, kn), lambda x: x, s)
+            return s
+
+        def apply_del_edge(s, v, row, key):
+            return eng._del_edge_core(s, v, row)
+
+        def apply_pad(s, v, row, key):
+            return s
+
+        def step(s, ev):
+            et, v, row, i = ev
+            key = jax.random.fold_in(base_key, i)
+            sv = jnp.maximum(v, 0)
+            s = jax.lax.switch(
+                jnp.clip(et, 0, 3),
+                [apply_add, apply_del_vertex, apply_del_edge, apply_pad],
+                s, sv, row, key,
+            )
+            _, load_dev = eng.load_stats(s)
+            tr = eng.EventTrace(s.total_edges, s.cut_edges, s.num_partitions,
+                                load_dev)
+            return s, tr
+
+        idx = t0 + jnp.arange(etype.shape[0], dtype=jnp.int32)
+        return jax.lax.scan(step, state, (etype, vertex, nbrs, idx))
+
+    return jax.vmap(one_lane)(states, kns, policy_idx, autoscale)
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _unstack(tree, i):
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+def run_sweep(
+    stream: VertexStream,
+    runs: Sequence[SweepRun | tuple],
+    *,
+    chunk: int | None = None,
+) -> list[SweepResult]:
+    """Run every (policy, cfg, seed) lane over ``stream`` in one device
+    program; each lane's result is bit-identical to ``run_stream`` with the
+    same arguments."""
+    runs = [r if isinstance(r, SweepRun) else SweepRun(*r) for r in runs]
+    if not runs:
+        return []
+    cfg0 = runs[0].cfg
+    for r in runs:
+        if r.policy not in eng.POLICY_INDEX:
+            raise ValueError(f"unknown policy {r.policy!r}")
+        if r.cfg.k_max != cfg0.k_max:
+            raise ValueError("all sweep lanes must share k_max (array shapes)")
+        if r.cfg.balance_guard != cfg0.balance_guard:
+            raise ValueError("all sweep lanes must share balance_guard")
+    autoscale_mode = (
+        "dynamic"
+        if any(r.cfg.autoscale and r.policy == "sdp" for r in runs)
+        else "off"
+    )
+
+    n, max_deg = stream.n, stream.max_deg
+    states = _stack([
+        init_state(n, max_deg, cfg0.k_max, r.cfg.k_init, r.seed) for r in runs
+    ])
+    kns = _stack([eng.knobs_arrays(r.cfg, n) for r in runs])
+    pidx = jnp.asarray([eng.POLICY_INDEX[r.policy] for r in runs], jnp.int32)
+    auto = jnp.asarray([r.cfg.autoscale for r in runs], bool)
+
+    et = jnp.asarray(stream.etype)
+    vx = jnp.asarray(stream.vertex)
+    nb = jnp.asarray(stream.nbrs)
+    T = stream.num_events
+
+    if chunk is None:
+        states, trace = sweep_events(
+            states, kns, pidx, auto, et, vx, nb, jnp.int32(0),
+            balance_guard=cfg0.balance_guard, autoscale_mode=autoscale_mode,
+        )
+    else:
+        traces = []
+        t = 0
+        while t < T:
+            sl = slice(t, min(t + chunk, T))
+            states, tr = sweep_events(
+                states, kns, pidx, auto, et[sl], vx[sl], nb[sl], jnp.int32(t),
+                balance_guard=cfg0.balance_guard,
+                autoscale_mode=autoscale_mode,
+            )
+            traces.append(tr)
+            t = sl.stop
+        trace = eng.EventTrace(*(
+            jnp.concatenate([getattr(tr, f) for tr in traces], axis=1)
+            for f in eng.EventTrace._fields
+        ))
+
+    return [
+        SweepResult(r.policy, r.cfg, r.seed,
+                    _unstack(states, i), _unstack(trace, i))
+        for i, r in enumerate(runs)
+    ]

@@ -1,0 +1,114 @@
+"""The mixed-event windowed engine must be bit-identical to the faithful
+one-pass engine on delete-heavy *interleaved* streams — the paper's
+real-time churn regime, where the legacy driver degenerated to
+window-size-1 chunks."""
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, run_stream, run_stream_windowed
+from repro.graph.generators import make_graph
+from repro.graph import stream as gstream
+
+
+def _identical(a, b):
+    np.testing.assert_array_equal(np.asarray(a.assignment),
+                                  np.asarray(b.assignment))
+    np.testing.assert_array_equal(np.asarray(a.present), np.asarray(b.present))
+    np.testing.assert_array_equal(np.asarray(a.adj), np.asarray(b.adj))
+    np.testing.assert_array_equal(np.asarray(a.edge_load),
+                                  np.asarray(b.edge_load))
+    np.testing.assert_array_equal(np.asarray(a.vertex_count),
+                                  np.asarray(b.vertex_count))
+    np.testing.assert_array_equal(np.asarray(a.active), np.asarray(b.active))
+    assert int(a.cut_edges) == int(b.cut_edges)
+    assert int(a.total_edges) == int(b.total_edges)
+    assert int(a.num_partitions) == int(b.num_partitions)
+    assert int(a.scale_events) == int(b.scale_events)
+    assert int(a.denied_scaleout) == int(b.denied_scaleout)
+
+
+def _del_fraction(s):
+    dels = (s.etype == gstream.EVENT_DEL_VERTEX) | \
+        (s.etype == gstream.EVENT_DEL_EDGE)
+    return float(np.mean(dels))
+
+
+def _churn_stream(seed=1):
+    g = make_graph("social", 120, 360, seed=0)
+    s = gstream.interleaved_churn(g, warmup_frac=0.15, del_every=2,
+                                  edge_del_every=4, readd_every=6, seed=seed)
+    assert _del_fraction(s) >= 0.30, "stream not delete-heavy enough"
+    return s
+
+
+@pytest.mark.parametrize("window", [8, 32, 256])
+def test_mixed_window_equals_faithful_churn_autoscale(window):
+    """≥30% deletion events interleaved with adds, autoscale on."""
+    s = _churn_stream()
+    cfg = EngineConfig(k_max=8, k_init=1, max_cap=100, autoscale=True)
+    a, _ = run_stream(s, policy="sdp", cfg=cfg, seed=2)
+    b = run_stream_windowed(s, policy="sdp", cfg=cfg, seed=2, window=window)
+    _identical(a, b)
+
+
+@pytest.mark.parametrize("policy", ["sdp", "greedy", "ldg", "fennel",
+                                    "hash", "random"])
+def test_mixed_window_all_policies(policy):
+    s = _churn_stream(seed=7)
+    cfg = EngineConfig(k_max=6, k_init=1 if policy == "sdp" else 4,
+                       max_cap=110, autoscale=policy == "sdp")
+    a, _ = run_stream(s, policy=policy, cfg=cfg, seed=3)
+    b = run_stream_windowed(s, policy=policy, cfg=cfg, seed=3, window=32)
+    _identical(a, b)
+
+
+def test_mixed_window_alg1_guard():
+    s = _churn_stream(seed=9)
+    cfg = EngineConfig(k_max=6, k_init=1, max_cap=90, autoscale=True,
+                       balance_guard="alg1")
+    a, _ = run_stream(s, policy="sdp", cfg=cfg, seed=5)
+    b = run_stream_windowed(s, policy="sdp", cfg=cfg, seed=5, window=64)
+    _identical(a, b)
+
+
+def test_mixed_window_with_pallas_kernel():
+    """Kernel-scored mixed path == jnp-scored path == faithful engine."""
+    s = _churn_stream(seed=11)
+    cfg = EngineConfig(k_max=4, k_init=1, max_cap=130)
+    a, _ = run_stream(s, policy="sdp", cfg=cfg, seed=6)
+    b = run_stream_windowed(s, policy="sdp", cfg=cfg, seed=6, window=64,
+                            use_kernel=True)
+    _identical(a, b)
+
+
+def test_legacy_driver_still_bit_identical():
+    """The pre-mixed (delete-splitting) driver stays a valid fallback."""
+    s = _churn_stream(seed=13)
+    cfg = EngineConfig(k_max=8, k_init=1, max_cap=100, autoscale=True)
+    a, _ = run_stream(s, policy="sdp", cfg=cfg, seed=2)
+    b = run_stream_windowed(s, policy="sdp", cfg=cfg, seed=2, window=32,
+                            mixed=False)
+    _identical(a, b)
+
+
+def test_mixed_window_readd_within_window():
+    """add → delete → re-add of the same vertex inside ONE window must
+    chain through the window-local label journal."""
+    g = make_graph("mesh", 40, 100, seed=1)
+    base = gstream.build_stream(g, seed=2)
+    # craft: add everything, then [del v, add u(nbr v), re-add v] tight
+    v = int(base.vertex[0])
+    row_v = base.nbrs[0]
+    extra_et = np.asarray(
+        [gstream.EVENT_DEL_VERTEX, gstream.EVENT_ADD], np.int32)
+    extra_vx = np.asarray([v, v], np.int32)
+    extra_nb = np.stack([-np.ones_like(row_v), row_v])
+    s = gstream.VertexStream(
+        etype=np.concatenate([base.etype, extra_et]),
+        vertex=np.concatenate([base.vertex, extra_vx]),
+        nbrs=np.concatenate([base.nbrs, extra_nb]),
+        n=base.n)
+    cfg = EngineConfig(k_max=4, k_init=1, max_cap=60, autoscale=True)
+    a, _ = run_stream(s, policy="sdp", cfg=cfg, seed=3)
+    b = run_stream_windowed(s, policy="sdp", cfg=cfg, seed=3, window=256)
+    _identical(a, b)

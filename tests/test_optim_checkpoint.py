@@ -86,13 +86,17 @@ def test_error_feedback_unbiased_over_time():
     """Mean compressed signal ≈ mean true signal once EF accumulates."""
     g = {"w": jnp.full((64,), 0.01)}   # tiny values → large relative quant
     err = init_error_feedback(g)
-    import jax as _jax
     from jax.sharding import PartitionSpec as P
-    mesh = _jax.make_mesh((1,), ("dp",),
-                          axis_types=(_jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((1,), ("dp",))
+
+    if hasattr(jax, "shard_map"):
+        shard_map = jax.shard_map
+    else:  # older jax keeps it in experimental
+        from jax.experimental.shard_map import shard_map
 
     def run(err):
-        f = _jax.shard_map(
+        f = shard_map(
             lambda gg, ee: compressed_allreduce_grads(gg, ee, "dp"),
             mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()))
         return f(g, err)

@@ -1,6 +1,10 @@
 """Hypothesis property tests on the partitioner's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: pip install -e .[test] (CI runs it)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (EngineConfig, recompute_counters, run_stream,
                         state_metrics)

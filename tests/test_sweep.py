@@ -1,0 +1,95 @@
+"""The vmapped sweep runtime must reproduce per-stream `run_stream` results
+bit-for-bit on every lane (policies × seeds × configs in one program)."""
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, run_stream
+from repro.graph.generators import make_graph
+from repro.graph import stream as gstream
+from repro.runtime.sweep import SweepRun, run_sweep
+
+
+def _lane_matches(result, stream):
+    state, trace = run_stream(stream, policy=result.policy, cfg=result.cfg,
+                              seed=result.seed)
+    np.testing.assert_array_equal(np.asarray(state.assignment),
+                                  np.asarray(result.state.assignment))
+    np.testing.assert_array_equal(np.asarray(state.edge_load),
+                                  np.asarray(result.state.edge_load))
+    np.testing.assert_array_equal(np.asarray(state.active),
+                                  np.asarray(result.state.active))
+    assert int(state.cut_edges) == int(result.state.cut_edges)
+    assert int(state.total_edges) == int(result.state.total_edges)
+    assert int(state.num_partitions) == int(result.state.num_partitions)
+    assert int(state.scale_events) == int(result.state.scale_events)
+    np.testing.assert_array_equal(np.asarray(trace.cut_edges),
+                                  np.asarray(result.trace.cut_edges))
+    np.testing.assert_array_equal(np.asarray(trace.load_std),
+                                  np.asarray(result.trace.load_std))
+
+
+def test_sweep_policies_and_seeds_static_stream():
+    g = make_graph("mesh", 110, 320, seed=0)
+    s = gstream.build_stream(g, seed=1)
+    runs = [
+        SweepRun(policy, EngineConfig(
+            k_max=8, k_init=1 if policy == "sdp" else 4,
+            max_cap=130, autoscale=policy == "sdp"), seed)
+        for policy in ("sdp", "ldg", "fennel", "hash", "random", "greedy")
+        for seed in (0, 1)
+    ]
+    for r in run_sweep(s, runs):
+        _lane_matches(r, s)
+
+
+def test_sweep_dynamic_stream_with_deletions():
+    g = make_graph("social", 90, 260, seed=2)
+    s = gstream.dynamic_schedule(g, n_intervals=3, seed=3,
+                                 del_edges_per_interval=5)
+    runs = [
+        SweepRun("sdp", EngineConfig(k_max=8, k_init=1, max_cap=100), 0),
+        SweepRun("sdp", EngineConfig(k_max=8, k_init=2, max_cap=10**9), 4),
+        SweepRun("greedy",
+                 EngineConfig(k_max=8, k_init=4, autoscale=False), 0),
+        SweepRun("ldg", EngineConfig(k_max=8, k_init=3, autoscale=False), 1),
+    ]
+    for r in run_sweep(s, runs):
+        _lane_matches(r, s)
+
+
+def test_sweep_config_lanes_vary_k():
+    """fig8-style sweep: same policy, k_init varies per lane."""
+    g = make_graph("mesh", 100, 300, seed=4)
+    s = gstream.build_stream(g, seed=5)
+    runs = [
+        SweepRun("sdp",
+                 EngineConfig(k_max=16, k_init=k, autoscale=False), 0)
+        for k in (2, 4, 8, 16)
+    ]
+    for r in run_sweep(s, runs):
+        _lane_matches(r, s)
+
+
+def test_sweep_chunked_equals_single_shot():
+    g = make_graph("mesh", 80, 220, seed=6)
+    s = gstream.build_stream(g, seed=7)
+    runs = [SweepRun("sdp", EngineConfig(k_max=4, k_init=1, max_cap=90), 0),
+            SweepRun("hash",
+                     EngineConfig(k_max=4, k_init=3, autoscale=False), 0)]
+    one = run_sweep(s, runs)
+    chk = run_sweep(s, runs, chunk=23)
+    for a, b in zip(one, chk):
+        np.testing.assert_array_equal(np.asarray(a.state.assignment),
+                                      np.asarray(b.state.assignment))
+        assert int(a.state.cut_edges) == int(b.state.cut_edges)
+        np.testing.assert_array_equal(np.asarray(a.trace.cut_edges),
+                                      np.asarray(b.trace.cut_edges))
+
+
+def test_sweep_rejects_mismatched_static_shape():
+    g = make_graph("mesh", 40, 100, seed=8)
+    s = gstream.build_stream(g, seed=9)
+    runs = [SweepRun("sdp", EngineConfig(k_max=4), 0),
+            SweepRun("sdp", EngineConfig(k_max=8), 0)]
+    with pytest.raises(ValueError, match="k_max"):
+        run_sweep(s, runs)
