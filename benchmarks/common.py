@@ -11,12 +11,10 @@ import os
 import time
 
 import jax
-import numpy as np
 
-from repro.core import EngineConfig, run_stream, state_metrics, trace_at
+from repro.core import EngineConfig, run_stream, state_metrics
 from repro.graph.csr import cap_degree
-from repro.graph.datasets import PAPER_DATASETS, load_dataset
-from repro.graph import stream as gstream
+from repro.graph.datasets import load_dataset
 
 ART_DIR = os.environ.get("REPRO_BENCH_DIR", "artifacts/bench")
 

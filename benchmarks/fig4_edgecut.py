@@ -2,7 +2,6 @@
 SDP vs streaming baselines, across datasets."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common as C
 from repro.core import trace_at

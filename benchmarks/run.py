@@ -6,12 +6,14 @@ Prints ``name,value,derived`` CSV per row-group and writes JSON artifacts
 to artifacts/bench/. The roofline table additionally needs dry-run
 artifacts (repro.launch.dryrun --all).
 
-Policy/config comparisons (fig4/6/7/8) run through the vmapped sweep
-runtime (repro.runtime.sweep): all lanes of a comparison execute as ONE
-jitted device program instead of a host loop re-scanning the stream per
-policy. fig10 additionally times the mixed-event window engine against
-the legacy delete-splitting driver on an interleaved churn stream and
-writes BENCH_mixed_window.json.
+Policy/config comparisons (fig4/6/7/8) run through the sweep runtime
+(repro.runtime.sweep): all lanes of a comparison execute as ONE device
+program (lane axis sharded across devices when more than one exists)
+instead of a host loop re-scanning the stream per policy. fig10 times
+the mixed-event window engine against the legacy delete-splitting driver
+on an interleaved churn stream (BENCH_mixed_window.json); fig11 times
+host-loop vs vmapped vs sharded vs windowed-lane sweeps
+(BENCH_sweep_scaling.json).
 """
 from __future__ import annotations
 
@@ -29,12 +31,13 @@ def main() -> int:
 
     from benchmarks import (fig4_edgecut, fig5_vs_offline, fig6_dynamics,
                             fig7_imbalance, fig8_npartitions, fig9_scaling,
-                            fig10_time, roofline)
+                            fig10_time, fig11_sweep_scaling, roofline)
     mods = {
         "fig4": fig4_edgecut, "fig5": fig5_vs_offline,
         "fig6": fig6_dynamics, "fig7": fig7_imbalance,
         "fig8": fig8_npartitions, "fig9": fig9_scaling,
-        "fig10": fig10_time, "roofline": roofline,
+        "fig10": fig10_time, "fig11": fig11_sweep_scaling,
+        "roofline": roofline,
     }
     only = [s for s in args.only.split(",") if s]
     failures = 0

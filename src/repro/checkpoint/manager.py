@@ -17,7 +17,6 @@ import json
 import os
 import re
 import threading
-import time
 
 import jax
 import numpy as np

@@ -6,6 +6,12 @@ state as of that event — the TPU-native equivalent of the paper's Java
 event loop. Policies: SDP (Alg. 1 + §4.2.2 balance guard + §4.2.3 scaling)
 and the streaming baselines (LDG, Fennel, hash, random, pure greedy).
 
+The transition bodies (policy dispatch, apply_add / apply_del_* branches,
+scale_out / scale_in) live in ``repro.core.transition`` — the single
+definition site shared with the windowed kernels and the sweep runtime.
+This module is the *static-knob* driver: policy and config are Python
+values, so XLA sees one specialized program per (policy, cfg).
+
 The windowed engine (repro.core.windowed) is bit-identical to this one but
 restructures the hot affinity scoring into a batched kernel; this module is
 the semantic reference.
@@ -13,362 +19,26 @@ the semantic reference.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.config import EngineConfig, POLICIES
+from repro.core.config import EngineConfig
 from repro.core.state import PartitionState, init_state
+from repro.core.transition import (
+    EventTrace, Knobs, make_knobs, knobs_arrays, neighbor_stats, nth_active,
+    masked_argmin, load_stats, policy_fns, POLICY_INDEX, scale_out, scale_in,
+    scale_in_trigger, make_transition, scan_events,
+)
 from repro.graph.stream import VertexStream
 
-_BIG = jnp.int32(2**30)
-
-
-class EventTrace(NamedTuple):
-    """Per-event metric trace (paper captures these at interval boundaries)."""
-    total_edges: jax.Array
-    cut_edges: jax.Array
-    num_partitions: jax.Array
-    load_std: jax.Array
-
-
-# ---------------------------------------------------------------------------
-# engine knobs
-# ---------------------------------------------------------------------------
-
-class Knobs(NamedTuple):
-    """Numeric policy/scaling knobs derived from EngineConfig on the host.
-
-    All Python-level arithmetic (products, percentages) happens in
-    ``make_knobs`` so that the static path (fields are weak Python scalars,
-    embedded as f32 constants at trace time) and the dynamic sweep path
-    (fields are traced f32 scalars, see repro.runtime.sweep) perform
-    bit-identical f32 operations.
-    """
-    max_cap: jax.Array | float            # Eq. 5 MAXCAP
-    scale_in_l: jax.Array | float         # Eq. 6 l = tolerance*MAXCAP/100
-    scale_in_dest: jax.Array | float      # Eq. 7 destinationThreshold
-    ldg_cap_num: jax.Array | float        # ldg_slack * n (cap = this / k)
-    fennel_gamma: jax.Array | float
-    fennel_gm1: jax.Array | float         # gamma - 1
-    fennel_alpha_scale: jax.Array | float
-
-
-def make_knobs(cfg: EngineConfig, n: int) -> Knobs:
-    """Host-side knob derivation shared by every engine path."""
-    return Knobs(
-        max_cap=cfg.max_cap,
-        scale_in_l=cfg.tolerance_param * cfg.max_cap / 100.0,
-        scale_in_dest=cfg.max_cap - cfg.dest_param * cfg.max_cap / 100.0,
-        ldg_cap_num=cfg.ldg_slack * n,
-        fennel_gamma=cfg.fennel_gamma,
-        fennel_gm1=cfg.fennel_gamma - 1.0,
-        fennel_alpha_scale=cfg.fennel_alpha_scale,
-    )
-
-
-def knobs_arrays(cfg: EngineConfig, n: int) -> Knobs:
-    """Knobs as f32 scalars — the traced/vmapped form for the sweep runtime."""
-    kn = make_knobs(cfg, n)
-    return Knobs(*(jnp.float32(x) for x in kn))
-
-
-# ---------------------------------------------------------------------------
-# shared helpers
-# ---------------------------------------------------------------------------
-
-def neighbor_stats(state: PartitionState, row: jax.Array):
-    """(scores[k], deg, nb_present, safe_row): affinity of one vertex row.
-
-    scores[k] = |E(v) ∩ P_k| over *present* neighbours (paper Eq. 1).
-    """
-    valid = row >= 0
-    safe_row = jnp.where(valid, row, 0)
-    nb_present = valid & state.present[safe_row]
-    nb_assign = jnp.where(nb_present, state.assignment[safe_row], -1)
-    k_max = state.edge_load.shape[0]
-    onehot = (nb_assign[:, None] == jnp.arange(k_max, dtype=jnp.int32)[None, :])
-    scores = jnp.sum(onehot, axis=0, dtype=jnp.int32)
-    deg = jnp.sum(nb_present, dtype=jnp.int32)
-    return scores, deg, nb_present, safe_row
-
-
-def nth_active(active: jax.Array, i: jax.Array) -> jax.Array:
-    """Index of the i-th active partition (i < num active)."""
-    cum = jnp.cumsum(active.astype(jnp.int32)) - 1
-    return jnp.argmax((cum == i) & active).astype(jnp.int32)
-
-
-def masked_argmin(x: jax.Array, mask: jax.Array) -> jax.Array:
-    return jnp.argmin(jnp.where(mask, x, _BIG)).astype(jnp.int32)
-
-
-def load_stats(state: PartitionState):
-    """(avg_d, load_dev) over active partitions — Eqs. 2 & 10."""
-    act = state.active
-    load = state.edge_load.astype(jnp.float32)
-    p = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
-    maxl = jnp.max(jnp.where(act, load, -jnp.inf))
-    minl = jnp.min(jnp.where(act, load, jnp.inf))
-    avg_d = (maxl - minl) / p
-    mean = jnp.sum(jnp.where(act, load, 0.0)) / p
-    var = jnp.sum(jnp.where(act, (load - mean) ** 2, 0.0)) / p
-    return avg_d, jnp.sqrt(var)
-
-
-# ---------------------------------------------------------------------------
-# policies: choose a partition for an arriving vertex
-# ---------------------------------------------------------------------------
-
-def _affinity_choice(state: PartitionState, scores: jax.Array, key: jax.Array):
-    """Paper Alg. 3: argmax affinity; tie → min load; no overlap → random."""
-    act = state.active
-    s = jnp.where(act, scores, -1)
-    best = jnp.max(s)
-    tied = act & (s == best)
-    p_tie = masked_argmin(state.edge_load, tied)          # tie → min load
-    ridx = jax.random.randint(key, (), 0, jnp.maximum(state.num_partitions, 1))
-    p_rand = nth_active(act, ridx)                        # no overlap → random
-    return jnp.where(best > 0, p_tie, p_rand)
-
-
-def _sdp_guard_inputs(state):
-    avg_d, load_dev = load_stats(state)
-    cut = jnp.maximum(state.cut_edges.astype(jnp.float32), 1.0)
-    w_dev = (state.total_edges.astype(jnp.float32) / cut) * load_dev  # Eq. 4
-    th = w_dev - load_dev                                             # Eq. 3
-    return avg_d, load_dev, th
-
-
-def _choose_sdp_text(state, scores, deg, v, key, kn: Knobs, n: int):
-    """§4.2.2 text semantics: imbalance (AVG_d > TH) ⇒ least-loaded."""
-    avg_d, _, th = _sdp_guard_inputs(state)
-    p_min = masked_argmin(state.edge_load, state.active)
-    p_aff = _affinity_choice(state, scores, key)
-    guard = (state.num_partitions > 1) & (avg_d > th)
-    return jnp.where(guard, p_min, p_aff)
-
-
-def _choose_sdp_alg1(state, scores, deg, v, key, kn: Knobs, n: int):
-    """Alg. 1 listing semantics: σ > TH ⇒ affinity path, else least-loaded."""
-    _, load_dev, th = _sdp_guard_inputs(state)
-    p_min = masked_argmin(state.edge_load, state.active)
-    p_aff = _affinity_choice(state, scores, key)
-    guard = (state.num_partitions > 1) & (load_dev > th)
-    return jnp.where(guard, p_aff, p_min)
-
-
-def _choose_ldg(state, scores, deg, v, key, kn: Knobs, n: int):
-    k = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
-    cap = kn.ldg_cap_num / k
-    w = 1.0 - state.vertex_count.astype(jnp.float32) / cap
-    h = scores.astype(jnp.float32) * jnp.maximum(w, 0.0)
-    h = jnp.where(state.active, h, -jnp.inf)
-    best = jnp.max(h)
-    tied = state.active & (h >= best - 1e-6)
-    return masked_argmin(state.vertex_count, tied)
-
-
-def _choose_fennel(state, scores, deg, v, key, kn: Knobs, n: int):
-    m = state.total_edges.astype(jnp.float32) + deg.astype(jnp.float32)
-    nt = jnp.maximum(jnp.sum(state.vertex_count).astype(jnp.float32), 1.0)
-    k = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
-    alpha = kn.fennel_alpha_scale * jnp.sqrt(k) * m / (nt**1.5)
-    cost = alpha * kn.fennel_gamma * \
-        state.vertex_count.astype(jnp.float32) ** kn.fennel_gm1
-    h = jnp.where(state.active, scores.astype(jnp.float32) - cost, -jnp.inf)
-    best = jnp.max(h)
-    tied = state.active & (h >= best - 1e-6)
-    return masked_argmin(state.vertex_count, tied)
-
-
-def _choose_hash(state, scores, deg, v, key, kn: Knobs, n: int):
-    idx = jnp.mod(v, jnp.maximum(state.num_partitions, 1))
-    return nth_active(state.active, idx)
-
-
-def _choose_random(state, scores, deg, v, key, kn: Knobs, n: int):
-    idx = jax.random.randint(key, (), 0, jnp.maximum(state.num_partitions, 1))
-    return nth_active(state.active, idx)
-
-
-def _choose_greedy(state, scores, deg, v, key, kn: Knobs, n: int):
-    return _affinity_choice(state, scores, key)
-
-
-POLICY_INDEX = {p: i for i, p in enumerate(POLICIES)}
-
-
-def policy_fns(balance_guard: str):
-    """Policy table in POLICIES order — indexable by POLICY_INDEX for the
-    static engines or by a traced lax.switch index in the sweep runtime."""
-    sdp = _choose_sdp_text if balance_guard == "text" else _choose_sdp_alg1
-    return (sdp, _choose_ldg, _choose_fennel, _choose_hash, _choose_random,
-            _choose_greedy)
-
-
-# ---------------------------------------------------------------------------
-# scaling (§4.2.3)
-# ---------------------------------------------------------------------------
-
-def scale_out(state: PartitionState, kn: Knobs) -> PartitionState:
-    """Eq. 5: if MAXCAP ≤ |E|/|P|, activate one more partition."""
-    p = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
-    adding_threshold = state.total_edges.astype(jnp.float32) / p
-    want = kn.max_cap <= adding_threshold
-    slot_free = ~jnp.all(state.active)
-    do = want & slot_free
-    slot = jnp.argmax(~state.active).astype(jnp.int32)  # first inactive slot
-    return state._replace(
-        active=state.active.at[slot].set(jnp.where(do, True, state.active[slot])),
-        num_partitions=state.num_partitions + do.astype(jnp.int32),
-        scale_events=state.scale_events + do.astype(jnp.int32),
-        denied_scaleout=state.denied_scaleout + (want & ~slot_free).astype(jnp.int32),
-    )
-
-
-def _recompute_cut(assignment, present, adj) -> jax.Array:
-    """Exact cut count (each undirected edge stored twice in adj)."""
-    valid = adj >= 0
-    safe = jnp.where(valid, adj, 0)
-    nb_present = valid & present[safe]
-    both = nb_present & present[:, None]
-    diff = assignment[:, None] != assignment[safe]
-    return (jnp.sum(both & diff, dtype=jnp.int32) // 2).astype(jnp.int32)
-
-
-def scale_in_trigger(small, kn: Knobs):
-    """Eqs. 6–8 trigger: (src, dst, do). `small` is any state carrying
-    active/edge_load/num_partitions — shared with the windowed journal."""
-    under = small.active & (small.edge_load.astype(jnp.float32) < kn.scale_in_l)
-    n_under = jnp.sum(under, dtype=jnp.int32)
-    src = masked_argmin(small.edge_load, small.active)
-    mask2 = small.active.at[src].set(False)
-    dst = masked_argmin(small.edge_load, mask2)
-    fits = (small.edge_load[src] + small.edge_load[dst]).astype(
-        jnp.float32) <= kn.scale_in_dest
-    do = (small.num_partitions > 1) & (n_under >= 2) & fits
-    return src, dst, do
-
-
-def scale_in(state: PartitionState, kn: Knobs) -> PartitionState:
-    """Eqs. 6–8: if ≥2 machines under l, migrate min-load machine into the
-    next-least-loaded one (if it fits under destinationThreshold)."""
-    src, dst, do = scale_in_trigger(state, kn)
-
-    def migrate(s: PartitionState) -> PartitionState:
-        assignment = jnp.where(s.assignment == src, dst, s.assignment)
-        edge_load = s.edge_load.at[dst].add(s.edge_load[src]).at[src].set(0)
-        vertex_count = s.vertex_count.at[dst].add(s.vertex_count[src]).at[src].set(0)
-        cut = _recompute_cut(assignment, s.present, s.adj)
-        return s._replace(
-            assignment=assignment, edge_load=edge_load, vertex_count=vertex_count,
-            active=s.active.at[src].set(False),
-            num_partitions=s.num_partitions - 1,
-            cut_edges=cut,
-            scale_events=s.scale_events + 1,
-        )
-
-    return jax.lax.cond(do, migrate, lambda s: s, state)
-
-
-# ---------------------------------------------------------------------------
-# event branches
-# ---------------------------------------------------------------------------
-
-def _commit_add(state: PartitionState, v, row, p, scores, deg):
-    """Apply an ADD decision (partition p, scores vs current presence).
-    Shared by the faithful, mixed-window, and sweep engines.
-
-    Non-fresh (duplicate) adds scatter to the out-of-bounds row n, which
-    drop-mode scatters skip — cheaper inside a scan than a full-array
-    select, and identical values."""
-    n = state.assignment.shape[0]
-    fresh = ~state.present[v]  # ignore duplicate adds
-    tgt = jnp.where(fresh, v, n)
-    d = jnp.where(fresh, deg, 0)
-    sc = jnp.where(fresh, scores, 0)
-    return state._replace(
-        assignment=state.assignment.at[tgt].set(p, mode="drop"),
-        present=state.present.at[v].set(True),
-        adj=state.adj.at[tgt].set(row, mode="drop"),
-        vertex_count=state.vertex_count.at[p].add(fresh.astype(jnp.int32)),
-        edge_load=(state.edge_load + sc).at[p].add(d),
-        total_edges=state.total_edges + d,
-        cut_edges=state.cut_edges + d - sc[p],
-    )
-
-
-def _apply_add(state: PartitionState, v, row, key, policy: str, cfg: EngineConfig):
-    n = state.assignment.shape[0]
-    kn = make_knobs(cfg, n)
-    if policy == "sdp" and cfg.autoscale:
-        state = scale_out(state, kn)
-    scores, deg, _, _ = neighbor_stats(state, row)
-    choose = policy_fns(cfg.balance_guard)[POLICY_INDEX[policy]]
-    p = choose(state, scores, deg, v, key, kn, n)
-    return _commit_add(state, v, row, p, scores, deg)
-
-
-def _del_vertex_core(state: PartitionState, v):
-    """Remove vertex v and its incident edges (no scale-in)."""
-    n = state.assignment.shape[0]
-    was = state.present[v]
-    own_row = state.adj[v]
-    scores, deg, _, _ = neighbor_stats(state, own_row)
-    p = jnp.maximum(state.assignment[v], 0)
-    d = jnp.where(was, deg, 0)
-    sc = jnp.where(was, scores, 0)
-    return state._replace(
-        assignment=state.assignment.at[jnp.where(was, v, n)].set(
-            -1, mode="drop"),
-        present=state.present.at[v].set(False),
-        vertex_count=state.vertex_count.at[p].add(-was.astype(jnp.int32)),
-        edge_load=(state.edge_load - sc).at[p].add(-d),
-        total_edges=state.total_edges - d,
-        cut_edges=state.cut_edges - (d - sc[p]),
-    )
-
-
-def _apply_del_vertex(state: PartitionState, v, row, key, policy: str, cfg: EngineConfig):
-    state = _del_vertex_core(state, v)
-    if policy == "sdp" and cfg.autoscale:
-        state = scale_in(state, make_knobs(cfg, state.assignment.shape[0]))
-    return state
-
-
-def _del_edge_core(state: PartitionState, v, row):
-    """Remove edge (v, row[0]) if it exists (no config dependence)."""
-    u = row[0]
-    safe_u = jnp.maximum(u, 0)
-    in_adj = jnp.any(state.adj[v] == u) & (u >= 0)
-    exists = state.present[v] & state.present[safe_u] & in_adj
-    pv = jnp.maximum(state.assignment[v], 0)
-    pu = jnp.maximum(state.assignment[safe_u], 0)
-    e = exists.astype(jnp.int32)
-    cutdec = (exists & (pv != pu)).astype(jnp.int32)
-    # row-wise edits only (u < 0 rewrites the rows with themselves) — a
-    # full-array select here is a per-event O(n·max_deg) copy in the scan
-    row_v = jnp.where((state.adj[v] == u) & (u >= 0), -1, state.adj[v])
-    adj = state.adj.at[v].set(row_v)
-    row_u = jnp.where((adj[safe_u] == v) & (u >= 0), -1, adj[safe_u])
-    adj = adj.at[safe_u].set(row_u)
-    return state._replace(
-        adj=adj,
-        edge_load=state.edge_load.at[pv].add(-e).at[pu].add(-e),
-        total_edges=state.total_edges - e,
-        cut_edges=state.cut_edges - cutdec,
-    )
-
-
-def _apply_del_edge(state: PartitionState, v, row, key, policy: str, cfg: EngineConfig):
-    return _del_edge_core(state, v, row)
-
-
-def _apply_pad(state, v, row, key, policy, cfg):
-    return state
+__all__ = [
+    "EventTrace", "Knobs", "make_knobs", "knobs_arrays", "neighbor_stats",
+    "nth_active", "masked_argmin", "load_stats", "policy_fns", "POLICY_INDEX",
+    "scale_out", "scale_in", "scale_in_trigger", "run_events", "run_stream",
+    "trace_at",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -387,25 +57,13 @@ def run_events(
     cfg: EngineConfig,
 ) -> tuple[PartitionState, EventTrace]:
     """Process a chunk of events; resumable (checkpoint state between chunks)."""
-    base_key = state.key
-
-    def step(s: PartitionState, ev):
-        et, v, row, i = ev
-        key = jax.random.fold_in(base_key, i)
-        sv = jnp.maximum(v, 0)
-        branches = [_apply_add, _apply_del_vertex, _apply_del_edge, _apply_pad]
-        s = jax.lax.switch(
-            jnp.clip(et, 0, 3),
-            [functools.partial(f, policy=policy, cfg=cfg) for f in branches],
-            s, sv, row, key,
-        )
-        _, load_dev = load_stats(s)
-        tr = EventTrace(s.total_edges, s.cut_edges, s.num_partitions, load_dev)
-        return s, tr
-
-    idx = t0 + jnp.arange(etype.shape[0], dtype=jnp.int32)
-    final, trace = jax.lax.scan(step, state, (etype, vertex, nbrs, idx))
-    return final, trace
+    n = state.assignment.shape[0]
+    trn = make_transition(
+        make_knobs(cfg, n), n,
+        balance_guard=cfg.balance_guard, policy=policy,
+        autoscale=cfg.autoscale and policy == "sdp",
+    )
+    return scan_events(trn.step, state, etype, vertex, nbrs, t0)
 
 
 def run_stream(

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.core.config import EngineConfig
 from repro.graph.stream import (

@@ -1,0 +1,602 @@
+"""Unified event-transition kernel — the ONE definition site for SDP's
+add/delete transitions, policy dispatch, and autoscale hooks.
+
+Three engine paths consume these functions:
+
+  (a) the faithful per-event scan (``repro.core.engine.run_events``),
+  (b) the mixed-window journal kernel (``repro.core.windowed``), and
+  (c) the vmapped/sharded sweep lanes (``repro.runtime.sweep``).
+
+They differ only in *how the knobs enter the graph*, which is the
+static-vs-traced parameterization this module provides:
+
+* **static knob** (``make_transition`` → ``EventTransition.step``) —
+  ``policy`` is a Python string and ``autoscale`` a Python bool. The
+  chooser is picked at trace time, the scale hooks are traced
+  unconditionally (``scale_out``/``scale_in`` are internally
+  data-dependent no-ops when their trigger is false), and the event
+  branches dispatch through ``lax.switch`` — right for a *scalar* event
+  type, which executes exactly one branch. This is the single-run
+  engine path: one compiled program per (policy, cfg).
+
+* **traced knob** (``make_masked_step``) — ``policy_idx`` is a traced
+  int32 dispatched with ``lax.switch`` over the full policy table
+  (``make_chooser``), and ``autoscale`` a traced bool gating the scale
+  effects per lane. The event branches are fused into one branch-free
+  masked step, because under ``vmap`` a *batched* switch/cond computes
+  every branch and selects. This is the sweep path: one compiled
+  program for ALL (policy × seed × config) lanes.
+
+The bit-identity contract: because ``make_knobs`` performs every
+host-side arithmetic step (products, percentages) before values enter
+the graph, a traced f32 knob executes exactly the same f32 ops as the
+trace-time-constant knob, and ``lax.cond(pred, f, identity)`` evaluates
+``f`` with the same operands as an unconditional ``f`` when ``pred`` is
+true. Every lane of every path is therefore bit-identical to the
+faithful engine — enforced by tests/test_sdp_engine.py,
+tests/test_mixed_window.py, tests/test_sweep.py and
+tests/test_sweep_sharded.py.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import EngineConfig, POLICIES
+from repro.core.state import PartitionState
+from repro.graph.stream import EVENT_ADD, EVENT_DEL_EDGE, EVENT_DEL_VERTEX
+
+_BIG = jnp.int32(2**30)
+
+
+class EventTrace(NamedTuple):
+    """Per-event metric trace (paper captures these at interval boundaries)."""
+    total_edges: jax.Array
+    cut_edges: jax.Array
+    num_partitions: jax.Array
+    load_std: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# engine knobs
+# ---------------------------------------------------------------------------
+
+class Knobs(NamedTuple):
+    """Numeric policy/scaling knobs derived from EngineConfig on the host.
+
+    All Python-level arithmetic (products, percentages) happens in
+    ``make_knobs`` so that the static path (fields are weak Python scalars,
+    embedded as f32 constants at trace time) and the dynamic sweep path
+    (fields are traced f32 scalars, see repro.runtime.sweep) perform
+    bit-identical f32 operations.
+    """
+    max_cap: jax.Array | float            # Eq. 5 MAXCAP
+    scale_in_l: jax.Array | float         # Eq. 6 l = tolerance*MAXCAP/100
+    scale_in_dest: jax.Array | float      # Eq. 7 destinationThreshold
+    ldg_cap_num: jax.Array | float        # ldg_slack * n (cap = this / k)
+    fennel_gamma: jax.Array | float
+    fennel_gm1: jax.Array | float         # gamma - 1
+    fennel_alpha_scale: jax.Array | float
+
+
+def make_knobs(cfg: EngineConfig, n: int) -> Knobs:
+    """Host-side knob derivation shared by every engine path."""
+    return Knobs(
+        max_cap=cfg.max_cap,
+        scale_in_l=cfg.tolerance_param * cfg.max_cap / 100.0,
+        scale_in_dest=cfg.max_cap - cfg.dest_param * cfg.max_cap / 100.0,
+        ldg_cap_num=cfg.ldg_slack * n,
+        fennel_gamma=cfg.fennel_gamma,
+        fennel_gm1=cfg.fennel_gamma - 1.0,
+        fennel_alpha_scale=cfg.fennel_alpha_scale,
+    )
+
+
+def knobs_arrays(cfg: EngineConfig, n: int) -> Knobs:
+    """Knobs as f32 scalars — the traced/vmapped form for the sweep runtime."""
+    kn = make_knobs(cfg, n)
+    return Knobs(*(jnp.float32(x) for x in kn))
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def neighbor_stats(state: PartitionState, row: jax.Array):
+    """(scores[k], deg, nb_present, safe_row): affinity of one vertex row.
+
+    scores[k] = |E(v) ∩ P_k| over *present* neighbours (paper Eq. 1).
+    """
+    valid = row >= 0
+    safe_row = jnp.where(valid, row, 0)
+    nb_present = valid & state.present[safe_row]
+    nb_assign = jnp.where(nb_present, state.assignment[safe_row], -1)
+    k_max = state.edge_load.shape[0]
+    onehot = (nb_assign[:, None] == jnp.arange(k_max, dtype=jnp.int32)[None, :])
+    scores = jnp.sum(onehot, axis=0, dtype=jnp.int32)
+    deg = jnp.sum(nb_present, dtype=jnp.int32)
+    return scores, deg, nb_present, safe_row
+
+
+def nth_active(active: jax.Array, i: jax.Array) -> jax.Array:
+    """Index of the i-th active partition (i < num active)."""
+    cum = jnp.cumsum(active.astype(jnp.int32)) - 1
+    return jnp.argmax((cum == i) & active).astype(jnp.int32)
+
+
+def masked_argmin(x: jax.Array, mask: jax.Array) -> jax.Array:
+    return jnp.argmin(jnp.where(mask, x, _BIG)).astype(jnp.int32)
+
+
+def load_stats(state):
+    """(avg_d, load_dev) over active partitions — Eqs. 2 & 10.
+
+    ``state`` is any carrier of active/edge_load/num_partitions
+    (PartitionState or the windowed engine's SmallState).
+    """
+    act = state.active
+    load = state.edge_load.astype(jnp.float32)
+    p = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
+    maxl = jnp.max(jnp.where(act, load, -jnp.inf))
+    minl = jnp.min(jnp.where(act, load, jnp.inf))
+    avg_d = (maxl - minl) / p
+    mean = jnp.sum(jnp.where(act, load, 0.0)) / p
+    var = jnp.sum(jnp.where(act, (load - mean) ** 2, 0.0)) / p
+    return avg_d, jnp.sqrt(var)
+
+
+# ---------------------------------------------------------------------------
+# policies: choose a partition for an arriving vertex
+# ---------------------------------------------------------------------------
+
+def _affinity_choice(state, scores: jax.Array, key: jax.Array):
+    """Paper Alg. 3: argmax affinity; tie → min load; no overlap → random."""
+    act = state.active
+    s = jnp.where(act, scores, -1)
+    best = jnp.max(s)
+    tied = act & (s == best)
+    p_tie = masked_argmin(state.edge_load, tied)          # tie → min load
+    ridx = jax.random.randint(key, (), 0, jnp.maximum(state.num_partitions, 1))
+    p_rand = nth_active(act, ridx)                        # no overlap → random
+    return jnp.where(best > 0, p_tie, p_rand)
+
+
+def _sdp_guard_inputs(state):
+    avg_d, load_dev = load_stats(state)
+    cut = jnp.maximum(state.cut_edges.astype(jnp.float32), 1.0)
+    w_dev = (state.total_edges.astype(jnp.float32) / cut) * load_dev  # Eq. 4
+    th = w_dev - load_dev                                             # Eq. 3
+    return avg_d, load_dev, th
+
+
+def _choose_sdp_text(state, scores, deg, v, key, kn: Knobs, n: int):
+    """§4.2.2 text semantics: imbalance (AVG_d > TH) ⇒ least-loaded."""
+    avg_d, _, th = _sdp_guard_inputs(state)
+    p_min = masked_argmin(state.edge_load, state.active)
+    p_aff = _affinity_choice(state, scores, key)
+    guard = (state.num_partitions > 1) & (avg_d > th)
+    return jnp.where(guard, p_min, p_aff)
+
+
+def _choose_sdp_alg1(state, scores, deg, v, key, kn: Knobs, n: int):
+    """Alg. 1 listing semantics: σ > TH ⇒ affinity path, else least-loaded."""
+    _, load_dev, th = _sdp_guard_inputs(state)
+    p_min = masked_argmin(state.edge_load, state.active)
+    p_aff = _affinity_choice(state, scores, key)
+    guard = (state.num_partitions > 1) & (load_dev > th)
+    return jnp.where(guard, p_aff, p_min)
+
+
+def _choose_ldg(state, scores, deg, v, key, kn: Knobs, n: int):
+    k = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
+    cap = kn.ldg_cap_num / k
+    w = 1.0 - state.vertex_count.astype(jnp.float32) / cap
+    h = scores.astype(jnp.float32) * jnp.maximum(w, 0.0)
+    h = jnp.where(state.active, h, -jnp.inf)
+    best = jnp.max(h)
+    tied = state.active & (h >= best - 1e-6)
+    return masked_argmin(state.vertex_count, tied)
+
+
+def _choose_fennel(state, scores, deg, v, key, kn: Knobs, n: int):
+    m = state.total_edges.astype(jnp.float32) + deg.astype(jnp.float32)
+    nt = jnp.maximum(jnp.sum(state.vertex_count).astype(jnp.float32), 1.0)
+    k = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
+    alpha = kn.fennel_alpha_scale * jnp.sqrt(k) * m / (nt**1.5)
+    cost = alpha * kn.fennel_gamma * \
+        state.vertex_count.astype(jnp.float32) ** kn.fennel_gm1
+    h = jnp.where(state.active, scores.astype(jnp.float32) - cost, -jnp.inf)
+    best = jnp.max(h)
+    tied = state.active & (h >= best - 1e-6)
+    return masked_argmin(state.vertex_count, tied)
+
+
+def _choose_hash(state, scores, deg, v, key, kn: Knobs, n: int):
+    idx = jnp.mod(v, jnp.maximum(state.num_partitions, 1))
+    return nth_active(state.active, idx)
+
+
+def _choose_random(state, scores, deg, v, key, kn: Knobs, n: int):
+    idx = jax.random.randint(key, (), 0, jnp.maximum(state.num_partitions, 1))
+    return nth_active(state.active, idx)
+
+
+def _choose_greedy(state, scores, deg, v, key, kn: Knobs, n: int):
+    return _affinity_choice(state, scores, key)
+
+
+POLICY_INDEX = {p: i for i, p in enumerate(POLICIES)}
+
+
+def policy_fns(balance_guard: str):
+    """Policy table in POLICIES order — indexable by POLICY_INDEX for the
+    static engines or by a traced lax.switch index in the sweep runtime."""
+    sdp = _choose_sdp_text if balance_guard == "text" else _choose_sdp_alg1
+    return (sdp, _choose_ldg, _choose_fennel, _choose_hash, _choose_random,
+            _choose_greedy)
+
+
+def make_chooser(balance_guard: str, policy: str | None = None,
+                 policy_idx: jax.Array | None = None) -> Callable:
+    """``choose(state, scores, deg, v, key, kn, n) -> p`` under either knob:
+    static-string (trace-time table pick) or traced-index (lax.switch)."""
+    table = policy_fns(balance_guard)
+    if (policy is None) == (policy_idx is None):
+        raise ValueError("pass exactly one of policy / policy_idx")
+    if policy is not None:
+        return table[POLICY_INDEX[policy]]
+
+    def choose(state, scores, deg, v, key, kn, n):
+        return jax.lax.switch(
+            policy_idx, list(table), state, scores, deg, v, key, kn, n)
+    return choose
+
+
+# ---------------------------------------------------------------------------
+# scaling (§4.2.3)
+# ---------------------------------------------------------------------------
+
+def scale_out(state, kn: Knobs):
+    """Eq. 5: if MAXCAP ≤ |E|/|P|, activate one more partition.
+
+    ``state`` is any carrier of active/num_partitions/total_edges/
+    scale_events/denied_scaleout (PartitionState or SmallState)."""
+    p = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
+    adding_threshold = state.total_edges.astype(jnp.float32) / p
+    want = kn.max_cap <= adding_threshold
+    slot_free = ~jnp.all(state.active)
+    do = want & slot_free
+    slot = jnp.argmax(~state.active).astype(jnp.int32)  # first inactive slot
+    return state._replace(
+        active=state.active.at[slot].set(jnp.where(do, True, state.active[slot])),
+        num_partitions=state.num_partitions + do.astype(jnp.int32),
+        scale_events=state.scale_events + do.astype(jnp.int32),
+        denied_scaleout=state.denied_scaleout + (want & ~slot_free).astype(jnp.int32),
+    )
+
+
+def recompute_cut(assignment, present, adj) -> jax.Array:
+    """Exact cut count (each undirected edge stored twice in adj)."""
+    valid = adj >= 0
+    safe = jnp.where(valid, adj, 0)
+    nb_present = valid & present[safe]
+    both = nb_present & present[:, None]
+    diff = assignment[:, None] != assignment[safe]
+    return (jnp.sum(both & diff, dtype=jnp.int32) // 2).astype(jnp.int32)
+
+
+def scale_in_trigger(small, kn: Knobs):
+    """Eqs. 6–8 trigger: (src, dst, do). `small` is any state carrying
+    active/edge_load/num_partitions — shared with the windowed journal."""
+    under = small.active & (small.edge_load.astype(jnp.float32) < kn.scale_in_l)
+    n_under = jnp.sum(under, dtype=jnp.int32)
+    src = masked_argmin(small.edge_load, small.active)
+    mask2 = small.active.at[src].set(False)
+    dst = masked_argmin(small.edge_load, mask2)
+    fits = (small.edge_load[src] + small.edge_load[dst]).astype(
+        jnp.float32) <= kn.scale_in_dest
+    do = (small.num_partitions > 1) & (n_under >= 2) & fits
+    return src, dst, do
+
+
+def scale_in(state: PartitionState, kn: Knobs,
+             gate=True) -> PartitionState:
+    """Eqs. 6–8: if ≥2 machines under l, migrate min-load machine into the
+    next-least-loaded one (if it fits under destinationThreshold).
+    ``gate`` AND-composes an outer condition (e.g. "this event was a
+    DEL_VERTEX" in the fused masked step) into the migrate trigger."""
+    src, dst, do = scale_in_trigger(state, kn)
+    do = do & gate
+
+    def migrate(s: PartitionState) -> PartitionState:
+        assignment = jnp.where(s.assignment == src, dst, s.assignment)
+        edge_load = s.edge_load.at[dst].add(s.edge_load[src]).at[src].set(0)
+        vertex_count = s.vertex_count.at[dst].add(s.vertex_count[src]).at[src].set(0)
+        cut = recompute_cut(assignment, s.present, s.adj)
+        return s._replace(
+            assignment=assignment, edge_load=edge_load, vertex_count=vertex_count,
+            active=s.active.at[src].set(False),
+            num_partitions=s.num_partitions - 1,
+            cut_edges=cut,
+            scale_events=s.scale_events + 1,
+        )
+
+    return jax.lax.cond(do, migrate, lambda s: s, state)
+
+
+# ---------------------------------------------------------------------------
+# event transition cores (shared by every engine path)
+# ---------------------------------------------------------------------------
+
+def commit_add(state: PartitionState, v, row, p, scores, deg):
+    """Apply an ADD decision (partition p, scores vs current presence).
+
+    Non-fresh (duplicate) adds scatter to the out-of-bounds row n, which
+    drop-mode scatters skip — cheaper inside a scan than a full-array
+    select, and identical values."""
+    n = state.assignment.shape[0]
+    fresh = ~state.present[v]  # ignore duplicate adds
+    tgt = jnp.where(fresh, v, n)
+    d = jnp.where(fresh, deg, 0)
+    sc = jnp.where(fresh, scores, 0)
+    return state._replace(
+        assignment=state.assignment.at[tgt].set(p, mode="drop"),
+        present=state.present.at[v].set(True),
+        adj=state.adj.at[tgt].set(row, mode="drop"),
+        vertex_count=state.vertex_count.at[p].add(fresh.astype(jnp.int32)),
+        edge_load=(state.edge_load + sc).at[p].add(d),
+        total_edges=state.total_edges + d,
+        cut_edges=state.cut_edges + d - sc[p],
+    )
+
+
+def del_vertex_core(state: PartitionState, v):
+    """Remove vertex v and its incident edges (no scale-in)."""
+    n = state.assignment.shape[0]
+    was = state.present[v]
+    own_row = state.adj[v]
+    scores, deg, _, _ = neighbor_stats(state, own_row)
+    p = jnp.maximum(state.assignment[v], 0)
+    d = jnp.where(was, deg, 0)
+    sc = jnp.where(was, scores, 0)
+    return state._replace(
+        assignment=state.assignment.at[jnp.where(was, v, n)].set(
+            -1, mode="drop"),
+        present=state.present.at[v].set(False),
+        vertex_count=state.vertex_count.at[p].add(-was.astype(jnp.int32)),
+        edge_load=(state.edge_load - sc).at[p].add(-d),
+        total_edges=state.total_edges - d,
+        cut_edges=state.cut_edges - (d - sc[p]),
+    )
+
+
+def del_edge_core(state: PartitionState, v, row):
+    """Remove edge (v, row[0]) if it exists (no config dependence)."""
+    u = row[0]
+    safe_u = jnp.maximum(u, 0)
+    in_adj = jnp.any(state.adj[v] == u) & (u >= 0)
+    exists = state.present[v] & state.present[safe_u] & in_adj
+    pv = jnp.maximum(state.assignment[v], 0)
+    pu = jnp.maximum(state.assignment[safe_u], 0)
+    e = exists.astype(jnp.int32)
+    cutdec = (exists & (pv != pu)).astype(jnp.int32)
+    # row-wise edits only (u < 0 rewrites the rows with themselves) — a
+    # full-array select here is a per-event O(n·max_deg) copy in the scan
+    row_v = jnp.where((state.adj[v] == u) & (u >= 0), -1, state.adj[v])
+    adj = state.adj.at[v].set(row_v)
+    row_u = jnp.where((adj[safe_u] == v) & (u >= 0), -1, adj[safe_u])
+    adj = adj.at[safe_u].set(row_u)
+    return state._replace(
+        adj=adj,
+        edge_load=state.edge_load.at[pv].add(-e).at[pu].add(-e),
+        total_edges=state.total_edges - e,
+        cut_edges=state.cut_edges - cutdec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the parameterized transition kernel
+# ---------------------------------------------------------------------------
+
+class EventTransition(NamedTuple):
+    """Event branches in EVENT_* code order — ``list(trn)`` is directly the
+    branch table for ``lax.switch`` over the event type."""
+    apply_add: Callable       # (state, v, row, key) -> state
+    apply_del_vertex: Callable
+    apply_del_edge: Callable
+    apply_pad: Callable
+
+    def step(self, state, et, v, row, key):
+        """One event through the branch switch (scalar ``et`` executes
+        exactly one branch — right for the single-lane reference engine;
+        batched lanes use ``make_masked_step`` instead, see its docstring)."""
+        return jax.lax.switch(jnp.clip(et, 0, 3), list(self),
+                              state, v, row, key)
+
+
+def make_scale_hooks(kn: Knobs, autoscale: bool):
+    """(scale_out_hook, scale_in_hook) under the static knob: False hooks
+    are identity and trace nothing; True hooks trace the — internally
+    data-dependent — scale ops unconditionally. Traced per-lane autoscale
+    belongs to ``make_masked_step`` (its gates mask the scale effects)."""
+    if not autoscale:
+        return (lambda s: s), (lambda s: s)
+    return (lambda s: scale_out(s, kn)), (lambda s: scale_in(s, kn))
+
+
+def make_transition(
+    kn: Knobs,
+    n: int,
+    *,
+    balance_guard: str,
+    policy: str,
+    autoscale: bool = False,
+) -> EventTransition:
+    """Build the four event branches for one engine lane — the
+    *static-knob* binding: ``policy`` is a Python string and ``autoscale``
+    a Python bool (the caller resolves ``cfg.autoscale and policy ==
+    "sdp"``). The branch switch is right when the event type is a scalar;
+    batched lanes (the sweep's traced knob) use ``make_masked_step``.
+    """
+    choose = make_chooser(balance_guard, policy)
+    so_hook, si_hook = make_scale_hooks(kn, autoscale)
+
+    def apply_add(state, v, row, key):
+        state = so_hook(state)
+        scores, deg, _, _ = neighbor_stats(state, row)
+        p = choose(state, scores, deg, v, key, kn, n)
+        return commit_add(state, v, row, p, scores, deg)
+
+    def apply_del_vertex(state, v, row, key):
+        state = del_vertex_core(state, v)
+        return si_hook(state)
+
+    def apply_del_edge(state, v, row, key):
+        return del_edge_core(state, v, row)
+
+    def apply_pad(state, v, row, key):
+        return state
+
+    return EventTransition(apply_add, apply_del_vertex, apply_del_edge,
+                           apply_pad)
+
+
+def make_masked_step(
+    kn: Knobs,
+    n: int,
+    *,
+    balance_guard: str,
+    policy: str | None = None,
+    policy_idx: jax.Array | None = None,
+    autoscale=False,
+) -> Callable:
+    """Fused, branch-free event step: ``step(state, et, v, row, key)``.
+
+    Bit-identical to ``EventTransition.step`` (same cores, same op order)
+    but merges the three event effects with masks and row-level drop-mode
+    scatters instead of a ``lax.switch``. Under ``vmap`` — the sweep's
+    traced path — a switch/cond with a *batched* predicate computes every
+    branch and selects, so the reference step pays all four branches plus
+    a full-state (incl. (n, max_deg) adjacency) select per event per
+    lane; here only one masked neighbour-gather per effect remains and
+    every large-array write is an unconditional drop-mode scatter (the
+    same design that makes the mixed-window kernel fast). Knob
+    parameterization matches ``make_transition``.
+    """
+    choose = make_chooser(balance_guard, policy, policy_idx)
+    static_auto = isinstance(autoscale, bool)
+    scaling = autoscale is not False   # trace-level: any scaling code?
+
+    def step(state: PartitionState, et, v, row, key) -> PartitionState:
+        is_add = et == EVENT_ADD
+        is_dv = et == EVENT_DEL_VERTEX
+        is_de = et == EVENT_DEL_EDGE
+
+        # --- scale-out before the ADD decision (§4.2.3, add events only);
+        # touches only the O(K) fields, so the masked merge is cheap ---
+        if scaling:
+            gate = is_add if static_auto else is_add & autoscale
+            so = scale_out(state, kn)
+            state = state._replace(
+                active=jnp.where(gate, so.active, state.active),
+                num_partitions=jnp.where(gate, so.num_partitions,
+                                         state.num_partitions),
+                scale_events=jnp.where(gate, so.scale_events,
+                                       state.scale_events),
+                denied_scaleout=jnp.where(gate, so.denied_scaleout,
+                                          state.denied_scaleout),
+            )
+
+        # --- ADD effect (commit_add quantities; faithful apply_add) ---
+        row_add = jnp.where(is_add, row, -1)
+        sc_add, deg_add, _, _ = neighbor_stats(state, row_add)
+        p_add = choose(state, sc_add, deg_add, v, key, kn, n)
+        fresh = is_add & ~state.present[v]
+        d_add = jnp.where(fresh, deg_add, 0)
+        sc_a = jnp.where(fresh, sc_add, 0)
+
+        # --- DEL_VERTEX effect (del_vertex_core quantities) ---
+        own_row = state.adj[v]
+        row_dv = jnp.where(is_dv, own_row, -1)
+        sc_dvs, deg_dv, _, _ = neighbor_stats(state, row_dv)
+        was = is_dv & state.present[v]
+        p_dv = jnp.maximum(state.assignment[v], 0)
+        d_dv = jnp.where(was, deg_dv, 0)
+        sc_d = jnp.where(was, sc_dvs, 0)
+
+        # --- DEL_EDGE effect (del_edge_core quantities) ---
+        u = row[0]
+        safe_u = jnp.maximum(u, 0)
+        in_adj = jnp.any(own_row == u) & (u >= 0)
+        exists = is_de & state.present[v] & state.present[safe_u] & in_adj
+        pu = jnp.maximum(state.assignment[safe_u], 0)
+        e = exists.astype(jnp.int32)
+        cutdec = (exists & (p_dv != pu)).astype(jnp.int32)
+
+        # --- masked counter merge (one event type per step ⇒ exact) ---
+        vertex_count = (state.vertex_count
+                        .at[p_add].add(fresh.astype(jnp.int32))
+                        .at[p_dv].add(-was.astype(jnp.int32)))
+        edge_load = ((state.edge_load + sc_a - sc_d)
+                     .at[p_add].add(d_add).at[p_dv].add(-d_dv)
+                     .at[p_dv].add(-e).at[pu].add(-e))
+        total_edges = state.total_edges + d_add - d_dv - e
+        cut_edges = (state.cut_edges + (d_add - sc_a[p_add])
+                     - (d_dv - sc_d[p_dv]) - cutdec)
+
+        # --- row-level array updates (never a full-array select) ---
+        assignment = (state.assignment
+                      .at[jnp.where(fresh, v, n)].set(p_add, mode="drop")
+                      .at[jnp.where(was, v, n)].set(-1, mode="drop"))
+        present = (state.present
+                   .at[jnp.where(is_add, v, n)].set(True, mode="drop")
+                   .at[jnp.where(is_dv, v, n)].set(False, mode="drop"))
+        row_v_de = jnp.where((own_row == u) & (u >= 0), -1, own_row)
+        w1_val = jnp.where(is_add, row, jnp.where(is_de, row_v_de, own_row))
+        w1_tgt = jnp.where(fresh | is_de, v, n)
+        adj = state.adj.at[w1_tgt].set(w1_val, mode="drop")
+        row_u = adj[safe_u]                   # after write 1 (self-loops)
+        row_u_de = jnp.where((row_u == v) & (u >= 0), -1, row_u)
+        adj = adj.at[jnp.where(is_de, safe_u, n)].set(row_u_de, mode="drop")
+
+        state = state._replace(
+            assignment=assignment, present=present, adj=adj,
+            vertex_count=vertex_count, edge_load=edge_load,
+            total_edges=total_edges, cut_edges=cut_edges,
+        )
+
+        # --- scale-in after DEL_VERTEX (faithful apply_del_vertex) ---
+        if scaling:
+            gate_dv = is_dv if static_auto else is_dv & autoscale
+            state = scale_in(state, kn, gate=gate_dv)
+        return state
+
+    return step
+
+
+def scan_events(
+    step_fn: Callable,    # (state, et, v, row, key) -> state
+    state: PartitionState,
+    etype: jax.Array,     # (T,)
+    vertex: jax.Array,    # (T,)
+    nbrs: jax.Array,      # (T, max_deg)
+    t0: jax.Array,        # () global index of first event (RNG alignment)
+) -> tuple[PartitionState, EventTrace]:
+    """Per-event lax.scan over one lane — the faithful event loop shared by
+    the reference engine (``EventTransition.step``) and every sweep lane
+    (``make_masked_step``)."""
+    base_key = state.key
+
+    def step(s: PartitionState, ev):
+        et, v, row, i = ev
+        key = jax.random.fold_in(base_key, i)
+        sv = jnp.maximum(v, 0)
+        s = step_fn(s, et, sv, row, key)
+        _, load_dev = load_stats(s)
+        tr = EventTrace(s.total_edges, s.cut_edges, s.num_partitions, load_dev)
+        return s, tr
+
+    idx = t0 + jnp.arange(etype.shape[0], dtype=jnp.int32)
+    return jax.lax.scan(step, state, (etype, vertex, nbrs, idx))

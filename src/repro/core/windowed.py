@@ -22,11 +22,13 @@ Two window kernels exist:
 * ``run_window_adds`` — ADD-only windows, carries just the O(K) counter
   slice through the fixup scan (the fast path for insert-only streams);
 * ``run_window_mixed`` — arbitrary interleavings of ADD / DEL_VERTEX /
-  DEL_EDGE processed entirely on device. ADD slots keep the batched
-  committed-score decomposition; a per-slot label journal (``cur_label``)
-  plus a precomputed last-touch map corrects each ADD's scores for
-  neighbours whose presence changed earlier in the same window, and the
-  DEL branches reuse the faithful engine's deletion semantics verbatim.
+  DEL_EDGE processed entirely on device, scoring every slot from a dense
+  per-vertex label journal; the transition semantics come verbatim from
+  ``repro.core.transition`` (the single definition site shared with the
+  faithful engine and the sweep runtime). ``sweep_window_mixed`` is the
+  same kernel under the *traced* knob (lax.switch policy, per-lane
+  autoscale gate), vmapped across sweep lanes — how ``run_sweep``'s
+  ``engine="windowed"`` mode inherits the window speedup.
 
 The host driver slices the stream into *fixed* windows — deletion events
 no longer split windows, so delete-heavy churn streams (the paper's
@@ -43,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine as eng
+from repro.core import transition as tx
 from repro.core.config import EngineConfig
 from repro.core.state import PartitionState, init_state
 from repro.graph.stream import (
@@ -106,8 +109,8 @@ def run_window_adds(
     w = vs.shape[0]
     k_max = state.edge_load.shape[0]
     base_key = state.key
-    kn = eng.make_knobs(cfg, n)
-    choose = eng.policy_fns(cfg.balance_guard)[eng.POLICY_INDEX[policy]]
+    kn = tx.make_knobs(cfg, n)
+    choose = tx.make_chooser(cfg.balance_guard, policy)
     is_add = vs >= 0
     safe_vs = jnp.where(is_add, vs, 0)
 
@@ -127,7 +130,7 @@ def run_window_adds(
         if policy == "sdp" and cfg.autoscale:
             # faithful engine scales out per ADD event only (pads skip it)
             small = jax.lax.cond(
-                is_add[i], lambda s: eng.scale_out(s, kn), lambda s: s, small
+                is_add[i], lambda s: tx.scale_out(s, kn), lambda s: s, small
             )
         intra = (win_pos[i] >= 0) & (win_pos[i] < i)
         nb_wa = jnp.where(intra, w_assign[jnp.where(intra, win_pos[i], 0)], -1)
@@ -174,16 +177,16 @@ def run_window_adds(
 
 
 def _scale_in_journal(small: SmallState, label_now, adj, kn):
-    """engine.scale_in (§4.2.3, Eqs. 6–8) on the window-local journal
+    """transition.scale_in (§4.2.3, Eqs. 6–8) on the window-local journal
     representation (label_now ≡ assignment, label_now >= 0 ≡ present).
     The trigger is shared with the faithful engine so the two cannot
     drift; only the migrate body differs (journal instead of state)."""
-    src, dst, do = eng.scale_in_trigger(small, kn)
+    src, dst, do = tx.scale_in_trigger(small, kn)
 
     def migrate(args):
         sm, ln = args
         ln2 = jnp.where(ln == src, dst, ln)
-        cut = eng._recompute_cut(ln2, ln2 >= 0, adj)
+        cut = tx.recompute_cut(ln2, ln2 >= 0, adj)
         sm2 = sm._replace(
             edge_load=sm.edge_load.at[dst].add(
                 sm.edge_load[src]).at[src].set(0),
@@ -199,19 +202,19 @@ def _scale_in_journal(small: SmallState, label_now, adj, kn):
     return jax.lax.cond(do, migrate, lambda a: a, (small, label_now))
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "cfg"))
-def run_window_mixed(
+def _window_mixed_lane(
     state: PartitionState,
     ets: jax.Array,      # (W,) event types (EVENT_* codes)
     vs: jax.Array,       # (W,) subject vertex ids (-1 pad allowed)
     rows: jax.Array,     # (W, max_deg) neighbour rows / deletion operands
     t0: jax.Array,       # () global event index of window start
+    kn: tx.Knobs,        # static (python floats) or traced (f32 scalars)
     *,
-    policy: str,
-    cfg: EngineConfig,
+    choose,              # transition.make_chooser under either knob
+    autoscaling: bool,   # trace-level gate: is any scaling code traced?
+    do_scale=None,       # traced bool (sweep lanes) or None (static engine)
 ) -> PartitionState:
-    """Process one window of interleaved ADD / DEL_VERTEX / DEL_EDGE events
-    entirely on device, bit-identical to the faithful engine.
+    """One mixed window for one lane — the shared body under either knob.
 
     Because deletions (and earlier adds) inside the window change
     neighbour presence mid-window, scores are read from a dense
@@ -226,22 +229,25 @@ def run_window_mixed(
     The fixup scan carries only (counters, label_now, adj), and no
     conditional touches the O(n·max_deg) adjacency as a *written*
     operand: one slot holds exactly one event type, so each branch's
-    effect (repro.core.engine._apply_add / _del_vertex_core /
-    _del_edge_core semantics) is computed as a masked O(max_deg·K)
-    contribution to the counters plus at most two row-level drop-mode
-    scatters into adj. XLA conditionals copy every large operand a
-    branch writes — which is what made per-event processing of this
-    state memory-bound in the first place. The scale-in cond below
-    *reads* adj (cut recompute, copy-free) and writes only the O(n)
-    label journal — same per-delete cost as the faithful engine's
-    assignment rewrite, negligible next to adj.
+    effect (transition.commit_add / del_vertex_core / del_edge_core
+    semantics) is computed as a masked O(max_deg·K) contribution to the
+    counters plus at most two row-level drop-mode scatters into adj.
+    XLA conditionals copy every large operand a branch writes — which is
+    what made per-event processing of this state memory-bound in the
+    first place. The scale-in cond below *reads* adj (cut recompute,
+    copy-free) and writes only the O(n) label journal — same per-delete
+    cost as the faithful engine's assignment rewrite, negligible next
+    to adj.
+
+    ``do_scale`` extends the trace-time ``autoscaling`` gate to a
+    per-lane runtime gate for the sweep: a runtime-False lane masks the
+    scale-out select and scale-in cond to no-ops, bit-identical to a
+    statically non-autoscaling trace.
     """
     n = state.assignment.shape[0]
     w = vs.shape[0]
     k_max = state.edge_load.shape[0]
     base_key = state.key
-    kn = eng.make_knobs(cfg, n)
-    choose = eng.policy_fns(cfg.balance_guard)[eng.POLICY_INDEX[policy]]
 
     ets = jnp.where(vs >= 0, ets, EVENT_PAD)
     is_add = ets == EVENT_ADD
@@ -250,10 +256,8 @@ def run_window_mixed(
     safe_vs = jnp.where(vs >= 0, vs, 0)
 
     rows_add = jnp.where(is_add[:, None], rows, -1)
-    safe_rows = jnp.maximum(rows_add, 0)
 
     arange_k = jnp.arange(k_max, dtype=jnp.int32)
-    autoscaling = policy == "sdp" and cfg.autoscale
 
     def onehot_sum(labels):
         return jnp.sum(labels[:, None] == arange_k, axis=0, dtype=jnp.int32)
@@ -268,26 +272,31 @@ def run_window_mixed(
         u = row[0]
         safe_u = jnp.maximum(u, 0)
 
-        # --- ADD: corrected scores + policy choice (faithful _apply_add) ---
+        # --- ADD: corrected scores + policy choice (faithful apply_add) ---
         if autoscaling:
-            scaled = eng.scale_out(small, kn)
+            gate = add_i if do_scale is None else add_i & do_scale
+            scaled = tx.scale_out(small, kn)
             small = jax.tree_util.tree_map(
-                lambda a, b: jnp.where(add_i, a, b), scaled, small)
-        eff = jnp.where(rows_add[i] >= 0, label_now[safe_rows[i]], -1)
-        sc_add = onehot_sum(eff)
-        deg_add = jnp.sum(eff >= 0, dtype=jnp.int32)
-        p = choose(small, sc_add, deg_add, v, key, kn, n)
+                lambda a, b: jnp.where(gate, a, b), scaled, small)
+        # one journal gather + histogram serves the whole slot: an ADD
+        # scores its event row, a DEL_VERTEX its own adjacency row, and a
+        # slot holds exactly one event type, so the sources never overlap.
+        # (p is still computed for non-ADD slots but only reaches zero-
+        # masked scatters — the values written are exact either way.)
+        src_row = jnp.where(add_i, rows_add[i], jnp.where(dv_i, own_row, -1))
+        eff = jnp.where(src_row >= 0, label_now[jnp.maximum(src_row, 0)], -1)
+        sc_eff = onehot_sum(eff)
+        deg_eff = jnp.sum(eff >= 0, dtype=jnp.int32)
+        p = choose(small, sc_eff, deg_eff, v, key, kn, n)
         fresh = add_i & (label_now[v] < 0)
-        d_add = jnp.where(fresh, deg_add, 0)
-        sc_a = jnp.where(fresh, sc_add, 0)
+        d_add = jnp.where(fresh, deg_eff, 0)
+        sc_a = jnp.where(fresh, sc_eff, 0)
 
-        # --- DEL_VERTEX (faithful _del_vertex_core over the journal) ---
+        # --- DEL_VERTEX (faithful del_vertex_core over the journal) ---
         was = dv_i & (label_now[v] >= 0)
-        dv_labels = jnp.where(own_row >= 0,
-                              label_now[jnp.maximum(own_row, 0)], -1)
         p_dv = jnp.maximum(label_now[v], 0)
-        d_dv = jnp.where(was, jnp.sum(dv_labels >= 0, dtype=jnp.int32), 0)
-        sc_d = jnp.where(was, onehot_sum(dv_labels), 0)
+        d_dv = jnp.where(was, deg_eff, 0)
+        sc_d = jnp.where(was, sc_eff, 0)
 
         # --- DEL_EDGE (faithful _del_edge_core over the journal) ---
         in_adj = jnp.any(own_row == u) & (u >= 0)
@@ -323,10 +332,11 @@ def run_window_mixed(
         row_u_de = jnp.where((row_u == v) & (u >= 0), -1, row_u)
         adj = adj.at[jnp.where(de_i, safe_u, n)].set(row_u_de, mode="drop")
 
-        # --- scale-in after DEL_VERTEX (faithful _apply_del_vertex) ---
+        # --- scale-in after DEL_VERTEX (faithful apply_del_vertex) ---
         if autoscaling:
+            gate_dv = dv_i if do_scale is None else dv_i & do_scale
             small, label_now = jax.lax.cond(
-                dv_i,
+                gate_dv,
                 lambda sm, ln: _scale_in_journal(sm, ln, adj, kn),
                 lambda sm, ln: (sm, ln),
                 small, label_now,
@@ -346,6 +356,92 @@ def run_window_mixed(
         total_edges=small.total_edges, cut_edges=small.cut_edges,
         denied_scaleout=small.denied_scaleout, scale_events=small.scale_events,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("policy", "cfg"))
+def run_window_mixed(
+    state: PartitionState,
+    ets: jax.Array,      # (W,) event types (EVENT_* codes)
+    vs: jax.Array,       # (W,) subject vertex ids (-1 pad allowed)
+    rows: jax.Array,     # (W, max_deg) neighbour rows / deletion operands
+    t0: jax.Array,       # () global event index of window start
+    *,
+    policy: str,
+    cfg: EngineConfig,
+) -> PartitionState:
+    """Process one window of interleaved ADD / DEL_VERTEX / DEL_EDGE events
+    entirely on device, bit-identical to the faithful engine — the
+    static-knob entry over ``_window_mixed_lane`` (see its docstring for
+    the journal decomposition)."""
+    n = state.assignment.shape[0]
+    return _window_mixed_lane(
+        state, ets, vs, rows, t0, tx.make_knobs(cfg, n),
+        choose=tx.make_chooser(cfg.balance_guard, policy),
+        autoscaling=policy == "sdp" and cfg.autoscale,
+    )
+
+
+def sweep_window_mixed(
+    states: PartitionState,   # stacked (L, ...) lanes
+    kns: tx.Knobs,            # stacked (L,) f32 knobs
+    policy_idx: jax.Array,    # (L,) int32 into POLICIES order
+    autoscale: jax.Array,     # (L,) bool (cfg.autoscale per lane)
+    ets: jax.Array,           # (L, T) per-lane — or (T,) shared — events
+    vs: jax.Array,            # (L, T) / (T,)
+    rows: jax.Array,          # (L, T, max_deg) / (T, max_deg)
+    t0: jax.Array,            # () global event index of the first event
+    *,
+    balance_guard: str,
+    autoscale_mode: str,      # "off" | "dynamic"
+    window: int = 256,
+    shared_stream: bool = False,
+) -> PartitionState:
+    """A whole stream of mixed windows across all sweep lanes, in ONE
+    device program: per lane, a lax.scan over windows whose body
+    dynamic-slices the next ``window`` events and runs
+    ``_window_mixed_lane`` under the *traced* knob (policy via
+    lax.switch, autoscale via a per-lane runtime gate) — no host loop,
+    no per-window re-dispatch. T must be a multiple of ``window``
+    (right-pad with EVENT_PAD). Sweeps thereby ride the same window
+    kernel as single runs, bit-identical per lane. ``shared_stream``
+    takes one (T,)-shaped stream for every lane: the O(T·max_deg)
+    neighbour tensor rides vmap in_axes=None unbatched while the O(T)
+    etype/vertex columns are broadcast lane-wise on device (see
+    repro.runtime.sweep._scan_lanes for why the vertex index must be
+    lane-batched). Not jitted here — the sweep runtime wraps it in jit
+    or shard_map+jit (repro.runtime.sweep)."""
+    dynamic = autoscale_mode == "dynamic"
+    sdp_idx = tx.POLICY_INDEX["sdp"]
+
+    def one_lane(state, kn, pidx, auto, ets_l, vs_l, rows_l):
+        do = auto & (pidx == sdp_idx)
+        choose = tx.make_chooser(balance_guard, policy_idx=pidx)
+        n_windows = ets_l.shape[0] // window
+
+        def body(s, w):
+            i0 = w * window
+            s = _window_mixed_lane(
+                s,
+                jax.lax.dynamic_slice_in_dim(ets_l, i0, window),
+                jax.lax.dynamic_slice_in_dim(vs_l, i0, window),
+                jax.lax.dynamic_slice_in_dim(rows_l, i0, window),
+                t0 + i0, kn,
+                choose=choose, autoscaling=dynamic,
+                do_scale=do if dynamic else None,
+            )
+            return s, None
+
+        s, _ = jax.lax.scan(body, state,
+                            jnp.arange(n_windows, dtype=jnp.int32))
+        return s
+
+    ax = None if shared_stream else 0
+    if shared_stream:
+        lanes = states.assignment.shape[0]
+        ets = jnp.broadcast_to(ets, (lanes,) + ets.shape)
+        vs = jnp.broadcast_to(vs, (lanes,) + vs.shape)
+    return jax.vmap(one_lane, in_axes=(0, 0, 0, 0, 0, 0, ax))(
+        states, kns, policy_idx, autoscale, ets, vs, rows)
 
 
 def _pad_to(arr, length, fill):

@@ -36,6 +36,27 @@ def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
     return make_mesh_compat((data, model), ("data", "model"))
 
 
+def make_lane_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
+    """1-D mesh over local devices for lane-parallel sweeps (axis "lanes").
+
+    The sweep runtime (repro.runtime.sweep) shard_maps the lane axis of a
+    (policy × seed × config) sweep over this mesh; lanes are embarrassingly
+    parallel, so the mesh carries no collectives.
+    """
+    if n_devices is None:
+        n_devices = jax.device_count()
+    return make_mesh_compat((n_devices,), ("lanes",))
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (experimental until ~0.6)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
 def mesh_devices(mesh: jax.sharding.Mesh) -> int:
     n = 1
     for s in mesh.shape.values():

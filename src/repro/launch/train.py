@@ -12,7 +12,6 @@ Use --full to build the full-size config instead (requires a real pod).
 from __future__ import annotations
 
 import argparse
-import functools
 import time
 
 import jax
@@ -23,7 +22,6 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_arch
 from repro.data import pipeline as dp
 from repro.graph.generators import make_graph
-from repro.launch.mesh import make_host_mesh
 from repro.models import recsys as RS
 from repro.models import transformer as T
 from repro.models.gnn import common as C

@@ -14,7 +14,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models import layers as L
 
 
 @dataclasses.dataclass(frozen=True)

@@ -10,7 +10,6 @@ Optimizer state dtype is fp32 regardless of param dtype (bf16 training).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple
 
 import jax

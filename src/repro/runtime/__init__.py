@@ -1,5 +1,5 @@
 """Distributed runtime: sharding rules, halo-sharded GNN, elastic re-mesh,
-and the vmapped (policy × seed × config) sweep engine."""
+and the device-sharded (policy × seed × config × stream) sweep engine."""
 from repro.runtime.sweep import SweepResult, SweepRun, run_sweep, sweep_events
 
 __all__ = ["SweepResult", "SweepRun", "run_sweep", "sweep_events"]

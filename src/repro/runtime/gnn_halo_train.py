@@ -22,7 +22,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.models import layers as L
 from repro.models.gnn import common as C
-from repro.models.gnn.meshgraphnet import MGNConfig, _block, _mlp_dims
+from repro.models.gnn.meshgraphnet import MGNConfig, _block
 
 
 def mgn_halo_local_loss(params, batch, cfg: MGNConfig, *, axes,

@@ -12,7 +12,6 @@ All pjit-boundary shardings are even: attention projections are stored 2D
 from __future__ import annotations
 
 import re
-from typing import Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -1,18 +1,41 @@
-"""Vmapped sweep runtime: many (policy × seed × config) streams in ONE
-jitted device program.
+"""Device-sharded sweep runtime: many (policy × seed × config × stream)
+lanes in ONE device program, lanes sharded across devices.
 
 The figure benchmarks previously looped over policies/configs on the host,
 re-dispatching the whole stream scan per run. Here every run becomes a
-*lane* of a vmapped engine: `PartitionState` is stacked along a leading
-axis, the numeric knobs (`repro.core.engine.Knobs`) become traced f32
-scalars, and the policy becomes a traced index dispatched with
-``lax.switch``. Because `make_knobs` performs all host-side arithmetic
-before the values enter the graph, the dynamic lanes execute bit-identical
-f32 ops to the static single-run engine — verified by tests/test_sweep.py.
+*lane*: `PartitionState` is stacked along a leading axis, each lane
+carries its OWN (T,)-padded event stream (per-seed stream permutations
+and per-lane churn mixes), and the lane axis is sharded across local
+devices with ``shard_map`` over the 1-D "lanes" mesh
+(repro.launch.mesh.make_lane_mesh) — vmap inside each shard, the lane
+axis padded to a multiple of the device count, with a plain vmapped
+host-fallback when only one device exists (or ``shard=False``).
 
-Static requirements across lanes: identical ``k_max`` (array shapes) and
-``balance_guard`` (trace-time branch). ``k_init``, ``seed``, ``autoscale``
-and all numeric knobs vary freely per lane.
+Static-vs-traced knob parameterization
+--------------------------------------
+Both sweep kernels are the *traced-knob* instantiation of the unified
+transition layer (repro.core.transition): the numeric knobs
+(`transition.Knobs`) enter as stacked f32 scalars, the policy as a
+traced int32 dispatched with ``lax.switch`` over the full policy table,
+and per-lane autoscale as a traced bool gating the scale hooks. The
+single-run engines bind the same functions with *static* knobs (Python
+string/bool), so XLA specializes one program per config there and one
+program for ALL lanes here. Because ``transition.make_knobs`` performs
+every host-side arithmetic step before values enter the graph, the two
+bindings execute bit-identical f32 ops.
+
+The bit-identity contract: every lane — vmapped or sharded, per-event
+(``engine="scan"``) or mixed-window (``engine="windowed"``), whole-stream
+or chunked — produces exactly the same `PartitionState` (and, for the
+scan engine, `EventTrace`) as ``repro.core.engine.run_stream`` on that
+lane's stream with that lane's (policy, cfg, seed). Enforced by
+tests/test_sweep.py and tests/test_sweep_sharded.py (the latter also
+under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` in CI).
+
+Static requirements across lanes: identical ``k_max`` (array shapes),
+``balance_guard`` (trace-time branch), and vertex-universe size ``n``.
+``k_init``, ``seed``, ``autoscale``, the stream, and all numeric knobs
+vary freely per lane.
 """
 from __future__ import annotations
 
@@ -21,15 +44,19 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
 
-from repro.core import engine as eng
+from repro.core import transition as tx
 from repro.core.config import EngineConfig
 from repro.core.state import PartitionState, init_state
-from repro.graph.stream import VertexStream
+from repro.core.windowed import sweep_window_mixed
+from repro.graph.stream import EVENT_PAD, VertexStream
+from repro.launch.mesh import make_lane_mesh, shard_map_compat
 
 
 class SweepRun(NamedTuple):
-    """One lane of a sweep: a policy/config/seed triple over the stream."""
+    """One lane of a sweep: a policy/config/seed triple over its stream."""
     policy: str = "sdp"
     cfg: EngineConfig = EngineConfig()
     seed: int = 0
@@ -40,73 +67,93 @@ class SweepResult(NamedTuple):
     cfg: EngineConfig
     seed: int
     state: PartitionState
-    trace: eng.EventTrace
+    trace: tx.EventTrace | None   # None for engine="windowed"
 
 
-@functools.partial(
-    jax.jit, static_argnames=("balance_guard", "autoscale_mode"))
-def sweep_events(
+def _scan_lanes(
     states: PartitionState,   # stacked (L, ...) lanes
-    kns: eng.Knobs,           # stacked (L,) f32 knobs
+    kns: tx.Knobs,            # stacked (L,) f32 knobs
     policy_idx: jax.Array,    # (L,) int32 into POLICIES order
     autoscale: jax.Array,     # (L,) bool (cfg.autoscale per lane)
-    etype: jax.Array,         # (T,) shared stream
-    vertex: jax.Array,        # (T,)
-    nbrs: jax.Array,          # (T, max_deg)
+    etype: jax.Array,         # (L, T) per-lane — or (T,) shared — streams
+    vertex: jax.Array,        # (L, T) / (T,)
+    nbrs: jax.Array,          # (L, T, max_deg) / (T, max_deg)
     t0: jax.Array,            # () global index of first event
     *,
     balance_guard: str,
     autoscale_mode: str,      # "off" | "dynamic"
+    shared_stream: bool = False,
 ):
-    """Run one chunk of the shared stream across all lanes; resumable."""
-    choose_table = eng.policy_fns(balance_guard)
+    """One chunk of every lane's stream through the per-event scan
+    (transition.scan_events under the traced knob); resumable. Lanes use
+    the fused masked step: under vmap a branch switch would compute every
+    branch and select over the full state per event (see
+    transition.make_masked_step). ``shared_stream`` takes one (T,)-shaped
+    stream for every lane: the O(T·max_deg) neighbour tensor — the bulk
+    of the stream — rides vmap in_axes=None unbatched, while the O(T)
+    etype/vertex columns are broadcast lane-wise on device (an unbatched
+    *vertex* index against lane-batched state lowers to a pathologically
+    slow batched gather/scatter on CPU; unbatched neighbour *rows* are
+    fine and they are where the memory is)."""
     n = states.assignment.shape[1]
-    sdp_idx = eng.POLICY_INDEX["sdp"]
+    sdp_idx = tx.POLICY_INDEX["sdp"]
+    dynamic = autoscale_mode == "dynamic"
 
-    def one_lane(state, kn, pidx, auto):
-        base_key = state.key
+    def one_lane(state, kn, pidx, auto, et, vx, nb):
         do_scale = auto & (pidx == sdp_idx)
+        step = tx.make_masked_step(
+            kn, n, balance_guard=balance_guard, policy_idx=pidx,
+            autoscale=do_scale if dynamic else False,
+        )
+        return tx.scan_events(step, state, et, vx, nb, t0)
 
-        def apply_add(s, v, row, key):
-            if autoscale_mode == "dynamic":
-                s = jax.lax.cond(
-                    do_scale, lambda x: eng.scale_out(x, kn), lambda x: x, s)
-            scores, deg, _, _ = eng.neighbor_stats(s, row)
-            p = jax.lax.switch(
-                pidx, list(choose_table), s, scores, deg, v, key, kn, n)
-            return eng._commit_add(s, v, row, p, scores, deg)
+    ax = None if shared_stream else 0
+    if shared_stream:
+        L = states.assignment.shape[0]
+        etype = jnp.broadcast_to(etype, (L,) + etype.shape)
+        vertex = jnp.broadcast_to(vertex, (L,) + vertex.shape)
+    return jax.vmap(one_lane, in_axes=(0, 0, 0, 0, 0, 0, ax))(
+        states, kns, policy_idx, autoscale, etype, vertex, nbrs)
 
-        def apply_del_vertex(s, v, row, key):
-            s = eng._del_vertex_core(s, v)
-            if autoscale_mode == "dynamic":
-                s = jax.lax.cond(
-                    do_scale, lambda x: eng.scale_in(x, kn), lambda x: x, s)
-            return s
 
-        def apply_del_edge(s, v, row, key):
-            return eng._del_edge_core(s, v, row)
+_STATICS = ("balance_guard", "autoscale_mode", "shared_stream")
 
-        def apply_pad(s, v, row, key):
-            return s
+# public resumable kernel (no donation — callers may keep their states)
+sweep_events = jax.jit(_scan_lanes, static_argnames=_STATICS)
 
-        def step(s, ev):
-            et, v, row, i = ev
-            key = jax.random.fold_in(base_key, i)
-            sv = jnp.maximum(v, 0)
-            s = jax.lax.switch(
-                jnp.clip(et, 0, 3),
-                [apply_add, apply_del_vertex, apply_del_edge, apply_pad],
-                s, sv, row, key,
-            )
-            _, load_dev = eng.load_stats(s)
-            tr = eng.EventTrace(s.total_edges, s.cut_edges, s.num_partitions,
-                                load_dev)
-            return s, tr
+# run_sweep's private kernels donate the stacked states: the chunk driver
+# immediately rebinds them, and donation lets XLA reuse the
+# (L, n, max_deg) adjacency buffers instead of copying per re-dispatch
+_JITTED = {
+    "scan": jax.jit(_scan_lanes, static_argnames=_STATICS,
+                    donate_argnums=(0,)),
+    "windowed": jax.jit(sweep_window_mixed,
+                        static_argnames=_STATICS + ("window",),
+                        donate_argnums=(0,)),
+}
+_KERNELS = {"scan": _scan_lanes, "windowed": sweep_window_mixed}
 
-        idx = t0 + jnp.arange(etype.shape[0], dtype=jnp.int32)
-        return jax.lax.scan(step, state, (etype, vertex, nbrs, idx))
 
-    return jax.vmap(one_lane)(states, kns, policy_idx, autoscale)
+@functools.lru_cache(maxsize=None)
+def _sharded_kernel(kind: str, n_devices: int, balance_guard: str,
+                    autoscale_mode: str, shared_stream: bool, window: int):
+    """jit(shard_map(vmapped kernel)) over the "lanes" mesh. Lanes are
+    embarrassingly parallel: every lane-stacked operand shards on axis 0,
+    the scalar t0 (and the stream, when shared) is replicated, and no
+    collective is emitted."""
+    mesh = make_lane_mesh(n_devices)
+    lanes = P("lanes")
+    stream_spec = P() if shared_stream else lanes
+    kw = {"balance_guard": balance_guard, "autoscale_mode": autoscale_mode,
+          "shared_stream": shared_stream}
+    if kind == "windowed":
+        kw["window"] = window
+    base = functools.partial(_KERNELS[kind], **kw)
+    return jax.jit(shard_map_compat(
+        base, mesh,
+        in_specs=(lanes,) * 4 + (stream_spec,) * 3 + (P(),),
+        out_specs=lanes),
+        donate_argnums=(0,))
 
 
 def _stack(trees):
@@ -117,21 +164,89 @@ def _unstack(tree, i):
     return jax.tree_util.tree_map(lambda x: x[i], tree)
 
 
+def _pad_lanes(tree, pad: int):
+    """Pad the leading lane axis by replicating lane 0 (sliced off after)."""
+    if pad == 0:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])]), tree)
+
+
+def _stack_streams(streams: Sequence[VertexStream], length: int):
+    """Per-lane streams → dense (L, T[, D]) event tensors, EVENT_PAD-padded
+    on the right so shorter lanes no-op through the shared scan."""
+    n = streams[0].n
+    max_deg = max(s.max_deg for s in streams)
+    L = len(streams)
+    et = np.full((L, length), EVENT_PAD, np.int32)
+    vx = np.full((L, length), -1, np.int32)
+    nb = np.full((L, length, max_deg), -1, np.int32)
+    for i, s in enumerate(streams):
+        if s.n != n:
+            raise ValueError("all sweep lanes must share the vertex universe"
+                             f" size n (got {s.n} vs {n})")
+        t = s.num_events
+        et[i, :t] = s.etype
+        vx[i, :t] = s.vertex
+        nb[i, :t, :s.max_deg] = s.nbrs
+    return jnp.asarray(et), jnp.asarray(vx), jnp.asarray(nb), n, max_deg
+
+
+def _shared_stream_arrays(s: VertexStream, length: int):
+    """One shared stream → dense (T[, D]) tensors broadcast to every lane
+    at trace time (no L-fold materialization)."""
+    et = np.full(length, EVENT_PAD, np.int32)
+    vx = np.full(length, -1, np.int32)
+    nb = np.full((length, s.max_deg), -1, np.int32)
+    t = s.num_events
+    et[:t] = s.etype
+    vx[:t] = s.vertex
+    nb[:t] = s.nbrs
+    return jnp.asarray(et), jnp.asarray(vx), jnp.asarray(nb)
+
+
 def run_sweep(
-    stream: VertexStream,
+    stream: VertexStream | Sequence[VertexStream],
     runs: Sequence[SweepRun | tuple],
     *,
     chunk: int | None = None,
+    engine: str = "scan",
+    window: int = 256,
+    shard: bool | None = None,
 ) -> list[SweepResult]:
-    """Run every (policy, cfg, seed) lane over ``stream`` in one device
-    program; each lane's result is bit-identical to ``run_stream`` with the
-    same arguments."""
+    """Run every (policy, cfg, seed) lane in one device program; each
+    lane's result is bit-identical to ``run_stream`` with the same
+    arguments on that lane's stream.
+
+    stream: one shared ``VertexStream`` (broadcast to every lane at trace
+      time — never materialized L-fold), or a sequence of per-lane
+      streams (one per run; may differ in length, order, and churn mix —
+      they are right-padded with no-op events to a common T).
+    chunk: re-dispatch the scan engine every ``chunk`` events (resumable,
+      bounds step count per program); traces are concatenated along the
+      event axis. Ignored by the windowed engine (its window IS the chunk).
+    engine: "scan" — faithful per-event scan, returns per-event traces;
+      "windowed" — the mixed-event window kernel vmapped across lanes
+      (PR 1's batched-window speedup), returns ``trace=None``.
+    shard: shard the lane axis across local devices with shard_map
+      (padding lanes to a multiple of the device count). ``None`` = auto:
+      shard iff more than one device exists; ``False`` forces the
+      single-device vmapped path; ``True`` forces shard_map even on one
+      device (exercises the padding path).
+    """
     runs = [r if isinstance(r, SweepRun) else SweepRun(*r) for r in runs]
     if not runs:
         return []
+    if engine not in ("scan", "windowed"):
+        raise ValueError(f"unknown engine {engine!r}")
+    shared = not isinstance(stream, (list, tuple))
+    streams = [stream] * len(runs) if shared else list(stream)
+    if len(streams) != len(runs):
+        raise ValueError(f"got {len(streams)} streams for {len(runs)} runs")
     cfg0 = runs[0].cfg
     for r in runs:
-        if r.policy not in eng.POLICY_INDEX:
+        if r.policy not in tx.POLICY_INDEX:
             raise ValueError(f"unknown policy {r.policy!r}")
         if r.cfg.k_max != cfg0.k_max:
             raise ValueError("all sweep lanes must share k_max (array shapes)")
@@ -143,43 +258,71 @@ def run_sweep(
         else "off"
     )
 
-    n, max_deg = stream.n, stream.max_deg
+    L = len(runs)
+    lens = [s.num_events for s in streams]
+    T = max(lens)
+    if engine == "windowed":
+        T = ((T + window - 1) // window) * window
+    if shared:
+        et, vx, nb = _shared_stream_arrays(streams[0], T)
+        n, max_deg = streams[0].n, streams[0].max_deg
+    else:
+        et, vx, nb, n, max_deg = _stack_streams(streams, T)
     states = _stack([
         init_state(n, max_deg, cfg0.k_max, r.cfg.k_init, r.seed) for r in runs
     ])
-    kns = _stack([eng.knobs_arrays(r.cfg, n) for r in runs])
-    pidx = jnp.asarray([eng.POLICY_INDEX[r.policy] for r in runs], jnp.int32)
+    kns = _stack([tx.knobs_arrays(r.cfg, n) for r in runs])
+    pidx = jnp.asarray([tx.POLICY_INDEX[r.policy] for r in runs], jnp.int32)
     auto = jnp.asarray([r.cfg.autoscale for r in runs], bool)
 
-    et = jnp.asarray(stream.etype)
-    vx = jnp.asarray(stream.vertex)
-    nb = jnp.asarray(stream.nbrs)
-    T = stream.num_events
+    ndev = jax.device_count()
+    use_shard = (ndev > 1) if shard is None else bool(shard)
+    if use_shard:
+        lane_pad = (-L) % ndev
+        states, kns, pidx, auto = (
+            _pad_lanes(x, lane_pad) for x in (states, kns, pidx, auto))
+        if not shared:
+            et, vx, nb = (_pad_lanes(x, lane_pad) for x in (et, vx, nb))
+        call = _sharded_kernel(engine, ndev, cfg0.balance_guard,
+                               autoscale_mode, shared, window)
+    else:
+        kw = {"balance_guard": cfg0.balance_guard,
+              "autoscale_mode": autoscale_mode, "shared_stream": shared}
+        if engine == "windowed":
+            kw["window"] = window
+        call = functools.partial(_JITTED[engine], **kw)
 
-    if chunk is None:
-        states, trace = sweep_events(
-            states, kns, pidx, auto, et, vx, nb, jnp.int32(0),
-            balance_guard=cfg0.balance_guard, autoscale_mode=autoscale_mode,
-        )
+    def ev_slice(a, sl):
+        return a[sl] if shared else a[:, sl]
+
+    if engine == "windowed":
+        # the window loop runs on device (lax.scan over windows inside
+        # the kernel) — one dispatch for the whole stream, like "scan"
+        states = call(states, kns, pidx, auto, et, vx, nb, jnp.int32(0))
+        trace = None
+    elif chunk is None:
+        states, trace = call(states, kns, pidx, auto, et, vx, nb,
+                             jnp.int32(0))
     else:
         traces = []
         t = 0
         while t < T:
             sl = slice(t, min(t + chunk, T))
-            states, tr = sweep_events(
-                states, kns, pidx, auto, et[sl], vx[sl], nb[sl], jnp.int32(t),
-                balance_guard=cfg0.balance_guard,
-                autoscale_mode=autoscale_mode,
-            )
+            states, tr = call(states, kns, pidx, auto, ev_slice(et, sl),
+                              ev_slice(vx, sl), ev_slice(nb, sl),
+                              jnp.int32(t))
             traces.append(tr)
             t = sl.stop
-        trace = eng.EventTrace(*(
+        trace = tx.EventTrace(*(
             jnp.concatenate([getattr(tr, f) for tr in traces], axis=1)
-            for f in eng.EventTrace._fields
+            for f in tx.EventTrace._fields
         ))
 
     return [
-        SweepResult(r.policy, r.cfg, r.seed,
-                    _unstack(states, i), _unstack(trace, i))
+        SweepResult(
+            r.policy, r.cfg, r.seed, _unstack(states, i),
+            None if trace is None else jax.tree_util.tree_map(
+                lambda x: x[:lens[i]], _unstack(trace, i)),
+        )
         for i, r in enumerate(runs)
     ]

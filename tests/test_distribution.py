@@ -2,7 +2,6 @@
 hlo_stats loop-aware analysis, small-mesh step compilation, elastic
 re-shard. Uses a subprocess with forced host devices where a multi-device
 mesh is required (the main test process keeps the default 1 device)."""
-import json
 import os
 import subprocess
 import sys
@@ -11,9 +10,7 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from jax.sharding import PartitionSpec as P
 
 from repro.core import EngineConfig, run_stream
 from repro.graph.generators import make_graph

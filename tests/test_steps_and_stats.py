@@ -6,7 +6,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 from repro.launch.hlo_stats import (_collective_wire, _shape_elems_bytes,
                                     _split_type_op, Instr)

@@ -1,0 +1,117 @@
+"""Device-sharded sweep: shard_map over the "lanes" mesh must be
+bit-identical per lane to run_stream, including when the lane count does
+not divide the device count (padding must not leak into results).
+
+The multi-device tests need >1 local device; CI runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` in a second tier-1
+job. On a single device only the forced-shard (1-device mesh) tests run.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, run_stream
+from repro.graph.generators import make_graph
+from repro.graph import stream as gstream
+from repro.runtime.sweep import SweepRun, run_sweep
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >1 device (XLA_FLAGS=--xla_force_host_platform_device_count=4)",
+)
+
+
+def _assert_lane_matches(result, stream):
+    state, trace = run_stream(stream, policy=result.policy, cfg=result.cfg,
+                              seed=result.seed)
+    np.testing.assert_array_equal(np.asarray(state.assignment),
+                                  np.asarray(result.state.assignment))
+    np.testing.assert_array_equal(np.asarray(state.edge_load),
+                                  np.asarray(result.state.edge_load))
+    np.testing.assert_array_equal(np.asarray(state.active),
+                                  np.asarray(result.state.active))
+    assert int(state.cut_edges) == int(result.state.cut_edges)
+    assert int(state.total_edges) == int(result.state.total_edges)
+    assert int(state.num_partitions) == int(result.state.num_partitions)
+    assert int(state.scale_events) == int(result.state.scale_events)
+    if result.trace is not None:
+        assert result.trace.cut_edges.shape[0] == stream.num_events
+        for f in trace._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(trace, f)),
+                                          np.asarray(getattr(result.trace, f)))
+
+
+def _fixture(n_lanes=5):
+    """n_lanes lanes (default 5 — never a multiple of 2 or 4 devices),
+    per-lane streams, autoscale + baseline mix."""
+    g = make_graph("social", 80, 240, seed=0)
+    streams = [
+        gstream.build_stream(g, seed=1),
+        gstream.dynamic_schedule(g, n_intervals=3, seed=2,
+                                 del_edges_per_interval=4),
+        gstream.interleaved_churn(g, warmup_frac=0.25, del_every=3, seed=3),
+        gstream.build_stream(g, seed=4),
+        gstream.build_stream(g, seed=5),
+    ][:n_lanes]
+    runs = [
+        SweepRun("sdp", EngineConfig(k_max=8, k_init=1, max_cap=90), 0),
+        SweepRun("ldg", EngineConfig(k_max=8, k_init=3, autoscale=False), 1),
+        SweepRun("sdp", EngineConfig(k_max=8, k_init=2, max_cap=10**9), 2),
+        SweepRun("fennel",
+                 EngineConfig(k_max=8, k_init=4, autoscale=False), 0),
+        SweepRun("greedy",
+                 EngineConfig(k_max=8, k_init=4, autoscale=False), 3),
+    ][:n_lanes]
+    return streams, runs
+
+
+def test_forced_shard_padding_no_leakage():
+    """shard=True on whatever devices exist: lane axis is padded to a
+    multiple of the device count and results are exactly the requested
+    lanes — bit-identical to run_stream, no padded-lane leakage."""
+    streams, runs = _fixture()
+    results = run_sweep(streams, runs, shard=True)
+    assert len(results) == len(runs)
+    for r, s in zip(results, streams):
+        _assert_lane_matches(r, s)
+
+
+def test_forced_shard_matches_unsharded():
+    """Sharded and vmapped-host paths agree bitwise on states AND traces."""
+    streams, runs = _fixture(n_lanes=3)
+    a = run_sweep(streams, runs, shard=True)
+    b = run_sweep(streams, runs, shard=False)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(ra.state.assignment),
+                                      np.asarray(rb.state.assignment))
+        for f in ra.trace._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(ra.trace, f)),
+                                          np.asarray(getattr(rb.trace, f)))
+
+
+@multi_device
+def test_sharded_nondivisible_lanes_multi_device():
+    """5 lanes on 2+ devices (auto-shard): exercises real cross-device
+    placement with lane padding."""
+    assert jax.device_count() >= 2
+    streams, runs = _fixture()
+    assert len(runs) % jax.device_count() != 0, "want a non-divisible count"
+    for r, s in zip(run_sweep(streams, runs), streams):
+        _assert_lane_matches(r, s)
+
+
+@multi_device
+def test_sharded_chunked_multi_device():
+    streams, runs = _fixture(n_lanes=3)
+    for r, s in zip(run_sweep(streams, runs, chunk=29), streams):
+        _assert_lane_matches(r, s)
+
+
+@multi_device
+def test_sharded_windowed_multi_device():
+    """Windowed-lane sweep under shard_map: states bit-match run_stream."""
+    streams, runs = _fixture()
+    for r, s in zip(run_sweep(streams, runs, engine="windowed", window=32),
+                    streams):
+        assert r.trace is None
+        _assert_lane_matches(r, s)
