@@ -17,6 +17,11 @@ from repro.graph.csr import cap_degree
 from repro.graph.datasets import load_dataset
 
 ART_DIR = os.environ.get("REPRO_BENCH_DIR", "artifacts/bench")
+# BENCH_*-named artifacts are the repo's perf trajectory: they are mirrored
+# next to the repo root's tracked BENCH_*.json files (artifacts/ is
+# gitignored, so writing them only under ART_DIR silently froze the
+# committed trajectory — the original sin this fixes)
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # Degree caps keep the padded (n, max_deg) adjacency bounded for the
 # heavy-tailed stand-ins (twitter). Exact for the mesh/collab graphs.
@@ -48,8 +53,12 @@ def default_cfg(k: int = 4, autoscale: bool = False,
 
 def save_rows(name: str, rows: list[dict]):
     os.makedirs(ART_DIR, exist_ok=True)
+    payload = json.dumps(rows, indent=1, default=float)
     with open(os.path.join(ART_DIR, f"{name}.json"), "w") as f:
-        json.dump(rows, f, indent=1, default=float)
+        f.write(payload)
+    if name.startswith("BENCH_"):
+        with open(os.path.join(REPO_ROOT, f"{name}.json"), "w") as f:
+            f.write(payload)
 
 
 def timed(fn, *args, **kw):

@@ -1,0 +1,113 @@
+"""Beyond-paper Fig. 12: dynamic-autoscale sweep lanes on a delete-heavy
+churn stream — the incremental O(K²) cut_matrix scale-in vs the old
+per-event ``recompute_cut`` baseline.
+
+Under vmap the scale-in cond computes both branches for every event of
+every lane, so the baseline pays a full O(n·max_deg) adjacency pass per
+event; the incremental path reads the merged cut off the pairwise matrix
+(transition.py module docstring). Both variants ride the SAME production
+kernel (``repro.runtime.sweep.sweep_events``) with only the static
+``cut_fn`` knob flipped, and the integer counters are exact, so their
+final states must be bit-identical — asserted per run and reported in the
+rows. Writes BENCH_autoscale_churn.json (mirrored to the repo root).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import EngineConfig
+from repro.core import transition as tx
+from repro.core.state import init_state
+from repro.graph import stream as gstream
+from repro.runtime import sweep as S
+
+SEEDS = (0, 1, 2, 3)
+
+
+def _cut_from_scratch(assignment, present, adj):
+    """The pre-cut_matrix scale-in baseline: exact cut via a full
+    O(n·max_deg) adjacency pass (each undirected edge stored twice).
+    Deliberate copy of ``transition.recompute_cut`` (kept in sync) so no
+    runtime path references the engine-layer from-scratch recompute."""
+    valid = adj >= 0
+    safe = jnp.where(valid, adj, 0)
+    both = (valid & present[safe]) & present[:, None]
+    diff = assignment[:, None] != assignment[safe]
+    return (jnp.sum(both & diff, dtype=jnp.int32) // 2).astype(jnp.int32)
+
+
+def _stacked_lanes(quick: bool):
+    g = C.bench_graph("grqc", quick)
+    streams = [
+        gstream.interleaved_churn(g, warmup_frac=0.2, del_every=3,
+                                  edge_del_every=5, seed=s)
+        for s in SEEDS
+    ]
+    cfg = EngineConfig(k_max=16, k_init=1, max_cap=max(g.num_edges // 6, 30),
+                       tolerance_param=60.0, dest_param=5.0, autoscale=True)
+    T = max(s.num_events for s in streams)
+    et, vx, nb, n, max_deg = S._stack_streams(streams, T)
+    states = S._stack([
+        init_state(n, max_deg, cfg.k_max, cfg.k_init, s) for s in SEEDS
+    ])
+    kns = S._stack([tx.knobs_arrays(cfg, n) for _ in SEEDS])
+    pidx = jnp.full((len(SEEDS),), tx.POLICY_INDEX["sdp"], jnp.int32)
+    auto = jnp.ones((len(SEEDS),), bool)
+    events = sum(s.num_events for s in streams)
+    return (states, kns, pidx, auto, et, vx, nb), cfg, events
+
+
+def run(quick: bool = True) -> list:
+    args, cfg, events = _stacked_lanes(quick)
+    call = functools.partial(S.sweep_events, balance_guard=cfg.balance_guard,
+                             autoscale_mode="dynamic", shared_stream=False)
+    variants = {
+        "scan_recompute": lambda: call(*args, jnp.int32(0),
+                                       cut_fn=_cut_from_scratch),
+        "scan_incremental": lambda: call(*args, jnp.int32(0)),
+    }
+    rows, finals = [], {}
+    for name, fn in variants.items():
+        out = jax.block_until_ready(fn())  # warm compile
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn())
+        dt = time.perf_counter() - t0
+        finals[name] = out[0]
+        rows.append({"variant": name, "seconds": dt, "events": events,
+                     "lanes": len(SEEDS),
+                     "scale_events": [int(x) for x in
+                                      np.asarray(out[0].scale_events)],
+                     "events_per_s": events / max(dt, 1e-9)})
+    # exact counters: both scale-in implementations must agree bit-for-bit
+    match = all(
+        bool(jnp.all(a == b))
+        for a, b in zip(jax.tree_util.tree_leaves(finals["scan_recompute"]),
+                        jax.tree_util.tree_leaves(finals["scan_incremental"])))
+    if not match:
+        raise AssertionError(
+            "incremental cut_matrix scale-in diverged from the recompute "
+            "baseline — final sweep states are not bit-identical")
+    base = next(r for r in rows if r["variant"] == "scan_recompute")
+    for r in rows:
+        r["states_match_baseline"] = match
+        r["speedup_vs_recompute"] = base["seconds"] / max(r["seconds"], 1e-9)
+    C.save_rows("fig12_autoscale_churn", rows)
+    C.save_rows("BENCH_autoscale_churn", rows)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    d = {r["variant"]: r for r in rows}
+    inc = d["scan_incremental"]
+    return [
+        f"fig12/autoscale_churn,{inc['seconds']:.3f},"
+        f"incremental_vs_recompute={inc['speedup_vs_recompute']:.1f}x"
+        f";events_per_s={inc['events_per_s']:.0f}"
+        f";states_match={inc['states_match_baseline']}"
+    ]

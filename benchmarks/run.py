@@ -31,12 +31,14 @@ def main() -> int:
 
     from benchmarks import (fig4_edgecut, fig5_vs_offline, fig6_dynamics,
                             fig7_imbalance, fig8_npartitions, fig9_scaling,
-                            fig10_time, fig11_sweep_scaling, roofline)
+                            fig10_time, fig11_sweep_scaling,
+                            fig12_autoscale_churn, roofline)
     mods = {
         "fig4": fig4_edgecut, "fig5": fig5_vs_offline,
         "fig6": fig6_dynamics, "fig7": fig7_imbalance,
         "fig8": fig8_npartitions, "fig9": fig9_scaling,
         "fig10": fig10_time, "fig11": fig11_sweep_scaling,
+        "fig12": fig12_autoscale_churn,
         "roofline": roofline,
     }
     only = [s for s in args.only.split(",") if s]

@@ -45,17 +45,29 @@ def save_pytree(path: str, tree, *, step: int | None = None) -> str:
     return path
 
 
-def restore_pytree(path: str, like, *, shardings=None):
+def restore_pytree(path: str, like, *, shardings=None, fill_missing=False):
     """Restore into the structure of `like`; optional target shardings
-    (a matching pytree of jax.sharding.Sharding) for elastic re-shard."""
+    (a matching pytree of jax.sharding.Sharding) for elastic re-shard.
+
+    ``fill_missing=True`` aligns leaves by their saved key paths instead of
+    requiring an exact leaf-count match: leaves of ``like`` absent from the
+    checkpoint keep ``like``'s value. This is how states that gained
+    trailing fields (e.g. PartitionState.cut_matrix) restore from older
+    checkpoints — pass ``like`` with the new field already filled (see
+    repro.core.state.recount_cut_matrix)."""
     with open(path + ".meta", "rb") as f:
         meta = msgpack.unpackb(f.read())
     data = np.load(path)
     vals = [data[f"a{i}"] for i in range(len(meta["keys"]))]
     flat_like, treedef = jax.tree_util.tree_flatten(like)
     if len(vals) != len(flat_like):
-        raise ValueError(
-            f"checkpoint has {len(vals)} leaves, target has {len(flat_like)}")
+        if not fill_missing:
+            raise ValueError(
+                f"checkpoint has {len(vals)} leaves, target has "
+                f"{len(flat_like)} (fill_missing=True aligns by key)")
+        saved = dict(zip(meta["keys"], vals))
+        like_keys, like_vals, _ = _flatten(like)
+        vals = [saved.get(k, lv) for k, lv in zip(like_keys, like_vals)]
     if shardings is not None:
         flat_sh = jax.tree_util.tree_flatten(shardings)[0]
         out = [jax.device_put(v.astype(l.dtype), s)

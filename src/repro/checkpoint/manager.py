@@ -96,9 +96,14 @@ class CheckpointManager:
         steps = self._steps()
         return steps[-1] if steps else None
 
-    def restore(self, like, *, step: int | None = None, shardings=None):
+    def restore(self, like, *, step: int | None = None, shardings=None,
+                fill_missing=False):
+        """``fill_missing=True`` restores checkpoints whose tree predates
+        trailing fields added to ``like`` (missing leaves keep ``like``'s
+        value) — e.g. pre-cut_matrix PartitionState checkpoints, where the
+        caller fills the matrix via repro.core.state.recount_cut_matrix."""
         step = step if step is not None else self.latest()
         if step is None:
             return None, None
-        return restore_pytree(self._path(step), like,
-                              shardings=shardings), step
+        return restore_pytree(self._path(step), like, shardings=shardings,
+                              fill_missing=fill_missing), step

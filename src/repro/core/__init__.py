@@ -1,6 +1,8 @@
 """SDP core: the paper's contribution as a composable JAX module."""
 from repro.core.config import EngineConfig, POLICIES
-from repro.core.state import PartitionState, init_state, state_metrics
+from repro.core.state import (
+    PartitionState, init_state, recount_cut_matrix, state_metrics,
+)
 from repro.core.engine import run_events, run_stream, trace_at, EventTrace
 from repro.core.windowed import (
     run_stream_windowed, run_window_adds, run_window_mixed,
@@ -13,7 +15,8 @@ from repro.core.offline import offline_partition, cut_of
 from repro.core.ref import run_reference
 
 __all__ = [
-    "EngineConfig", "POLICIES", "PartitionState", "init_state", "state_metrics",
+    "EngineConfig", "POLICIES", "PartitionState", "init_state",
+    "recount_cut_matrix", "state_metrics",
     "run_events", "run_stream", "trace_at", "EventTrace",
     "run_stream_windowed", "run_window_adds", "run_window_mixed",
     "recompute_counters", "edge_cut_ratio", "load_imbalance",

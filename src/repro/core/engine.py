@@ -14,7 +14,10 @@ values, so XLA sees one specialized program per (policy, cfg).
 
 The windowed engine (repro.core.windowed) is bit-identical to this one but
 restructures the hot affinity scoring into a batched kernel; this module is
-the semantic reference.
+the semantic reference. The carried ``PartitionState`` includes the
+incremental pairwise ``cut_matrix`` (see the transition-module docstring
+for its invariant), so autoscale scale-ins here — like everywhere — merge
+cuts in O(K²) with no adjacency recompute.
 """
 from __future__ import annotations
 

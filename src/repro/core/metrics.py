@@ -11,7 +11,15 @@ import numpy as np
 def recompute_counters(
     assignment: np.ndarray, present: np.ndarray, adj: np.ndarray, k_max: int
 ) -> dict[str, np.ndarray]:
-    """Exact (edge_load, vertex_count, total_edges, cut_edges) from scratch."""
+    """Exact (edge_load, vertex_count, total_edges, cut_edges, cut_matrix)
+    from scratch.
+
+    ``cut_matrix`` is the (k_max, k_max) pairwise count the engines maintain
+    incrementally (PartitionState.cut_matrix): entry [p, q] (p != q) counts
+    present edges between partitions p and q once per direction, and the
+    diagonal [p, p] counts each internal edge of p twice — so rows sum to
+    ``edge_load`` and the off-diagonal half-sum is ``cut_edges``.
+    """
     assignment = np.asarray(assignment)
     present = np.asarray(present)
     adj = np.asarray(adj)
@@ -26,6 +34,8 @@ def recompute_counters(
     edge_load = np.zeros(k_max, dtype=np.int64)
     own = np.broadcast_to(assignment[:, None], adj.shape)
     np.add.at(edge_load, own[nb_present], 1)
+    cut_matrix = np.zeros((k_max, k_max), dtype=np.int64)
+    np.add.at(cut_matrix, (own[nb_present], assignment[safe][nb_present]), 1)
     total = int(deg.sum()) // 2
     diff = nb_present & (assignment[:, None] != assignment[safe])
     cut = int(diff.sum()) // 2
@@ -34,6 +44,7 @@ def recompute_counters(
         "vertex_count": vertex_count.astype(np.int64),
         "total_edges": total,
         "cut_edges": cut,
+        "cut_matrix": cut_matrix,
     }
 
 

@@ -30,6 +30,12 @@ class RefState:
         self.cut_edges = 0
         self.denied = 0
         self.scale_events = 0
+        # pairwise cut counts, same convention as PartitionState.cut_matrix:
+        # [p][q] (p != q) = present edges between p and q, diagonal = 2×
+        # internal edges. Maintained incrementally; _scale_in still derives
+        # cut_edges from a from-scratch recount, so the engines' matrix-based
+        # merged cut is verified against an independent computation.
+        self.cut_matrix = np.zeros((k_max, k_max), np.int64)
         self.base_key = jax.random.PRNGKey(seed)
 
     @property
@@ -170,7 +176,14 @@ def _scale_in(s: RefState, cfg: EngineConfig):
     s.vertex_count[src] = 0
     s.active[src] = False
     s.scale_events += 1
-    s.cut_edges = _recompute_cut(s)
+    s.cut_edges = _recompute_cut(s)  # independent of the pairwise matrix
+    cm = s.cut_matrix
+    row = cm[src, :].copy()
+    cm[dst, :] += row
+    cm[:, dst] += row
+    cm[dst, dst] += cm[src, src]
+    cm[src, :] = 0
+    cm[:, src] = 0
 
 
 def run_reference(
@@ -198,6 +211,8 @@ def run_reference(
                 s.edge_load[p] += deg
                 s.total_edges += deg
                 s.cut_edges += deg - sc[p]
+                s.cut_matrix[p, :] += np.asarray(sc)
+                s.cut_matrix[:, p] += np.asarray(sc)
         elif et == EVENT_DEL_VERTEX:
             if v in s.assignment:
                 nbrs = s.adj.get(v, set())
@@ -209,6 +224,8 @@ def run_reference(
                 s.vertex_count[p] -= 1
                 s.total_edges -= deg
                 s.cut_edges -= deg - sc[p]
+                s.cut_matrix[p, :] -= np.asarray(sc)
+                s.cut_matrix[:, p] -= np.asarray(sc)
                 del s.assignment[v]
             if policy == "sdp" and cfg.autoscale:
                 _scale_in(s, cfg)
@@ -222,6 +239,8 @@ def run_reference(
                 s.edge_load[pu] -= 1
                 s.total_edges -= 1
                 s.cut_edges -= int(pv != pu)
+                s.cut_matrix[pv, pu] -= 1
+                s.cut_matrix[pu, pv] -= 1
             if u >= 0:
                 s.adj.get(v, set()).discard(u)
                 s.adj.get(u, set()).discard(v)

@@ -26,6 +26,15 @@ class PartitionState(NamedTuple):
     denied_scaleout: jax.Array  # () int32 — scale-outs blocked by k_max
     scale_events: jax.Array  # () int32 — scale-out + scale-in events executed
     key: jax.Array           # PRNG key
+    # (k_max, k_max) int32 symmetric pairwise cut counts: [p, q] (p != q) is
+    # the number of present edges between partitions p and q; [p, p] counts
+    # each internal edge of p twice (once per endpoint). Row sums therefore
+    # equal edge_load, and the off-diagonal half-sum equals cut_edges —
+    # which is what lets scale-in merge src→dst in O(K²) instead of a full
+    # adjacency recompute (see repro.core.transition). Kept LAST so
+    # pre-cut_matrix checkpoints restore by positional key with only the
+    # trailing leaf missing (repro.checkpoint.ckpt fill_missing).
+    cut_matrix: jax.Array
 
 
 def init_state(n: int, max_deg: int, k_max: int, k_init: int, seed: int = 0) -> PartitionState:
@@ -43,16 +52,31 @@ def init_state(n: int, max_deg: int, k_max: int, k_init: int, seed: int = 0) -> 
         denied_scaleout=jnp.asarray(0, jnp.int32),
         scale_events=jnp.asarray(0, jnp.int32),
         key=jax.random.PRNGKey(seed),
+        cut_matrix=jnp.zeros((k_max, k_max), jnp.int32),
     )
 
 
+def recount_cut_matrix(state: PartitionState) -> PartitionState:
+    """Rebuild ``cut_matrix`` from (assignment, present, adj) — for states
+    restored from pre-cut_matrix checkpoints (the counters are exact, so a
+    recounted state is indistinguishable from an incrementally maintained
+    one)."""
+    from repro.core.metrics import recompute_counters
+    rec = recompute_counters(
+        np.asarray(state.assignment), np.asarray(state.present),
+        np.asarray(state.adj), state.edge_load.shape[0])
+    return state._replace(
+        cut_matrix=jnp.asarray(rec["cut_matrix"], jnp.int32))
+
+
 def state_metrics(s: PartitionState) -> dict[str, np.ndarray]:
-    """Host-side summary (edge-cut ratio Eq. 9, load imbalance Eq. 10)."""
-    load = np.asarray(s.edge_load, np.float64)
-    act = np.asarray(s.active)
-    k = max(int(act.sum()), 1)
-    mean = load[act].sum() / k if act.any() else 0.0
-    imb = float(np.sqrt(np.sum((load[act] - mean) ** 2) / k)) if act.any() else 0.0
+    """Host-side summary (edge-cut ratio Eq. 9, load imbalance Eq. 10).
+
+    Imbalance comes from ``metrics.load_imbalance`` — the one Eq. 10
+    definition shared with the traced ``transition.load_stats`` (both
+    normalise by the active-partition count)."""
+    from repro.core.metrics import load_imbalance
+    imb = load_imbalance(np.asarray(s.edge_load), np.asarray(s.active))
     tot = int(s.total_edges)
     return {
         "edge_cut": int(s.cut_edges),

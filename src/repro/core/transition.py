@@ -36,6 +36,27 @@ true. Every lane of every path is therefore bit-identical to the
 faithful engine — enforced by tests/test_sdp_engine.py,
 tests/test_mixed_window.py, tests/test_sweep.py and
 tests/test_sweep_sharded.py.
+
+The pairwise cut-matrix invariant
+---------------------------------
+``PartitionState.cut_matrix`` is a (k_max, k_max) int32 symmetric matrix of
+pairwise cut counts, maintained incrementally by every transition core:
+
+* ``cut_matrix[p, q]`` (p != q) = number of *present* edges between
+  partitions p and q; ``cut_matrix[p, p]`` counts each internal edge of p
+  twice (once per endpoint);
+* row sums equal ``edge_load`` and the off-diagonal half-sum equals
+  ``cut_edges`` (``metrics.recompute_counters`` recounts all of it from
+  scratch; the property tests assert agreement).
+
+``commit_add`` scatter-adds the chooser's already-computed ``scores``
+vector into row/col p, ``del_vertex_core`` subtracts it, ``del_edge_core``
+touches one (pv, pu) pair, and ``make_masked_step`` merges the three
+effects with masks exactly like the other counters. ``scale_in``'s merged
+cut is then just ``cut_edges - cut_matrix[src, dst]`` and the migrate
+folds row/col src into dst in O(K²) — the per-event O(n·max_deg)
+``recompute_cut`` adjacency pass is gone from every engine path (it
+survives only as the from-scratch reference for tests and benchmarks).
 """
 from __future__ import annotations
 
@@ -121,7 +142,14 @@ def neighbor_stats(state: PartitionState, row: jax.Array):
 
 
 def nth_active(active: jax.Array, i: jax.Array) -> jax.Array:
-    """Index of the i-th active partition (i < num active)."""
+    """Index of the i-th active partition, with i taken modulo the active
+    count. Callers draw i in [0, num_partitions); clamping keeps the result
+    an *active* index even if num_partitions ever drifts from
+    popcount(active) (an unclamped argmax over an all-False mask would
+    silently return slot 0, possibly inactive). All-inactive still yields 0
+    — there is no valid answer in that state."""
+    cnt = jnp.sum(active, dtype=jnp.int32)
+    i = jnp.mod(i, jnp.maximum(cnt, 1))
     cum = jnp.cumsum(active.astype(jnp.int32)) - 1
     return jnp.argmax((cum == i) & active).astype(jnp.int32)
 
@@ -138,7 +166,10 @@ def load_stats(state):
     """
     act = state.active
     load = state.edge_load.astype(jnp.float32)
-    p = jnp.maximum(state.num_partitions.astype(jnp.float32), 1.0)
+    # normalise by popcount(active), the same denominator as the host-side
+    # metrics.load_imbalance / state_metrics (num_partitions is kept equal
+    # to it by the scale hooks, but the two definitions must not drift)
+    p = jnp.maximum(jnp.sum(act, dtype=jnp.int32).astype(jnp.float32), 1.0)
     maxl = jnp.max(jnp.where(act, load, -jnp.inf))
     minl = jnp.min(jnp.where(act, load, jnp.inf))
     avg_d = (maxl - minl) / p
@@ -278,13 +309,32 @@ def scale_out(state, kn: Knobs):
 
 
 def recompute_cut(assignment, present, adj) -> jax.Array:
-    """Exact cut count (each undirected edge stored twice in adj)."""
+    """Exact cut count (each undirected edge stored twice in adj).
+
+    A full O(n·max_deg) adjacency pass — NOT used on any engine path
+    anymore (scale-in reads the incremental ``cut_matrix`` instead); kept
+    as the from-scratch reference for tests. The fig12 recompute baseline
+    deliberately carries its own copy (benchmarks stay grep-clean of
+    engine-layer recompute call sites); keep the two in sync."""
     valid = adj >= 0
     safe = jnp.where(valid, adj, 0)
     nb_present = valid & present[safe]
     both = nb_present & present[:, None]
     diff = assignment[:, None] != assignment[safe]
     return (jnp.sum(both & diff, dtype=jnp.int32) // 2).astype(jnp.int32)
+
+
+def merge_cut_matrix(cut_matrix: jax.Array, src, dst) -> jax.Array:
+    """Fold row/col ``src`` into ``dst`` in O(K²): relabelling every
+    src-vertex as dst sends M'[a, b] = Σ M[p, q] over p→a, q→b under the
+    map src→dst. Preserves symmetry, row sums (= merged edge_load), and
+    the off-diagonal half-sum dropping by exactly M[src, dst] (= the
+    merged cut delta)."""
+    row = cut_matrix[src, :]
+    ss = cut_matrix[src, src]
+    cm = (cut_matrix.at[dst, :].add(row).at[:, dst].add(row)
+          .at[dst, dst].add(ss))
+    return cm.at[src, :].set(0).at[:, src].set(0)
 
 
 def scale_in_trigger(small, kn: Knobs):
@@ -302,11 +352,17 @@ def scale_in_trigger(small, kn: Knobs):
 
 
 def scale_in(state: PartitionState, kn: Knobs,
-             gate=True) -> PartitionState:
+             gate=True, *, cut_fn=None) -> PartitionState:
     """Eqs. 6–8: if ≥2 machines under l, migrate min-load machine into the
     next-least-loaded one (if it fits under destinationThreshold).
     ``gate`` AND-composes an outer condition (e.g. "this event was a
-    DEL_VERTEX" in the fused masked step) into the migrate trigger."""
+    DEL_VERTEX" in the fused masked step) into the migrate trigger.
+
+    The merged cut comes from the incremental pairwise matrix:
+    ``cut_edges - cut_matrix[src, dst]`` plus an O(K²) row/col fold — no
+    adjacency pass. ``cut_fn`` (assignment, present, adj) -> cut swaps in a
+    from-scratch recompute instead; only the fig12 benchmark baseline uses
+    it (the counters are exact, so both produce identical states)."""
     src, dst, do = scale_in_trigger(state, kn)
     do = do & gate
 
@@ -314,12 +370,16 @@ def scale_in(state: PartitionState, kn: Knobs,
         assignment = jnp.where(s.assignment == src, dst, s.assignment)
         edge_load = s.edge_load.at[dst].add(s.edge_load[src]).at[src].set(0)
         vertex_count = s.vertex_count.at[dst].add(s.vertex_count[src]).at[src].set(0)
-        cut = recompute_cut(assignment, s.present, s.adj)
+        if cut_fn is None:
+            cut = s.cut_edges - s.cut_matrix[src, dst]
+        else:
+            cut = cut_fn(assignment, s.present, s.adj)
         return s._replace(
             assignment=assignment, edge_load=edge_load, vertex_count=vertex_count,
             active=s.active.at[src].set(False),
             num_partitions=s.num_partitions - 1,
             cut_edges=cut,
+            cut_matrix=merge_cut_matrix(s.cut_matrix, src, dst),
             scale_events=s.scale_events + 1,
         )
 
@@ -349,6 +409,7 @@ def commit_add(state: PartitionState, v, row, p, scores, deg):
         edge_load=(state.edge_load + sc).at[p].add(d),
         total_edges=state.total_edges + d,
         cut_edges=state.cut_edges + d - sc[p],
+        cut_matrix=state.cut_matrix.at[p, :].add(sc).at[:, p].add(sc),
     )
 
 
@@ -369,6 +430,7 @@ def del_vertex_core(state: PartitionState, v):
         edge_load=(state.edge_load - sc).at[p].add(-d),
         total_edges=state.total_edges - d,
         cut_edges=state.cut_edges - (d - sc[p]),
+        cut_matrix=state.cut_matrix.at[p, :].add(-sc).at[:, p].add(-sc),
     )
 
 
@@ -393,6 +455,7 @@ def del_edge_core(state: PartitionState, v, row):
         edge_load=state.edge_load.at[pv].add(-e).at[pu].add(-e),
         total_edges=state.total_edges - e,
         cut_edges=state.cut_edges - cutdec,
+        cut_matrix=state.cut_matrix.at[pv, pu].add(-e).at[pu, pv].add(-e),
     )
 
 
@@ -471,6 +534,7 @@ def make_masked_step(
     policy: str | None = None,
     policy_idx: jax.Array | None = None,
     autoscale=False,
+    cut_fn=None,
 ) -> Callable:
     """Fused, branch-free event step: ``step(state, et, v, row, key)``.
 
@@ -483,7 +547,8 @@ def make_masked_step(
     lane; here only one masked neighbour-gather per effect remains and
     every large-array write is an unconditional drop-mode scatter (the
     same design that makes the mixed-window kernel fast). Knob
-    parameterization matches ``make_transition``.
+    parameterization matches ``make_transition``. ``cut_fn`` is forwarded
+    to ``scale_in`` (fig12 recompute baseline only).
     """
     choose = make_chooser(balance_guard, policy, policy_idx)
     static_auto = isinstance(autoscale, bool)
@@ -545,6 +610,10 @@ def make_masked_step(
         total_edges = state.total_edges + d_add - d_dv - e
         cut_edges = (state.cut_edges + (d_add - sc_a[p_add])
                      - (d_dv - sc_d[p_dv]) - cutdec)
+        cut_matrix = (state.cut_matrix
+                      .at[p_add, :].add(sc_a).at[:, p_add].add(sc_a)
+                      .at[p_dv, :].add(-sc_d).at[:, p_dv].add(-sc_d)
+                      .at[p_dv, pu].add(-e).at[pu, p_dv].add(-e))
 
         # --- row-level array updates (never a full-array select) ---
         assignment = (state.assignment
@@ -565,12 +634,13 @@ def make_masked_step(
             assignment=assignment, present=present, adj=adj,
             vertex_count=vertex_count, edge_load=edge_load,
             total_edges=total_edges, cut_edges=cut_edges,
+            cut_matrix=cut_matrix,
         )
 
         # --- scale-in after DEL_VERTEX (faithful apply_del_vertex) ---
         if scaling:
             gate_dv = is_dv if static_auto else is_dv & autoscale
-            state = scale_in(state, kn, gate=gate_dv)
+            state = scale_in(state, kn, gate=gate_dv, cut_fn=cut_fn)
         return state
 
     return step

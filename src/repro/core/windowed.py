@@ -54,7 +54,7 @@ from repro.graph.stream import (
 
 
 class SmallState(NamedTuple):
-    """The O(K) slice of PartitionState carried through the fixup scan."""
+    """The O(K)/O(K²) slice of PartitionState carried through the fixup scan."""
     active: jax.Array
     edge_load: jax.Array
     vertex_count: jax.Array
@@ -63,13 +63,14 @@ class SmallState(NamedTuple):
     cut_edges: jax.Array
     denied_scaleout: jax.Array
     scale_events: jax.Array
+    cut_matrix: jax.Array    # (k_max, k_max) pairwise cuts (see transition)
 
 
 def _small(state: PartitionState) -> SmallState:
     return SmallState(
         state.active, state.edge_load, state.vertex_count, state.num_partitions,
         state.total_edges, state.cut_edges, state.denied_scaleout,
-        state.scale_events,
+        state.scale_events, state.cut_matrix,
     )
 
 
@@ -146,6 +147,7 @@ def run_window_adds(
             edge_load=(small.edge_load + scm).at[p].add(d),
             total_edges=small.total_edges + d,
             cut_edges=small.cut_edges + d - scm[p],
+            cut_matrix=small.cut_matrix.at[p, :].add(scm).at[:, p].add(scm),
         )
         w_assign = w_assign.at[i].set(jnp.where(do, p, w_assign[i]))
         return (small, w_assign), None
@@ -173,20 +175,24 @@ def run_window_adds(
         vertex_count=small.vertex_count, num_partitions=small.num_partitions,
         total_edges=small.total_edges, cut_edges=small.cut_edges,
         denied_scaleout=small.denied_scaleout, scale_events=small.scale_events,
+        cut_matrix=small.cut_matrix,
     )
 
 
-def _scale_in_journal(small: SmallState, label_now, adj, kn):
+def _scale_in_journal(small: SmallState, label_now, kn):
     """transition.scale_in (§4.2.3, Eqs. 6–8) on the window-local journal
     representation (label_now ≡ assignment, label_now >= 0 ≡ present).
     The trigger is shared with the faithful engine so the two cannot
-    drift; only the migrate body differs (journal instead of state)."""
+    drift; only the migrate body differs (journal instead of state). The
+    merged cut comes from the incremental pairwise matrix — the journal's
+    slot step maintains it with the same row scatters as the faithful
+    cores, so no adjacency pass (the old per-window recompute_cut) is
+    needed here either."""
     src, dst, do = tx.scale_in_trigger(small, kn)
 
     def migrate(args):
         sm, ln = args
         ln2 = jnp.where(ln == src, dst, ln)
-        cut = tx.recompute_cut(ln2, ln2 >= 0, adj)
         sm2 = sm._replace(
             edge_load=sm.edge_load.at[dst].add(
                 sm.edge_load[src]).at[src].set(0),
@@ -194,7 +200,8 @@ def _scale_in_journal(small: SmallState, label_now, adj, kn):
                 sm.vertex_count[src]).at[src].set(0),
             active=sm.active.at[src].set(False),
             num_partitions=sm.num_partitions - 1,
-            cut_edges=cut,
+            cut_edges=sm.cut_edges - sm.cut_matrix[src, dst],
+            cut_matrix=tx.merge_cut_matrix(sm.cut_matrix, src, dst),
             scale_events=sm.scale_events + 1,
         )
         return sm2, ln2
@@ -234,10 +241,11 @@ def _window_mixed_lane(
     counters plus at most two row-level drop-mode scatters into adj.
     XLA conditionals copy every large operand a branch writes — which is
     what made per-event processing of this state memory-bound in the
-    first place. The scale-in cond below *reads* adj (cut recompute,
-    copy-free) and writes only the O(n) label journal — same per-delete
-    cost as the faithful engine's assignment rewrite, negligible next
-    to adj.
+    first place. The scale-in cond below no longer touches adj at all:
+    the merged cut is read off the incremental O(K²) cut_matrix (no
+    per-event recompute pass), and the cond writes only the small
+    counters plus the O(n) label journal — same per-delete cost as the
+    faithful engine's assignment rewrite, negligible next to adj.
 
     ``do_scale`` extends the trace-time ``autoscaling`` gate to a
     per-lane runtime gate for the sweep: a runtime-False lane masks the
@@ -317,6 +325,10 @@ def _window_mixed_lane(
             total_edges=small.total_edges + d_add - d_dv - e,
             cut_edges=(small.cut_edges + (d_add - sc_a[p])
                        - (d_dv - sc_d[p_dv]) - cutdec),
+            cut_matrix=(small.cut_matrix
+                        .at[p, :].add(sc_a).at[:, p].add(sc_a)
+                        .at[p_dv, :].add(-sc_d).at[:, p_dv].add(-sc_d)
+                        .at[pv, pu].add(-e).at[pu, pv].add(-e)),
         )
 
         # --- row-level array updates (never a full-array select) ---
@@ -337,7 +349,7 @@ def _window_mixed_lane(
             gate_dv = dv_i if do_scale is None else dv_i & do_scale
             small, label_now = jax.lax.cond(
                 gate_dv,
-                lambda sm, ln: _scale_in_journal(sm, ln, adj, kn),
+                lambda sm, ln: _scale_in_journal(sm, ln, kn),
                 lambda sm, ln: (sm, ln),
                 small, label_now,
             )
@@ -355,6 +367,7 @@ def _window_mixed_lane(
         vertex_count=small.vertex_count, num_partitions=small.num_partitions,
         total_edges=small.total_edges, cut_edges=small.cut_edges,
         denied_scaleout=small.denied_scaleout, scale_events=small.scale_events,
+        cut_matrix=small.cut_matrix,
     )
 
 

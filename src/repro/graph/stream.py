@@ -157,9 +157,17 @@ def dynamic_schedule(
             t += k
         if del_edges_per_interval > 0 and present:
             evs, eus = [], []
+            pres_arr = np.asarray(present, dtype=np.int64)
             for _ in range(del_edges_per_interval):
                 v = int(rng.choice(present))
+                # only delete edges whose BOTH endpoints are present: a
+                # del-edge naming a not-yet-streamed endpoint would later be
+                # resurrected one-sided by that endpoint's add row, leaving
+                # the materialized adjacency asymmetric (and the engines'
+                # exact incremental counters would then legitimately differ
+                # from a from-scratch recount of it)
                 nb = g.neighbors(v)
+                nb = nb[np.isin(nb, pres_arr)]
                 if nb.size:
                     evs.append(v)
                     eus.append(int(rng.choice(nb)))
@@ -211,11 +219,19 @@ def interleaved_churn(
         max_deg = int(np.diff(g.indptr).max(initial=1))
     order = rng.permutation(g.n).astype(np.int32)
     truncated = 0
+    # edges killed by DEL_EDGE stay dead: a later re-add of an endpoint must
+    # not resurrect them (its row comes from the static graph), or the
+    # materialized adjacency would go asymmetric — see dynamic_schedule
+    dead_edges: set[tuple[int, int]] = set()
 
     def row_of(v: int) -> np.ndarray:
         nonlocal truncated
         row = -np.ones(max_deg, dtype=np.int32)
         nb = g.neighbors(int(v))
+        if dead_edges:
+            nb = np.asarray([u for u in nb
+                             if (min(int(u), int(v)), max(int(u), int(v)))
+                             not in dead_edges], dtype=nb.dtype)
         if nb.size > max_deg:
             truncated += nb.size - max_deg
             nb = rng.choice(nb, size=max_deg, replace=False)
@@ -251,9 +267,16 @@ def interleaved_churn(
         if edge_del_every and count % edge_del_every == 0 and present:
             ev = int(present[int(rng.integers(len(present)))])
             nb = g.neighbors(ev)
+            # both endpoints present and the edge still alive (see row_of)
+            nb = nb[np.isin(nb, present)]
+            nb = np.asarray([u for u in nb
+                             if (min(int(u), ev), max(int(u), ev))
+                             not in dead_edges], dtype=nb.dtype)
             if nb.size:
+                eu = int(rng.choice(nb))
+                dead_edges.add((min(eu, ev), max(eu, ev)))
                 row = -np.ones(max_deg, np.int32)
-                row[0] = int(rng.choice(nb))
+                row[0] = eu
                 emit(EVENT_DEL_EDGE, ev, row)
         if readd_every and count % readd_every == 0 and deleted:
             rv = deleted.pop(int(rng.integers(len(deleted))))

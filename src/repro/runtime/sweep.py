@@ -83,6 +83,7 @@ def _scan_lanes(
     balance_guard: str,
     autoscale_mode: str,      # "off" | "dynamic"
     shared_stream: bool = False,
+    cut_fn=None,              # scale-in cut override (fig12 baseline only)
 ):
     """One chunk of every lane's stream through the per-event scan
     (transition.scan_events under the traced knob); resumable. Lanes use
@@ -103,7 +104,7 @@ def _scan_lanes(
         do_scale = auto & (pidx == sdp_idx)
         step = tx.make_masked_step(
             kn, n, balance_guard=balance_guard, policy_idx=pidx,
-            autoscale=do_scale if dynamic else False,
+            autoscale=do_scale if dynamic else False, cut_fn=cut_fn,
         )
         return tx.scan_events(step, state, et, vx, nb, t0)
 
@@ -118,14 +119,17 @@ def _scan_lanes(
 
 _STATICS = ("balance_guard", "autoscale_mode", "shared_stream")
 
-# public resumable kernel (no donation — callers may keep their states)
-sweep_events = jax.jit(_scan_lanes, static_argnames=_STATICS)
+# public resumable kernel (no donation — callers may keep their states).
+# ``cut_fn`` is static (a trace-time function: None = incremental
+# cut_matrix scale-in; benchmarks/fig12 passes the from-scratch baseline)
+sweep_events = jax.jit(_scan_lanes, static_argnames=_STATICS + ("cut_fn",))
 
 # run_sweep's private kernels donate the stacked states: the chunk driver
 # immediately rebinds them, and donation lets XLA reuse the
-# (L, n, max_deg) adjacency buffers instead of copying per re-dispatch
+# (L, n, max_deg) adjacency buffers (incl. the stacked (L, K, K)
+# cut_matrix) instead of copying per re-dispatch
 _JITTED = {
-    "scan": jax.jit(_scan_lanes, static_argnames=_STATICS,
+    "scan": jax.jit(_scan_lanes, static_argnames=_STATICS + ("cut_fn",),
                     donate_argnums=(0,)),
     "windowed": jax.jit(sweep_window_mixed,
                         static_argnames=_STATICS + ("window",),

@@ -123,6 +123,37 @@ def test_save_restore_roundtrip(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_restore_legacy_partition_state_fill_missing(tmp_path):
+    """A pre-cut_matrix PartitionState checkpoint (12 leaves) restores into
+    today's 13-leaf state: fill_missing aligns by key path, the trailing
+    cut_matrix leaf keeps `like`'s value — which recount_cut_matrix rebuilds
+    exactly from the restored (assignment, present, adj)."""
+    import collections
+    from repro.core import EngineConfig, run_stream
+    from repro.core.state import PartitionState, recount_cut_matrix
+    from repro.graph.generators import make_graph
+    from repro.graph import stream as gstream
+
+    g = make_graph("mesh", 40, 100, seed=0)
+    s = gstream.build_stream(g, seed=0)
+    state, _ = run_stream(
+        s, policy="sdp", cfg=EngineConfig(k_max=4, k_init=2, autoscale=False))
+    # a faithful stand-in for the pre-cut_matrix state type: same field
+    # names (key paths align by attribute), no trailing cut_matrix leaf
+    Legacy = collections.namedtuple("Legacy", PartitionState._fields[:-1])
+    legacy = Legacy(*tuple(state)[:-1])
+    path = os.path.join(tmp_path, "legacy.npz")
+    save_pytree(path, legacy, step=1)
+
+    like = jax.tree.map(jnp.zeros_like, state)
+    with pytest.raises(ValueError, match="fill_missing"):
+        restore_pytree(path, like)
+    out = restore_pytree(path, like, fill_missing=True)
+    restored = recount_cut_matrix(out)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_manager_retention_and_latest(tmp_path):
     m = CheckpointManager(str(tmp_path), interval=1, keep=2)
     tree = {"w": jnp.zeros(3)}

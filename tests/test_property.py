@@ -55,6 +55,8 @@ def test_invariants(case):
     assert int(state.cut_edges) == rec["cut_edges"]
     np.testing.assert_array_equal(np.asarray(state.edge_load),
                                   rec["edge_load"])
+    np.testing.assert_array_equal(np.asarray(state.cut_matrix),
+                                  rec["cut_matrix"])
 
     # 2. structural invariants
     m = state_metrics(state)
@@ -71,6 +73,50 @@ def test_invariants(case):
 
     # 3. trace is consistent with the final state
     assert int(np.asarray(trace.cut_edges)[-1]) == int(state.cut_edges)
+
+
+@st.composite
+def churn_case(draw):
+    g = draw(random_graph(max_n=40))
+    kwargs = dict(
+        warmup_frac=draw(st.floats(0.1, 0.5)),
+        del_every=draw(st.integers(2, 4)),
+        edge_del_every=draw(st.integers(0, 5)),
+        readd_every=draw(st.integers(0, 6)),
+        seed=draw(st.integers(0, 5)),
+    )
+    cfg = EngineConfig(
+        k_max=draw(st.integers(2, 6)), k_init=1,
+        max_cap=draw(st.sampled_from([20, 60, 10**9])),
+        tolerance_param=draw(st.sampled_from([25.0, 60.0])),
+        autoscale=True)
+    return g, kwargs, cfg, draw(st.integers(0, 5))
+
+
+@given(churn_case())
+@settings(max_examples=15, deadline=None)
+def test_cut_matrix_matches_recount_after_churn(case):
+    """After random interleaved churn (vertex+edge deletions, re-adds)
+    with autoscale on, the incrementally maintained pairwise cut matrix —
+    including every O(K²) scale-in row/col fold — must be symmetric, have
+    row sums equal to edge_load, half-sum to cut_edges, and match
+    metrics.recompute_counters' from-scratch pairwise recount exactly."""
+    g, kwargs, cfg, seed = case
+    s = gstream.interleaved_churn(g, **kwargs)
+    if s.num_events == 0:
+        return
+    state, _ = run_stream(s, policy="sdp", cfg=cfg, seed=seed)
+    rec = recompute_counters(np.asarray(state.assignment),
+                             np.asarray(state.present),
+                             np.asarray(state.adj), cfg.k_max)
+    cm = np.asarray(state.cut_matrix)
+    np.testing.assert_array_equal(cm, cm.T)
+    np.testing.assert_array_equal(cm.sum(axis=1),
+                                  np.asarray(state.edge_load))
+    assert (cm.sum() - np.trace(cm)) // 2 == int(state.cut_edges)
+    np.testing.assert_array_equal(cm, rec["cut_matrix"])
+    assert int(state.cut_edges) == rec["cut_edges"]
+    assert int(state.total_edges) == rec["total_edges"]
 
 
 @given(random_graph(max_n=30), st.integers(2, 4), st.integers(0, 3))
