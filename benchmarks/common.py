@@ -80,11 +80,12 @@ def run_policy_stream(stream, policy, cfg, seed=0):
 
 def run_sweep_rows(stream, runs):
     """All (policy × seed × config) lanes in ONE vmapped device program
-    (repro.runtime.sweep) instead of a host loop re-scanning the stream
-    per run. Returns [(state, trace, metrics), ...] in lane order;
-    ``seconds`` is the amortised per-lane wall-clock."""
-    from repro.runtime.sweep import run_sweep
-    results, dt = timed(run_sweep, stream, runs)
+    (the repro.api.Sweep builder over repro.runtime.sweep) instead of a
+    host loop re-scanning the stream per run. Returns
+    [(state, trace, metrics), ...] in lane order; ``seconds`` is the
+    amortised per-lane wall-clock."""
+    from repro.api import Sweep
+    results, dt = timed(lambda: Sweep(stream).lanes(runs).run())
     out = []
     for r in results:
         m = state_metrics(r.state)

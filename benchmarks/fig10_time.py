@@ -12,13 +12,61 @@ from __future__ import annotations
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from benchmarks import common as C
-from repro.core import run_reference, run_stream, run_stream_windowed
+from repro.api import Partitioner
+from repro.core import run_reference, run_stream
+from repro.core.engine import run_events
+from repro.core.state import init_state
+from repro.core.windowed import _pad_to, run_window_adds
 from repro.graph import stream as gstream
 
 DATASETS = ("3elt", "grqc", "wiki-vote")
 CHURN_DATASETS = ("grqc",)
+
+
+def _windowed_session(s, cfg, *, window=256, use_kernel=False):
+    """The windowed engine behind the public session facade: one
+    Partitioner over the whole stream (init + feed, same work the old
+    run_stream_windowed driver did)."""
+    return Partitioner.from_stream(
+        s, cfg, policy="sdp", engine="windowed", window=window,
+        use_kernel=use_kernel,
+    ).feed(s).state
+
+
+def _windowed_legacy(s, cfg, *, window=256):
+    """The PR-1 delete-splitting driver, preserved here — fig10 is its
+    only consumer — purely as the benchmark baseline: ADD runs go through
+    run_window_adds, any other event through the faithful scan, windows
+    split at every deletion boundary (so delete-heavy interleaved streams
+    degenerate to window-size-1 chunks)."""
+    state = init_state(s.n, s.max_deg, cfg.k_max, cfg.k_init, 0)
+    et = np.asarray(s.etype)
+    vx = jnp.asarray(s.vertex)
+    nb = jnp.asarray(s.nbrs)
+    t, T = 0, s.num_events
+    while t < T:
+        if et[t] == gstream.EVENT_ADD:
+            end = t
+            while end < T and et[end] == gstream.EVENT_ADD \
+                    and end - t < window:
+                end += 1
+            state = run_window_adds(
+                state, _pad_to(vx[t:end], window, -1),
+                _pad_to(nb[t:end], window, -1), jnp.int32(t),
+                policy="sdp", cfg=cfg)
+        else:
+            end = t
+            while end < T and et[end] != gstream.EVENT_ADD:
+                end += 1
+            state, _ = run_events(
+                state, jnp.asarray(et[t:end]), vx[t:end], nb[t:end],
+                jnp.int32(t), policy="sdp", cfg=cfg)
+        t = end
+    return state
 
 
 def _time_engines(engines, num_events, extra):
@@ -44,10 +92,9 @@ def run(quick: bool = True) -> list:
         engines = {
             "python_oracle": lambda: run_reference(s, policy="sdp", cfg=cfg),
             "faithful_scan": lambda: run_stream(s, policy="sdp", cfg=cfg),
-            "windowed_256": lambda: run_stream_windowed(
-                s, policy="sdp", cfg=cfg, window=256),
-            "windowed_kernel": lambda: run_stream_windowed(
-                s, policy="sdp", cfg=cfg, window=256, use_kernel=True),
+            "windowed_256": lambda: _windowed_session(s, cfg, window=256),
+            "windowed_kernel": lambda: _windowed_session(
+                s, cfg, window=256, use_kernel=True),
         }
         if not quick:
             engines.pop("python_oracle")  # O(minutes) at full scale
@@ -62,10 +109,10 @@ def run(quick: bool = True) -> list:
         cfg = C.default_cfg(k=4)
         engines = {
             "faithful_scan": lambda: run_stream(cs, policy="sdp", cfg=cfg),
-            "windowed_legacy": lambda: run_stream_windowed(
-                cs, policy="sdp", cfg=cfg, window=256, mixed=False),
-            "windowed_mixed": lambda: run_stream_windowed(
-                cs, policy="sdp", cfg=cfg, window=256),
+            "windowed_legacy": lambda: _windowed_legacy(
+                cs, cfg, window=256),
+            "windowed_mixed": lambda: _windowed_session(
+                cs, cfg, window=256),
         }
         churn_rows += _time_engines(engines, cs.num_events,
                                     {"dataset": ds, "stream": "churn"})

@@ -25,9 +25,9 @@ import time
 import jax
 
 from benchmarks import common as C
+from repro.api import Sweep, SweepRun
 from repro.core import run_stream
 from repro.graph import stream as gstream
-from repro.runtime.sweep import SweepRun, run_sweep
 
 LANE_COUNTS = (4, 16, 64)
 
@@ -75,13 +75,15 @@ def run(quick: bool = True) -> list:
         if not quick or L <= 16:
             modes["host_loop"] = (host_loop, 1)
         modes["vmapped"] = (
-            lambda: [r.state for r in run_sweep(s, runs, shard=False)], 5)
+            lambda: [r.state for r in
+                     Sweep(s).lanes(runs).sharded(False).run()], 5)
         modes["windowed_lanes"] = (
             lambda: [r.state for r in
-                     run_sweep(s, runs, shard=False, engine="windowed")], 5)
+                     Sweep(s).lanes(runs).sharded(False).windowed().run()], 5)
         if ndev > 1:
             modes["sharded"] = (
-                lambda: [r.state for r in run_sweep(s, runs, shard=True)], 5)
+                lambda: [r.state for r in
+                         Sweep(s).lanes(runs).sharded().run()], 5)
         for mode, dt in _timed_round_robin(modes).items():
             rows.append({
                 "mode": mode, "lanes": L, "devices": ndev,

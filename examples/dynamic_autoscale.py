@@ -1,16 +1,23 @@
 """Auto-scaling demo (paper §4.2.3 / Fig. 9): machines are provisioned as
-the stream grows and released after bulk deletions.
+the stream grows and released after bulk deletions — observed live
+through a stateful ``Partitioner`` session, then checkpointed and
+resumed mid-stream without changing a single decision.
 
     PYTHONPATH=src python examples/dynamic_autoscale.py
 """
+import os
+import tempfile
+
 import numpy as np
 
-from repro.core import EngineConfig, run_stream, trace_at
-from repro.graph.datasets import load_dataset
-from repro.graph import stream as gstream
+from repro.api import Partitioner
+from repro.core import EngineConfig, trace_at
 
 
 def main():
+    from repro.graph.datasets import load_dataset
+    from repro.graph import stream as gstream
+
     g = load_dataset("3elt", scale=1.0)
     # add 25% per interval, then delete 10% — forces scale-out then -in
     s = gstream.dynamic_schedule(g, add_pct=25.0, del_pct=10.0,
@@ -18,11 +25,30 @@ def main():
     cap = int(1.5 * g.num_edges / 5)      # capacity ⇒ ~5 machines at peak
     cfg = EngineConfig(k_max=16, k_init=1, max_cap=cap,
                        tolerance_param=35.0, dest_param=5.0)
-    state, trace = run_stream(s, policy="sdp", cfg=cfg)
 
-    parts = np.asarray(trace.num_partitions)
-    cut = np.asarray(trace.cut_edges)
-    tot = np.maximum(np.asarray(trace.total_edges), 1)
+    # feed the first half, snapshot, resume in a NEW session, feed the
+    # rest — bit-identical to an uninterrupted run (tested in CI)
+    part = Partitioner.from_stream(s, cfg, policy="sdp", collect_trace=True)
+    mid = s.num_events // 2
+    part.feed((s.etype[:mid], s.vertex[:mid], s.nbrs[:mid]))
+    ckpt_dir = os.path.join(tempfile.mkdtemp(), "session")
+    part.snapshot(ckpt_dir)
+    print(f"mid-stream:  {part.metrics()['num_partitions']} machines after "
+          f"{part.cursor} events (snapshot -> {ckpt_dir})")
+    first_half = part.trace()
+
+    part = Partitioner.restore(ckpt_dir, cfg, n=s.n, max_deg=s.max_deg,
+                               policy="sdp", collect_trace=True)
+    part.feed((s.etype[mid:], s.vertex[mid:], s.nbrs[mid:]))
+    tr = part.trace()   # post-restore events (traces are not checkpointed)
+    state = part.state
+
+    parts = np.concatenate([np.asarray(first_half.num_partitions),
+                            np.asarray(tr.num_partitions)])
+    cut = np.concatenate([np.asarray(first_half.cut_edges),
+                          np.asarray(tr.cut_edges)])
+    tot = np.maximum(np.concatenate([np.asarray(first_half.total_edges),
+                                     np.asarray(tr.total_edges)]), 1)
     print("event     machines  edge-cut-ratio")
     marks = np.linspace(1, s.num_events - 1, 16).astype(int)
     for t in marks:
@@ -31,7 +57,12 @@ def main():
     print(f"\nscale events: {int(state.scale_events)}, "
           f"final machines: {int(state.num_partitions)}, "
           f"peak: {int(parts.max())}")
-    at = trace_at(trace, s.intervals)
+    from repro.core import EventTrace
+    full = EventTrace(
+        total_edges=tot, cut_edges=cut, num_partitions=parts,
+        load_std=np.concatenate([np.asarray(first_half.load_std),
+                                 np.asarray(tr.load_std)]))
+    at = trace_at(full, s.intervals)
     print("interval edge-cut:",
           " -> ".join(f"{r:.3f}" for r in at["edge_cut_ratio"]))
 

@@ -22,7 +22,8 @@ import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np       # noqa: E402
 
-from repro.core import EngineConfig, run_stream, state_metrics  # noqa: E402
+from repro.api import Partitioner                               # noqa: E402
+from repro.core import EngineConfig                             # noqa: E402
 from repro.graph.generators import make_graph                   # noqa: E402
 from repro.graph.halo import build_halo_spec, scatter_nodes     # noqa: E402
 from repro.graph import stream as gstream                       # noqa: E402
@@ -34,9 +35,9 @@ from repro.runtime.gnn_sharded import make_sharded_aggregate    # noqa: E402
 def build_layout(g, policy, n_shards):
     s = gstream.build_stream(g, seed=0)
     cfg = EngineConfig(k_max=n_shards, k_init=n_shards, autoscale=False)
-    state, _ = run_stream(s, policy=policy, cfg=cfg)
-    m = state_metrics(state)
-    assign = np.array(state.assignment)
+    part = Partitioner.from_stream(s, cfg, policy=policy).feed(s)
+    m = part.metrics()
+    assign = np.array(part.state.assignment)
     assign[assign < 0] = 0
     spec = build_halo_spec(g, assign, n_shards)
     return spec, m

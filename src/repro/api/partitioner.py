@@ -1,0 +1,356 @@
+"""Stateful streaming session over the SDP engines — THE public surface.
+
+The paper's headline is *real-time* dynamic partitioning, but the engine
+entry points (``run_stream``/``run_stream_windowed``) are batch shaped:
+whole stream in, final state out. ``Partitioner`` is the serving shape —
+a long-lived session that owns a device-resident :class:`PartitionState`
+and a global event cursor, and ingests events **as they arrive**:
+
+    part = Partitioner.from_stream(stream, cfg, policy="sdp")
+    for chunk in arriving_chunks:
+        part.feed(chunk)            # any number of events per call
+        print(part.metrics())       # observable mid-stream
+    part.snapshot("ckpts/session")  # resumable later via .restore()
+
+Guarantees:
+
+* **Bit-identity under any chopping.** ``feed()`` RNG-aligns every event
+  via the engines' existing ``t0`` plumbing (``fold_in(key, global_index)``),
+  so feeding in chunks of 1, 7, or anything else produces exactly the
+  state one whole-stream ``run_stream`` produces — enforced by
+  tests/test_api_partitioner.py.
+* **Donated carry.** The session's state is donated to each feed call's
+  jitted kernel, so XLA reuses the O(n·max_deg) adjacency buffers
+  between calls instead of copying them. Corollary: a reference you took
+  from ``part.state`` is invalidated by the *next* ``feed()`` — copy
+  (``np.asarray``) anything you want to keep, or use ``snapshot()``.
+* **Auto engine selection.** Per call, full windows of ``window`` events
+  ride the batched mixed-window kernel (``run_window_mixed``, or the
+  small-carry ``run_window_adds`` for pure-ADD windows) and small tails
+  ride the faithful per-event scan; both are bit-identical, so the
+  choice is pure throughput. ``engine="scan"``/``"windowed"`` pin one
+  backend (``collect_trace=True`` implies the scan, the only backend
+  that produces per-event traces).
+* **Resumability.** ``snapshot()``/``Partitioner.restore()`` wrap
+  ``repro.checkpoint`` (atomic renames, retention); checkpoints that
+  predate ``PartitionState.cut_matrix`` restore via ``fill_missing`` and
+  are healed with ``recount_cut_matrix``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import engine as eng
+from repro.core import windowed as wnd
+from repro.core.config import EngineConfig, POLICIES
+from repro.core.state import (
+    PartitionState, init_state, recount_cut_matrix, state_metrics,
+)
+from repro.core.transition import EventTrace
+from repro.graph.stream import EVENT_ADD, EVENT_PAD, VertexStream
+
+_ENGINES = ("auto", "scan", "windowed")
+
+# Donated re-jits of the engine kernels: the session immediately rebinds
+# its carried state to each call's result, so donation lets XLA reuse the
+# (n, max_deg) adjacency (and (k_max, k_max) cut_matrix) buffers between
+# feed() calls instead of copying them per call.
+_scan_donated = jax.jit(
+    eng._run_events, static_argnames=("policy", "cfg"), donate_argnums=(0,))
+_adds_donated = jax.jit(
+    wnd._run_window_adds, static_argnames=("policy", "cfg", "score_fn"),
+    donate_argnums=(0,))
+_mixed_donated = jax.jit(
+    wnd._run_window_mixed, static_argnames=("policy", "cfg"),
+    donate_argnums=(0,))
+
+_TRACE_DTYPES = (jnp.int32, jnp.int32, jnp.int32, jnp.float32)
+
+
+class Partitioner:
+    """A stateful streaming partitioning session (see module docstring).
+
+    Args:
+      cfg: engine knobs (validated in ``EngineConfig.__post_init__``).
+      n: vertex-universe size — device arrays are fixed-shape, so the id
+        space must be declared up front (use ``from_stream`` to take it
+        from a stream).
+      max_deg: neighbour-row width of the padded adjacency.
+      policy: one of ``repro.core.config.POLICIES``.
+      seed: PRNG seed for tie-breaking (folds with the global event index).
+      engine: ``"auto"`` (default — windows when a call has them, scan for
+        the tails), ``"scan"``, or ``"windowed"`` (tails are padded into a
+        full window of no-op events).
+      window: events per device step for the windowed backend.
+      collect_trace: record the per-event :class:`EventTrace`; forces the
+        scan backend (the window kernels return no trace).
+      use_kernel: score pure-ADD windows with the Pallas
+        ``partition_affinity`` kernel instead of the jnp reference.
+    """
+
+    def __init__(self, cfg: EngineConfig | None = None, *, n: int,
+                 max_deg: int, policy: str = "sdp", seed: int = 0,
+                 engine: str = "auto", window: int = 256,
+                 collect_trace: bool = False, use_kernel: bool = False):
+        cfg = cfg or EngineConfig()
+        if policy not in POLICIES:
+            raise ValueError(
+                f"policy={policy!r} is unknown: expected one of {POLICIES}")
+        if engine not in _ENGINES:
+            raise ValueError(
+                f"engine={engine!r} is unknown: expected one of {_ENGINES} "
+                "('auto' picks windows for full windows and the per-event "
+                "scan for small tails)")
+        if window <= 0:
+            raise ValueError(
+                f"window={window} must be > 0: it is the number of events "
+                "the windowed backend batches per device step")
+        if n <= 0 or max_deg <= 0:
+            raise ValueError(
+                f"n={n} and max_deg={max_deg} must be > 0: they size the "
+                "dense (n, max_deg) adjacency")
+        if collect_trace and engine == "windowed":
+            raise ValueError(
+                "collect_trace=True needs the per-event scan (the window "
+                "kernels do not produce traces) — use engine='scan' or "
+                "'auto'")
+        self.cfg = cfg
+        self.policy = policy
+        self.n = int(n)
+        self.max_deg = int(max_deg)
+        self.engine = engine
+        self.window = int(window)
+        self.collect_trace = bool(collect_trace)
+        if use_kernel:
+            from repro.kernels.partition_affinity.ops import scores_for_state
+            self._score_fn = scores_for_state
+        else:
+            self._score_fn = None
+        self._state = init_state(self.n, self.max_deg, cfg.k_max,
+                                 cfg.k_init, seed)
+        self._cursor = 0
+        self._traces: list[EventTrace] = []
+        self._managers: dict[str, CheckpointManager] = {}
+
+    @classmethod
+    def from_stream(cls, stream: VertexStream,
+                    cfg: EngineConfig | None = None, **kw) -> "Partitioner":
+        """Size a session for ``stream``'s vertex universe and degree cap
+        (the stream itself is NOT ingested — call ``feed``)."""
+        return cls(cfg, n=stream.n, max_deg=stream.max_deg, **kw)
+
+    # -- properties ---------------------------------------------------------
+
+    @property
+    def state(self) -> PartitionState:
+        """The live device-resident state. Invalidated (donated) by the
+        next ``feed()`` — copy what you want to keep."""
+        return self._state
+
+    @property
+    def cursor(self) -> int:
+        """Global index of the next event (== events ingested so far)."""
+        return self._cursor
+
+    def __repr__(self) -> str:
+        return (f"Partitioner(policy={self.policy!r}, engine={self.engine!r},"
+                f" n={self.n}, max_deg={self.max_deg}, events={self._cursor},"
+                f" partitions={int(self._state.num_partitions)})")
+
+    # -- ingestion ----------------------------------------------------------
+
+    def feed(self, events) -> "Partitioner":
+        """Ingest any number of events; returns ``self`` for chaining.
+
+        ``events`` is a :class:`VertexStream` (over the same vertex
+        universe) or an ``(etype, vertex, nbrs)`` triple of arrays.
+        Bit-identical to one whole-stream run regardless of how the
+        stream is chopped across calls.
+        """
+        et, vx, nb = self._coerce(events)
+        T = int(et.shape[0])
+        if T == 0:
+            return self
+        use_scan = self.collect_trace or self.engine == "scan"
+        t = 0
+        while t < T:
+            if use_scan:
+                end = T
+                self._feed_scan(et[t:], vx[t:], nb[t:])
+            else:
+                end = min(t + self.window, T)
+                if end - t < self.window and self.engine == "auto":
+                    # small/mixed tail: the per-event scan beats padding a
+                    # nearly-empty window through the batched kernel
+                    end = T
+                    self._feed_scan(et[t:], vx[t:], nb[t:])
+                else:
+                    self._feed_window(et[t:end], vx[t:end], nb[t:end])
+            # advance per processed slice, not per call: if a later slice
+            # dies (interrupt, OOM) the cursor still matches the mutated
+            # state, so re-feeding the unprocessed remainder resumes
+            # exactly instead of double-applying the finished slices
+            self._cursor += end - t
+            t = end
+        return self
+
+    def _feed_scan(self, et, vx, nb):
+        self._state, tr = _scan_donated(
+            self._state, jnp.asarray(et), jnp.asarray(vx), jnp.asarray(nb),
+            jnp.int32(self._cursor), policy=self.policy, cfg=self.cfg)
+        if self.collect_trace:
+            self._traces.append(tr)
+
+    def _feed_window(self, et, vx, nb):
+        """One (possibly right-padded) window through the batched kernels.
+        Pad slots are no-ops that still occupy RNG indices past the true
+        events — the cursor advances by the true count only, so the next
+        call's fold_in indices line up with an unchopped run."""
+        w = self.window
+        vs_w = wnd._pad_to(vx, w, -1)
+        rows_w = wnd._pad_to(nb, w, -1)
+        t0 = jnp.int32(self._cursor)
+        if np.all(et == EVENT_ADD):
+            self._state = _adds_donated(
+                self._state, vs_w, rows_w, t0,
+                policy=self.policy, cfg=self.cfg, score_fn=self._score_fn)
+        else:
+            self._state = _mixed_donated(
+                self._state, wnd._pad_to(et, w, EVENT_PAD),
+                vs_w, rows_w, t0, policy=self.policy, cfg=self.cfg)
+
+    def _coerce(self, events):
+        if isinstance(events, VertexStream):
+            if events.n != self.n:
+                raise ValueError(
+                    f"stream has vertex universe n={events.n} but this "
+                    f"session was sized n={self.n}: sessions are fixed-shape"
+                    " — build one with from_stream() or matching n")
+            et = np.asarray(events.etype, np.int32)
+            vx = np.asarray(events.vertex, np.int32)
+            nb = np.asarray(events.nbrs, np.int32)
+        else:
+            try:
+                et, vx, nb = events
+            except (TypeError, ValueError):
+                raise TypeError(
+                    "feed() takes a VertexStream or an (etype, vertex, "
+                    f"nbrs) triple, got {type(events).__name__}") from None
+            et = np.atleast_1d(np.asarray(et, np.int32))
+            vx = np.atleast_1d(np.asarray(vx, np.int32))
+            nb = np.asarray(nb, np.int32)
+            if nb.ndim != 2 or et.shape != vx.shape \
+                    or nb.shape[0] != et.shape[0]:
+                raise ValueError(
+                    f"event triple shapes disagree: etype{et.shape}, "
+                    f"vertex{vx.shape}, nbrs{nb.shape} — want (T,), (T,), "
+                    "(T, max_deg)")
+        if np.any(vx >= self.n):
+            raise ValueError(
+                f"event vertex id {int(vx.max())} is outside this session's"
+                f" universe n={self.n}")
+        d = nb.shape[1]
+        if d < self.max_deg:
+            nb = np.concatenate(
+                [nb, np.full((nb.shape[0], self.max_deg - d), -1, np.int32)],
+                axis=1)
+        elif d > self.max_deg:
+            if np.any(nb[:, self.max_deg:] >= 0):
+                raise ValueError(
+                    f"events carry neighbour rows of width {d} but this "
+                    f"session was sized max_deg={self.max_deg} — re-create "
+                    "the session with the larger max_deg")
+            nb = nb[:, : self.max_deg]
+        return et, vx, nb
+
+    # -- observation --------------------------------------------------------
+
+    def metrics(self) -> dict:
+        """Paper metrics (Eq. 9 edge-cut ratio, Eq. 10 imbalance, scaling
+        counters) of the state as of the last ``feed``, plus the cursor."""
+        m = state_metrics(self._state)
+        m["events_ingested"] = self._cursor
+        return m
+
+    def trace(self) -> EventTrace:
+        """The per-event trace of everything ingested so far (requires
+        ``collect_trace=True``)."""
+        if not self.collect_trace:
+            raise RuntimeError(
+                "this session does not collect per-event traces — construct"
+                " Partitioner(..., collect_trace=True) (forces the scan "
+                "backend, which is the one producing traces)")
+        if not self._traces:
+            return EventTrace(*(jnp.zeros((0,), dt) for dt in _TRACE_DTYPES))
+        if len(self._traces) > 1:
+            merged = EventTrace(*(
+                jnp.concatenate([getattr(tr, f) for tr in self._traces])
+                for f in EventTrace._fields))
+            self._traces = [merged]
+        return self._traces[0]
+
+    # -- persistence --------------------------------------------------------
+
+    def snapshot(self, directory: str, *, keep: int = 3,
+                 blocking: bool = True) -> int:
+        """Checkpoint the session under ``directory`` (atomic rename,
+        ``keep`` most recent retained) via ``repro.checkpoint``. The
+        checkpoint step IS the event cursor; returns it. ``blocking=False``
+        writes on a background thread (the state is host-snapshotted
+        synchronously first, so a following ``feed`` cannot race it); the
+        session keeps one manager per directory, so the next snapshot to
+        the same directory — or ``wait()`` — joins the pending writer."""
+        mgr = self._managers.get(directory)
+        if mgr is None:
+            mgr = CheckpointManager(directory, interval=1, keep=keep)
+            self._managers[directory] = mgr
+        else:
+            mgr.keep = keep
+        mgr.maybe_save(self._cursor, self._state, blocking=blocking)
+        return self._cursor
+
+    def wait(self) -> None:
+        """Join any background snapshot writers (no-op if none pending) —
+        call before process exit when using ``snapshot(blocking=False)``."""
+        for mgr in self._managers.values():
+            mgr.wait()
+
+    @classmethod
+    def restore(cls, directory: str, cfg: EngineConfig | None = None, *,
+                n: int, max_deg: int, step: int | None = None,
+                **kw) -> "Partitioner":
+        """Resume a session from ``snapshot()`` output (default: latest
+        step). Also restores bare ``PartitionState`` checkpoints written
+        by older code: states that predate ``cut_matrix`` come back via
+        ``fill_missing`` and are healed with ``recount_cut_matrix``.
+        ``cfg``/``policy``/engine knobs are not stored in the checkpoint —
+        pass the ones the session ran with. Traces are not checkpointed;
+        a restored session's ``trace()`` covers post-restore events only.
+        """
+        part = cls(cfg, n=n, max_deg=max_deg, **kw)
+        mgr = CheckpointManager(directory, interval=1)
+        step = step if step is not None else mgr.latest()
+        if step is None:
+            raise FileNotFoundError(
+                f"no checkpoint found under {directory!r}")
+        keys = mgr.leaf_keys(step)
+        state, step = mgr.restore(part._state, step=step, fill_missing=True)
+        if state.assignment.shape[0] != part.n \
+                or state.adj.shape[1] != part.max_deg \
+                or state.edge_load.shape[0] != part.cfg.k_max:
+            raise ValueError(
+                f"checkpoint shapes (n={state.assignment.shape[0]}, "
+                f"max_deg={state.adj.shape[1]}, "
+                f"k_max={state.edge_load.shape[0]}) do not match the "
+                f"requested session (n={part.n}, max_deg={part.max_deg}, "
+                f"k_max={part.cfg.k_max})")
+        if len(keys) < len(jax.tree_util.tree_leaves(part._state)):
+            # pre-cut_matrix checkpoint: fill_missing kept `like`'s zero
+            # matrix — rebuild it exactly from the restored adjacency
+            state = recount_cut_matrix(state)
+        part._state = state
+        part._cursor = int(step)
+        return part

@@ -1,0 +1,139 @@
+"""Fluent sweep builder — the one validated entry for multi-lane runs.
+
+``run_sweep`` grew an engine/window/chunk/shard kwarg surface threaded
+through three call layers, with compatibility rules (windowed lanes have
+no ``chunk``; lanes must share ``k_max`` and ``balance_guard``) enforced
+ad hoc or not at all. The builder states the run declaratively and
+validates every lane-compatibility rule in ONE place before any array is
+stacked:
+
+    results = (Sweep(stream)          # one shared or per-lane streams
+               .lanes(runs)           # SweepRun / (policy, cfg, seed)
+               .windowed(256)         # or .scan() [default] + .chunked(n)
+               .sharded()             # shard lanes across local devices
+               .run())
+
+Execution is unchanged: every lane is bit-identical to ``run_stream`` on
+that lane's stream (tests/test_sweep.py, tests/test_sweep_sharded.py).
+The old ``repro.runtime.sweep.run_sweep`` survives as a deprecation shim
+that builds a ``Sweep`` and runs it.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.config import EngineConfig, POLICIES
+from repro.graph.stream import VertexStream
+from repro.runtime.sweep import SweepResult, SweepRun, _execute_sweep
+
+
+class Sweep:
+    """Builder for one multi-lane sweep over ``stream`` (a shared
+    :class:`VertexStream`, or a sequence of per-lane streams). Every
+    configuration method returns ``self`` for chaining; ``run()``
+    validates the whole description and executes it."""
+
+    def __init__(self, stream: VertexStream | Sequence[VertexStream]):
+        self._stream = stream
+        self._runs: list[SweepRun] = []
+        self._engine = "scan"
+        self._window = 256
+        self._chunk: int | None = None
+        self._shard: bool | None = None
+
+    # -- lanes --------------------------------------------------------------
+
+    def lane(self, policy: str = "sdp", cfg: EngineConfig | None = None,
+             seed: int = 0) -> "Sweep":
+        """Append one (policy, cfg, seed) lane."""
+        self._runs.append(SweepRun(policy, cfg or EngineConfig(), seed))
+        return self
+
+    def lanes(self, runs: Sequence[SweepRun | tuple]) -> "Sweep":
+        """Append many lanes (``SweepRun`` or ``(policy, cfg, seed)``)."""
+        self._runs.extend(
+            r if isinstance(r, SweepRun) else SweepRun(*r) for r in runs)
+        return self
+
+    # -- engine -------------------------------------------------------------
+
+    def scan(self) -> "Sweep":
+        """Per-event scan lanes (default): returns per-event traces."""
+        self._engine = "scan"
+        return self
+
+    def windowed(self, window: int = 256) -> "Sweep":
+        """Mixed-event window kernel vmapped across lanes — the fastest
+        engine; returns ``trace=None`` per lane."""
+        if window <= 0:
+            raise ValueError(
+                f"window={window} must be > 0: it is the number of events "
+                "each lane batches per device step")
+        self._engine = "windowed"
+        self._window = int(window)
+        return self
+
+    def chunked(self, chunk: int) -> "Sweep":
+        """Re-dispatch the scan engine every ``chunk`` events (resumable,
+        bounds step count per program). Scan-engine only."""
+        if chunk <= 0:
+            raise ValueError(f"chunk={chunk} must be > 0")
+        self._chunk = int(chunk)
+        return self
+
+    def sharded(self, shard: bool = True) -> "Sweep":
+        """Shard the lane axis across local devices with shard_map
+        (lanes padded to a multiple of the device count).
+        ``sharded(False)`` pins the single-device vmapped path; unset =
+        auto (shard iff more than one device exists)."""
+        self._shard = bool(shard)
+        return self
+
+    # -- execution ----------------------------------------------------------
+
+    def _validate(self) -> None:
+        """Every lane-compatibility rule, in one place, before any array
+        is stacked or any program traced."""
+        if self._engine == "windowed" and self._chunk is not None:
+            raise ValueError(
+                f"chunk={self._chunk} is a scan-engine knob: the windowed "
+                "engine processes each lane's stream as a device-resident "
+                "lax.scan over windows — its window IS the chunk. Drop "
+                ".chunked() (or the chunk= argument) or use the scan "
+                "engine.")
+        if not isinstance(self._stream, (list, tuple)):
+            streams = None
+        else:
+            streams = list(self._stream)
+            if len(streams) != len(self._runs):
+                raise ValueError(
+                    f"got {len(streams)} streams for {len(self._runs)} runs"
+                    " — per-lane streams must pair one stream per lane "
+                    "(pass a single VertexStream to share it)")
+        if not self._runs:
+            return
+        cfg0 = self._runs[0].cfg
+        for r in self._runs:
+            if r.policy not in POLICIES:
+                raise ValueError(
+                    f"unknown policy {r.policy!r} (expected one of "
+                    f"{POLICIES})")
+            if r.cfg.k_max != cfg0.k_max:
+                raise ValueError(
+                    "all sweep lanes must share k_max (array shapes): got "
+                    f"{r.cfg.k_max} vs {cfg0.k_max}")
+            if r.cfg.balance_guard != cfg0.balance_guard:
+                raise ValueError(
+                    "all sweep lanes must share balance_guard (trace-time "
+                    f"branch): got {r.cfg.balance_guard!r} vs "
+                    f"{cfg0.balance_guard!r}")
+
+    def run(self) -> list[SweepResult]:
+        """Validate and execute; lane results in lane order, each
+        bit-identical to ``run_stream`` on that lane's stream."""
+        self._validate()
+        if not self._runs:
+            return []
+        return _execute_sweep(
+            self._stream, self._runs, chunk=self._chunk,
+            engine=self._engine, window=self._window, shard=self._shard)

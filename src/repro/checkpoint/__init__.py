@@ -1,4 +1,7 @@
-from repro.checkpoint.ckpt import save_pytree, restore_pytree
+from repro.checkpoint.ckpt import (
+    checkpoint_keys, checkpoint_step, restore_pytree, save_pytree,
+)
 from repro.checkpoint.manager import CheckpointManager
 
-__all__ = ["save_pytree", "restore_pytree", "CheckpointManager"]
+__all__ = ["save_pytree", "restore_pytree", "checkpoint_step",
+           "checkpoint_keys", "CheckpointManager"]

@@ -83,3 +83,14 @@ def checkpoint_step(path: str) -> int | None:
             return msgpack.unpackb(f.read()).get("step")
     except FileNotFoundError:
         return None
+
+
+def checkpoint_keys(path: str) -> list[str] | None:
+    """Key paths of the saved leaves — lets a restorer detect the saved
+    tree's shape (e.g. a pre-cut_matrix PartitionState with fewer leaves)
+    before deciding how to fill and heal it."""
+    try:
+        with open(path + ".meta", "rb") as f:
+            return list(msgpack.unpackb(f.read())["keys"])
+    except FileNotFoundError:
+        return None

@@ -21,7 +21,7 @@ import threading
 import jax
 import numpy as np
 
-from repro.checkpoint.ckpt import restore_pytree, save_pytree
+from repro.checkpoint.ckpt import checkpoint_keys, restore_pytree, save_pytree
 
 
 class CheckpointManager:
@@ -95,6 +95,16 @@ class CheckpointManager:
     def latest(self) -> int | None:
         steps = self._steps()
         return steps[-1] if steps else None
+
+    def leaf_keys(self, step: int | None = None) -> list[str] | None:
+        """Key paths of the leaves saved at ``step`` (default: latest) —
+        format detection for restorers (repro.api.Partitioner.restore uses
+        the leaf count to decide whether a checkpoint predates
+        ``cut_matrix`` and needs a recount)."""
+        step = step if step is not None else self.latest()
+        if step is None:
+            return None
+        return checkpoint_keys(self._path(step))
 
     def restore(self, like, *, step: int | None = None, shardings=None,
                 fill_missing=False):

@@ -38,10 +38,50 @@ class EngineConfig:
     ldg_slack: float = 1.1
 
     def __post_init__(self):
+        """Reject malformed configs here, with actionable messages, instead
+        of letting them fail deep inside tracing (shape errors from a bad
+        k_max, silent no-op scaling from a bad percentage, ...)."""
         if self.balance_guard not in ("text", "alg1"):
-            raise ValueError("balance_guard must be 'text' or 'alg1'")
+            raise ValueError(
+                f"balance_guard={self.balance_guard!r} is unknown: expected "
+                "'text' (§4.2.2 prose semantics, default) or 'alg1' "
+                "(Algorithm 1 listing semantics) — the two disagree in the "
+                "paper, see DESIGN.md")
+        if self.k_max < 1:
+            raise ValueError(
+                f"k_max={self.k_max} must be >= 1: it is the static upper "
+                "bound on partitions and sizes every (k_max,)-shaped array")
         if not (1 <= self.k_init <= self.k_max):
-            raise ValueError("need 1 <= k_init <= k_max")
+            raise ValueError(
+                f"k_init={self.k_init} must satisfy 1 <= k_init <= k_max="
+                f"{self.k_max}: k_init partitions are active at t=0 and the "
+                "engine can only grow logically up to k_max — raise k_max or "
+                "lower k_init")
+        if self.max_cap <= 0:
+            raise ValueError(
+                f"max_cap={self.max_cap} must be > 0: it is MAXCAP, the "
+                "per-partition edge-load capacity (Eqs. 5-7); a non-positive "
+                "capacity makes every partition permanently overloaded")
+        if not 0.0 <= self.tolerance_param <= 100.0:
+            raise ValueError(
+                f"tolerance_param={self.tolerance_param} must be a "
+                "percentage in [0, 100]: Eq. 6 sets the scale-in trigger to "
+                "l = tolerance_param*MAXCAP/100")
+        if not 0.0 <= self.dest_param <= 100.0:
+            raise ValueError(
+                f"dest_param={self.dest_param} must be a percentage in "
+                "[0, 100]: Eq. 7 sets destinationThreshold = MAXCAP - "
+                "dest_param*MAXCAP/100")
+        if self.fennel_gamma <= 1.0:
+            raise ValueError(
+                f"fennel_gamma={self.fennel_gamma} must be > 1: Fennel's "
+                "cost term alpha*|S|^gamma needs a superlinear exponent "
+                "(the paper uses 1.5) or the balance pressure vanishes")
+        if self.ldg_slack < 1.0:
+            raise ValueError(
+                f"ldg_slack={self.ldg_slack} must be >= 1: LDG capacity is "
+                "C = slack*n/k, and slack < 1 under-provisions every "
+                "partition below an even split")
 
 
 POLICIES = ("sdp", "ldg", "fennel", "hash", "random", "greedy")

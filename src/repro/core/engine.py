@@ -48,8 +48,7 @@ __all__ = [
 # driver
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("policy", "cfg"))
-def run_events(
+def _run_events(
     state: PartitionState,
     etype: jax.Array,     # (T,)
     vertex: jax.Array,    # (T,)
@@ -59,7 +58,13 @@ def run_events(
     policy: str,
     cfg: EngineConfig,
 ) -> tuple[PartitionState, EventTrace]:
-    """Process a chunk of events; resumable (checkpoint state between chunks)."""
+    """Process a chunk of events; resumable (checkpoint state between chunks).
+
+    Unjitted body — ``run_events`` is the plain jitted binding; the session
+    facade (repro.api.partitioner) jits it again with the carried state
+    donated, so back-to-back ``feed()`` calls reuse the (n, max_deg)
+    adjacency buffers instead of copying them per call.
+    """
     n = state.assignment.shape[0]
     trn = make_transition(
         make_knobs(cfg, n), n,
@@ -67,6 +72,10 @@ def run_events(
         autoscale=cfg.autoscale and policy == "sdp",
     )
     return scan_events(trn.step, state, etype, vertex, nbrs, t0)
+
+
+run_events = functools.partial(
+    jax.jit, static_argnames=("policy", "cfg"))(_run_events)
 
 
 def run_stream(

@@ -44,7 +44,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import engine as eng
 from repro.core import transition as tx
 from repro.core.config import EngineConfig
 from repro.core.state import PartitionState, init_state
@@ -94,8 +93,7 @@ def committed_scores(state: PartitionState, rows: jax.Array):
     return scores, deg
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "cfg", "score_fn"))
-def run_window_adds(
+def _run_window_adds(
     state: PartitionState,
     vs: jax.Array,       # (W,) vertex ids (-1 pad allowed)
     rows: jax.Array,     # (W, max_deg)
@@ -105,7 +103,11 @@ def run_window_adds(
     cfg: EngineConfig,
     score_fn=None,
 ) -> PartitionState:
-    """Process one ADD-only window. Bit-identical to the faithful engine."""
+    """Process one ADD-only window. Bit-identical to the faithful engine.
+
+    Unjitted body — ``run_window_adds`` is the plain jitted binding; the
+    session facade (repro.api.partitioner) re-jits it with the carried
+    state donated."""
     n = state.assignment.shape[0]
     w = vs.shape[0]
     k_max = state.edge_load.shape[0]
@@ -177,6 +179,10 @@ def run_window_adds(
         denied_scaleout=small.denied_scaleout, scale_events=small.scale_events,
         cut_matrix=small.cut_matrix,
     )
+
+
+run_window_adds = functools.partial(
+    jax.jit, static_argnames=("policy", "cfg", "score_fn"))(_run_window_adds)
 
 
 def _scale_in_journal(small: SmallState, label_now, kn):
@@ -371,8 +377,7 @@ def _window_mixed_lane(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("policy", "cfg"))
-def run_window_mixed(
+def _run_window_mixed(
     state: PartitionState,
     ets: jax.Array,      # (W,) event types (EVENT_* codes)
     vs: jax.Array,       # (W,) subject vertex ids (-1 pad allowed)
@@ -385,13 +390,19 @@ def run_window_mixed(
     """Process one window of interleaved ADD / DEL_VERTEX / DEL_EDGE events
     entirely on device, bit-identical to the faithful engine — the
     static-knob entry over ``_window_mixed_lane`` (see its docstring for
-    the journal decomposition)."""
+    the journal decomposition). Unjitted body — ``run_window_mixed`` is
+    the plain jitted binding; repro.api.partitioner re-jits it with the
+    carried state donated."""
     n = state.assignment.shape[0]
     return _window_mixed_lane(
         state, ets, vs, rows, t0, tx.make_knobs(cfg, n),
         choose=tx.make_chooser(cfg.balance_guard, policy),
         autoscaling=policy == "sdp" and cfg.autoscale,
     )
+
+
+run_window_mixed = functools.partial(
+    jax.jit, static_argnames=("policy", "cfg"))(_run_window_mixed)
 
 
 def sweep_window_mixed(
@@ -473,7 +484,6 @@ def run_stream_windowed(
     seed: int = 0,
     window: int = 256,
     use_kernel: bool = False,
-    mixed: bool = True,
 ) -> PartitionState:
     """Host driver: fixed windows of ``window`` events per device step.
 
@@ -481,9 +491,9 @@ def run_stream_windowed(
     (where ``use_kernel`` routes the batched committed scores through the
     Pallas kernel); windows containing deletions take ``run_window_mixed``,
     which scores from its label journal instead. Both are bit-identical to
-    ``run_stream``. ``mixed=False`` restores the legacy behaviour (windows
-    split at every deletion boundary, deletions through the faithful scan)
-    — kept for the fig10 benchmark comparison.
+    ``run_stream``. (The pre-mixed legacy driver that split windows at
+    deletion boundaries lives on only as the fig10 benchmark baseline,
+    benchmarks/fig10_time.py.)
     """
     cfg = cfg or EngineConfig()
     state = init_state(stream.n, stream.max_deg, cfg.k_max, cfg.k_init, seed)
@@ -496,12 +506,6 @@ def run_stream_windowed(
     et = np.asarray(stream.etype)
     vx = jnp.asarray(stream.vertex)
     nb = jnp.asarray(stream.nbrs)
-
-    if not mixed:
-        return _run_stream_windowed_legacy(
-            stream, state, et, vx, nb, policy=policy, cfg=cfg,
-            window=window, score_fn=score_fn,
-        )
 
     T = stream.num_events
     for t in range(0, T, window):
@@ -519,37 +523,4 @@ def run_stream_windowed(
                 state, ets_w, vs_w, rows_w, jnp.int32(t),
                 policy=policy, cfg=cfg,
             )
-    return state
-
-
-def _run_stream_windowed_legacy(
-    stream, state, et, vx, nb, *, policy, cfg, window, score_fn
-):
-    """Pre-mixed-window driver: ADD runs through run_window_adds, any other
-    event through the faithful scan, windows split at deletion boundaries.
-    A delete-heavy interleaved stream degenerates to window-size-1 chunks —
-    benchmarked against the mixed path in benchmarks/fig10_time.py."""
-    t = 0
-    T = stream.num_events
-    while t < T:
-        if et[t] == EVENT_ADD:
-            end = t
-            while end < T and et[end] == EVENT_ADD and end - t < window:
-                end += 1
-            vs_w = _pad_to(vx[t:end], window, -1)
-            rows_w = _pad_to(nb[t:end], window, -1)
-            state = run_window_adds(
-                state, vs_w, rows_w, jnp.int32(t),
-                policy=policy, cfg=cfg, score_fn=score_fn,
-            )
-            t = end
-        else:
-            end = t
-            while end < T and et[end] != EVENT_ADD:
-                end += 1
-            state, _ = eng.run_events(
-                state, jnp.asarray(et[t:end]), vx[t:end], nb[t:end],
-                jnp.int32(t), policy=policy, cfg=cfg,
-            )
-            t = end
     return state

@@ -40,6 +40,7 @@ vary freely per lane.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple, Sequence
 
 import jax
@@ -210,7 +211,7 @@ def _shared_stream_arrays(s: VertexStream, length: int):
     return jnp.asarray(et), jnp.asarray(vx), jnp.asarray(nb)
 
 
-def run_sweep(
+def _execute_sweep(
     stream: VertexStream | Sequence[VertexStream],
     runs: Sequence[SweepRun | tuple],
     *,
@@ -219,9 +220,12 @@ def run_sweep(
     window: int = 256,
     shard: bool | None = None,
 ) -> list[SweepResult]:
-    """Run every (policy, cfg, seed) lane in one device program; each
-    lane's result is bit-identical to ``run_stream`` with the same
-    arguments on that lane's stream.
+    """Executor behind ``repro.api.Sweep`` (and the deprecated
+    ``run_sweep`` shim): every (policy, cfg, seed) lane in one device
+    program, each lane's result bit-identical to ``run_stream`` with the
+    same arguments on that lane's stream. Lane-compatibility validation
+    (shared k_max/balance_guard, chunk×engine rules, stream pairing)
+    happens in ``Sweep._validate`` — go through the builder.
 
     stream: one shared ``VertexStream`` (broadcast to every lane at trace
       time — never materialized L-fold), or a sequence of per-lane
@@ -229,7 +233,7 @@ def run_sweep(
       they are right-padded with no-op events to a common T).
     chunk: re-dispatch the scan engine every ``chunk`` events (resumable,
       bounds step count per program); traces are concatenated along the
-      event axis. Ignored by the windowed engine (its window IS the chunk).
+      event axis.
     engine: "scan" — faithful per-event scan, returns per-event traces;
       "windowed" — the mixed-event window kernel vmapped across lanes
       (PR 1's batched-window speedup), returns ``trace=None``.
@@ -242,20 +246,9 @@ def run_sweep(
     runs = [r if isinstance(r, SweepRun) else SweepRun(*r) for r in runs]
     if not runs:
         return []
-    if engine not in ("scan", "windowed"):
-        raise ValueError(f"unknown engine {engine!r}")
     shared = not isinstance(stream, (list, tuple))
     streams = [stream] * len(runs) if shared else list(stream)
-    if len(streams) != len(runs):
-        raise ValueError(f"got {len(streams)} streams for {len(runs)} runs")
     cfg0 = runs[0].cfg
-    for r in runs:
-        if r.policy not in tx.POLICY_INDEX:
-            raise ValueError(f"unknown policy {r.policy!r}")
-        if r.cfg.k_max != cfg0.k_max:
-            raise ValueError("all sweep lanes must share k_max (array shapes)")
-        if r.cfg.balance_guard != cfg0.balance_guard:
-            raise ValueError("all sweep lanes must share balance_guard")
     autoscale_mode = (
         "dynamic"
         if any(r.cfg.autoscale and r.policy == "sdp" for r in runs)
@@ -330,3 +323,39 @@ def run_sweep(
         )
         for i, r in enumerate(runs)
     ]
+
+
+def run_sweep(
+    stream: VertexStream | Sequence[VertexStream],
+    runs: Sequence[SweepRun | tuple],
+    *,
+    chunk: int | None = None,
+    engine: str = "scan",
+    window: int = 256,
+    shard: bool | None = None,
+) -> list[SweepResult]:
+    """Deprecated batch entry — use the fluent builder::
+
+        from repro.api import Sweep
+        Sweep(stream).lanes(runs).windowed(256).sharded().run()
+
+    This shim builds the equivalent ``Sweep`` (so the builder's lane
+    validation applies — e.g. ``engine="windowed"`` with ``chunk`` now
+    raises instead of silently ignoring the chunk) and runs it.
+    """
+    warnings.warn(
+        "run_sweep is deprecated: use repro.api.Sweep — e.g. "
+        "Sweep(stream).lanes(runs).windowed().sharded().run()",
+        DeprecationWarning, stacklevel=2)
+    from repro.api.sweep import Sweep
+    sw = Sweep(stream).lanes(runs)
+    if engine == "windowed":
+        sw.windowed(window)
+    elif engine != "scan":
+        raise ValueError(
+            f"unknown engine {engine!r} (expected 'scan' or 'windowed')")
+    if chunk is not None:
+        sw.chunked(chunk)
+    if shard is not None:
+        sw.sharded(shard)
+    return sw.run()

@@ -1,0 +1,220 @@
+"""The stateful ``Partitioner`` session must be bit-identical to one
+whole-stream ``run_stream`` no matter how the stream is chopped across
+``feed()`` calls (chunks of 1, 7, window-straddling sizes; autoscale
+events landing exactly on a boundary) and across ``snapshot()`` →
+``restore()`` → ``feed(rest)``."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import Partitioner
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import EngineConfig, run_stream
+from repro.core.state import PartitionState
+from repro.graph.generators import make_graph
+from repro.graph import stream as gstream
+
+
+def _churn_fixture():
+    """Delete-heavy interleaved churn with autoscale on — the regime where
+    every transition type (add / del vertex / del edge / scale-out /
+    scale-in) crosses chunk boundaries."""
+    g = make_graph("social", 90, 260, seed=2)
+    s = gstream.interleaved_churn(g, warmup_frac=0.2, del_every=3,
+                                  edge_del_every=5, seed=4)
+    cfg = EngineConfig(k_max=8, k_init=1, max_cap=100)
+    return s, cfg
+
+
+def _identical(ref: PartitionState, got: PartitionState):
+    for f in ("assignment", "present", "adj", "edge_load", "vertex_count",
+              "active", "cut_matrix"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(got, f)), f)
+    for f in ("num_partitions", "total_edges", "cut_edges",
+              "denied_scaleout", "scale_events"):
+        assert int(getattr(ref, f)) == int(getattr(got, f)), f
+
+
+def _feed_chunked(part: Partitioner, s, chunk: int):
+    t = 0
+    while t < s.num_events:
+        e = min(t + chunk, s.num_events)
+        part.feed((s.etype[t:e], s.vertex[t:e], s.nbrs[t:e]))
+        t = e
+    return part
+
+
+@pytest.mark.parametrize("engine", ["auto", "scan", "windowed"])
+@pytest.mark.parametrize("chunk", [1, 7, 50])
+def test_feed_chunked_bit_identical_to_run_stream(engine, chunk):
+    """Chunks of 1, 7, and window-straddling 50 (window=32) through every
+    backend == one whole-stream run_stream, bitwise."""
+    s, cfg = _churn_fixture()
+    ref, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    part = Partitioner.from_stream(s, cfg, seed=0, engine=engine, window=32)
+    _feed_chunked(part, s, chunk)
+    assert part.cursor == s.num_events
+    _identical(ref, part.state)
+
+
+def test_feed_whole_stream_and_vertexstream_input():
+    s, cfg = _churn_fixture()
+    ref, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    part = Partitioner.from_stream(s, cfg, seed=0, window=32).feed(s)
+    _identical(ref, part.state)
+    m = part.metrics()
+    assert m["events_ingested"] == s.num_events
+    assert m["edge_cut"] == int(ref.cut_edges)
+
+
+def test_feed_split_exactly_at_autoscale_event():
+    """Chop the stream exactly where a scale event fires: the first event
+    of the second chunk sees the post-scale state, RNG still aligned."""
+    g = make_graph("social", 90, 260, seed=2)
+    s = gstream.dynamic_schedule(g, add_pct=25.0, del_pct=10.0,
+                                 n_intervals=4, seed=3,
+                                 del_edges_per_interval=5)
+    cfg = EngineConfig(k_max=8, k_init=1, max_cap=40, tolerance_param=35.0)
+    ref, trace = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    parts = np.asarray(trace.num_partitions)
+    bounds = np.flatnonzero(np.diff(parts)) + 1     # event AFTER each scale
+    assert bounds.size >= 2, "fixture must actually autoscale"
+    for cut in (int(bounds[0]), int(bounds[-1])):
+        part = Partitioner.from_stream(s, cfg, seed=0, window=32)
+        part.feed((s.etype[:cut], s.vertex[:cut], s.nbrs[:cut]))
+        part.feed((s.etype[cut:], s.vertex[cut:], s.nbrs[cut:]))
+        _identical(ref, part.state)
+
+
+def test_trace_chunked_matches_run_stream():
+    s, cfg = _churn_fixture()
+    _, ref_trace = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    part = Partitioner.from_stream(s, cfg, seed=0, collect_trace=True)
+    _feed_chunked(part, s, 23)
+    tr = part.trace()
+    for f in tr._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(tr, f)),
+                                      np.asarray(getattr(ref_trace, f)), f)
+
+
+def test_snapshot_restore_feed_rest(tmp_path):
+    """snapshot() -> restore() -> feed(rest) == one uninterrupted run."""
+    s, cfg = _churn_fixture()
+    ref, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    mid = s.num_events // 2
+    part = Partitioner.from_stream(s, cfg, seed=0, window=32)
+    part.feed((s.etype[:mid], s.vertex[:mid], s.nbrs[:mid]))
+    step = part.snapshot(str(tmp_path))
+    assert step == mid
+
+    sess = Partitioner.restore(str(tmp_path), cfg, n=s.n, max_deg=s.max_deg,
+                               window=32)
+    assert sess.cursor == mid
+    sess.feed((s.etype[mid:], s.vertex[mid:], s.nbrs[mid:]))
+    _identical(ref, sess.state)
+
+
+def test_snapshot_nonblocking_wait(tmp_path):
+    """snapshot(blocking=False) + wait() persists; the session reuses one
+    manager per directory so pending writers are joined, not leaked."""
+    s, cfg = _churn_fixture()
+    part = Partitioner.from_stream(s, cfg, seed=0, window=32).feed(s)
+    part.snapshot(str(tmp_path), blocking=False)
+    assert part._managers[str(tmp_path)] is not None
+    part.wait()
+    sess = Partitioner.restore(str(tmp_path), cfg, n=s.n, max_deg=s.max_deg)
+    assert sess.cursor == s.num_events
+    _identical(part.state, sess.state)
+
+
+def test_restore_pre_cut_matrix_checkpoint(tmp_path):
+    """A bare PartitionState checkpoint WITHOUT the trailing cut_matrix
+    leaf (the pre-PR-3 layout) restores via fill_missing, is healed with
+    recount_cut_matrix, and the resumed session stays bit-identical."""
+    import collections
+    s, cfg = _churn_fixture()
+    ref, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    mid = s.num_events // 2
+    part = Partitioner.from_stream(s, cfg, seed=0, window=32)
+    part.feed((s.etype[:mid], s.vertex[:mid], s.nbrs[:mid]))
+    # same field names so key paths align by attribute, no cut_matrix leaf
+    Legacy = collections.namedtuple("Legacy", PartitionState._fields[:-1])
+    legacy = Legacy(*tuple(part.state)[:-1])
+    CheckpointManager(str(tmp_path), interval=1).maybe_save(
+        mid, legacy, blocking=True)
+
+    sess = Partitioner.restore(str(tmp_path), cfg, n=s.n, max_deg=s.max_deg,
+                               window=32)
+    assert sess.cursor == mid
+    sess.feed((s.etype[mid:], s.vertex[mid:], s.nbrs[mid:]))
+    _identical(ref, sess.state)
+
+
+def test_restore_rejects_mismatched_shapes(tmp_path):
+    s, cfg = _churn_fixture()
+    part = Partitioner.from_stream(s, cfg, seed=0)
+    part.feed(s)
+    part.snapshot(str(tmp_path))
+    with pytest.raises(ValueError, match="shapes"):
+        Partitioner.restore(str(tmp_path), cfg, n=s.n + 5,
+                            max_deg=s.max_deg)
+    with pytest.raises(FileNotFoundError):
+        Partitioner.restore(os.path.join(str(tmp_path), "empty"), cfg,
+                            n=s.n, max_deg=s.max_deg)
+
+
+def test_constructor_and_feed_validation():
+    s, cfg = _churn_fixture()
+    with pytest.raises(ValueError, match="policy"):
+        Partitioner.from_stream(s, cfg, policy="nope")
+    with pytest.raises(ValueError, match="engine"):
+        Partitioner.from_stream(s, cfg, engine="nope")
+    with pytest.raises(ValueError, match="window"):
+        Partitioner.from_stream(s, cfg, window=0)
+    with pytest.raises(ValueError, match="collect_trace"):
+        Partitioner.from_stream(s, cfg, engine="windowed",
+                                collect_trace=True)
+    part = Partitioner(cfg, n=s.n, max_deg=s.max_deg)
+    with pytest.raises(RuntimeError, match="collect_trace"):
+        part.trace()
+    with pytest.raises(TypeError, match="VertexStream"):
+        part.feed(42)
+    with pytest.raises(ValueError, match="universe"):
+        part.feed((s.etype, np.full_like(s.vertex, s.n + 3), s.nbrs))
+    with pytest.raises(ValueError, match="shapes disagree"):
+        part.feed((s.etype[:4], s.vertex[:3], s.nbrs[:4]))
+    small = Partitioner(cfg, n=s.n, max_deg=4)
+    with pytest.raises(ValueError, match="max_deg"):
+        small.feed(s)  # stream rows are wider with real neighbour ids
+    other = gstream.VertexStream(etype=s.etype, vertex=s.vertex,
+                                 nbrs=s.nbrs, n=s.n + 1)
+    with pytest.raises(ValueError, match="universe"):
+        part.feed(other)
+
+
+def test_feed_narrow_and_padded_wide_rows():
+    """Neighbour rows narrower than the session pad with -1; wider rows
+    whose extra columns are all -1 trim losslessly."""
+    s, cfg = _churn_fixture()
+    ref, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    wide = np.concatenate(
+        [s.nbrs, np.full((s.num_events, 3), -1, np.int32)], axis=1)
+    part = Partitioner.from_stream(s, cfg, seed=0, window=32)
+    part.feed((s.etype, s.vertex, wide))
+    _identical(ref, part.state)
+
+    sess = Partitioner(cfg, n=s.n, max_deg=s.max_deg + 2, seed=0)
+    sess.feed(s)   # narrower stream rows pad up to the session width
+    assert int(sess.state.cut_edges) == int(ref.cut_edges)
+    np.testing.assert_array_equal(np.asarray(ref.assignment),
+                                  np.asarray(sess.state.assignment))
+
+
+def test_empty_feed_is_noop():
+    s, cfg = _churn_fixture()
+    part = Partitioner.from_stream(s, cfg, collect_trace=True)
+    part.feed((s.etype[:0], s.vertex[:0], s.nbrs[:0]))
+    assert part.cursor == 0
+    assert part.trace().cut_edges.shape == (0,)

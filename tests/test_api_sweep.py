@@ -1,0 +1,79 @@
+"""Sweep-builder validation (one place for every lane-compatibility rule)
+and the deprecated ``run_sweep`` shim (warns but keeps working, and now
+surfaces the windowed+chunk conflict instead of silently ignoring it)."""
+import numpy as np
+import pytest
+
+from repro.api import Sweep, SweepRun
+from repro.core import EngineConfig
+from repro.graph.generators import make_graph
+from repro.graph import stream as gstream
+from repro.runtime.sweep import run_sweep
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    g = make_graph("mesh", 60, 150, seed=8)
+    s = gstream.build_stream(g, seed=9)
+    runs = [SweepRun("sdp", EngineConfig(k_max=4, k_init=1, max_cap=80), 0),
+            SweepRun("ldg", EngineConfig(k_max=4, k_init=2,
+                                         autoscale=False), 1)]
+    return s, runs
+
+
+def test_windowed_rejects_chunk(fixture):
+    """`chunk` used to be silently ignored by the windowed engine — now
+    it raises, from the builder and through the shim alike."""
+    s, runs = fixture
+    with pytest.raises(ValueError, match="chunk"):
+        Sweep(s).lanes(runs).windowed(64).chunked(16).run()
+    with pytest.raises(ValueError, match="chunk"):
+        Sweep(s).lanes(runs).chunked(16).windowed(64).run()
+    with pytest.raises(ValueError, match="chunk"), pytest.warns(
+            DeprecationWarning):
+        run_sweep(s, runs, engine="windowed", chunk=16)
+
+
+def test_builder_knob_validation(fixture):
+    s, runs = fixture
+    with pytest.raises(ValueError, match="window"):
+        Sweep(s).lanes(runs).windowed(0)
+    with pytest.raises(ValueError, match="chunk"):
+        Sweep(s).lanes(runs).chunked(0)
+
+
+def test_run_sweep_shim_warns_and_matches_builder(fixture):
+    s, runs = fixture
+    want = Sweep(s).lanes(runs).run()
+    with pytest.warns(DeprecationWarning, match="Sweep"):
+        got = run_sweep(s, runs)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(a.state.assignment),
+                                      np.asarray(b.state.assignment))
+        assert int(a.state.cut_edges) == int(b.state.cut_edges)
+
+    want = Sweep(s).lanes(runs).windowed(32).run()
+    with pytest.warns(DeprecationWarning):
+        got = run_sweep(s, runs, engine="windowed", window=32)
+    for a, b in zip(want, got):
+        assert a.trace is None and b.trace is None
+        np.testing.assert_array_equal(np.asarray(a.state.assignment),
+                                      np.asarray(b.state.assignment))
+
+
+def test_run_sweep_shim_rejects_unknown_engine(fixture):
+    s, runs = fixture
+    with pytest.raises(ValueError, match="engine"):
+        run_sweep(s, runs, engine="nope")
+
+
+def test_scan_resets_windowed(fixture):
+    """.scan() after .windowed() re-arms the chunked path."""
+    s, runs = fixture
+    results = Sweep(s).lanes(runs).windowed(64).scan().chunked(16).run()
+    assert all(r.trace is not None for r in results)
+    ref = Sweep(s).lanes(runs).run()
+    for a, b in zip(ref, results):
+        for f in a.trace._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(a.trace, f)),
+                                          np.asarray(getattr(b.trace, f)))

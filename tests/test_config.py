@@ -1,0 +1,41 @@
+"""EngineConfig.__post_init__ must reject malformed knobs up front with
+actionable messages (field name + offending value + what to change) —
+not fail deep inside tracing."""
+import pytest
+
+from repro.core import EngineConfig
+
+
+@pytest.mark.parametrize("kw,needle", [
+    (dict(balance_guard="bogus"), "balance_guard='bogus'"),
+    (dict(k_max=0), "k_max=0"),
+    (dict(k_max=-3), "k_max=-3"),
+    (dict(k_init=0), "k_init=0"),
+    (dict(k_init=9, k_max=8), "k_init=9"),
+    (dict(max_cap=0), "max_cap=0"),
+    (dict(max_cap=-5), "max_cap=-5"),
+    (dict(tolerance_param=-1.0), "tolerance_param=-1.0"),
+    (dict(tolerance_param=101.0), "tolerance_param=101.0"),
+    (dict(dest_param=-0.5), "dest_param=-0.5"),
+    (dict(dest_param=150.0), "dest_param=150.0"),
+    (dict(fennel_gamma=1.0), "fennel_gamma=1.0"),
+    (dict(fennel_gamma=0.0), "fennel_gamma=0.0"),
+    (dict(ldg_slack=0.5), "ldg_slack=0.5"),
+])
+def test_bad_config_raises_with_value_in_message(kw, needle):
+    with pytest.raises(ValueError) as exc:
+        EngineConfig(**kw)
+    assert needle in str(exc.value)
+
+
+def test_messages_are_actionable():
+    with pytest.raises(ValueError, match="raise k_max or\\s+lower k_init"):
+        EngineConfig(k_init=9, k_max=8)
+    with pytest.raises(ValueError, match="'text'.*'alg1'"):
+        EngineConfig(balance_guard="nope")
+
+
+def test_boundary_values_accepted():
+    EngineConfig(k_init=1, k_max=1)
+    EngineConfig(tolerance_param=0.0, dest_param=100.0)
+    EngineConfig(fennel_gamma=1.0001, ldg_slack=1.0)

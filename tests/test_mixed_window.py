@@ -81,16 +81,6 @@ def test_mixed_window_with_pallas_kernel():
     _identical(a, b)
 
 
-def test_legacy_driver_still_bit_identical():
-    """The pre-mixed (delete-splitting) driver stays a valid fallback."""
-    s = _churn_stream(seed=13)
-    cfg = EngineConfig(k_max=8, k_init=1, max_cap=100, autoscale=True)
-    a, _ = run_stream(s, policy="sdp", cfg=cfg, seed=2)
-    b = run_stream_windowed(s, policy="sdp", cfg=cfg, seed=2, window=32,
-                            mixed=False)
-    _identical(a, b)
-
-
 def test_mixed_window_readd_within_window():
     """add → delete → re-add of the same vertex inside ONE window must
     chain through the window-local label journal."""

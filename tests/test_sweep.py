@@ -1,13 +1,15 @@
 """The sweep runtime must reproduce per-stream `run_stream` results
 bit-for-bit on every lane (policies × seeds × configs × streams in one
-program) — whole-stream or chunked, per-event scan or windowed lanes."""
+program) — whole-stream or chunked, per-event scan or windowed lanes.
+Entry point: the fluent ``repro.api.Sweep`` builder (the deprecated
+``run_sweep`` shim is covered in tests/test_api_sweep.py)."""
 import numpy as np
 import pytest
 
+from repro.api import Sweep, SweepRun
 from repro.core import EngineConfig, run_stream
 from repro.graph.generators import make_graph
 from repro.graph import stream as gstream
-from repro.runtime.sweep import SweepRun, run_sweep
 
 
 def _lane_matches(result, stream):
@@ -41,7 +43,7 @@ def test_sweep_policies_and_seeds_static_stream():
         for policy in ("sdp", "ldg", "fennel", "hash", "random", "greedy")
         for seed in (0, 1)
     ]
-    for r in run_sweep(s, runs):
+    for r in Sweep(s).lanes(runs).run():
         _lane_matches(r, s)
 
 
@@ -49,14 +51,16 @@ def test_sweep_dynamic_stream_with_deletions():
     g = make_graph("social", 90, 260, seed=2)
     s = gstream.dynamic_schedule(g, n_intervals=3, seed=3,
                                  del_edges_per_interval=5)
-    runs = [
-        SweepRun("sdp", EngineConfig(k_max=8, k_init=1, max_cap=100), 0),
-        SweepRun("sdp", EngineConfig(k_max=8, k_init=2, max_cap=10**9), 4),
-        SweepRun("greedy",
-                 EngineConfig(k_max=8, k_init=4, autoscale=False), 0),
-        SweepRun("ldg", EngineConfig(k_max=8, k_init=3, autoscale=False), 1),
-    ]
-    for r in run_sweep(s, runs):
+    results = (
+        Sweep(s)
+        .lane("sdp", EngineConfig(k_max=8, k_init=1, max_cap=100), 0)
+        .lane("sdp", EngineConfig(k_max=8, k_init=2, max_cap=10**9), 4)
+        .lane("greedy", EngineConfig(k_max=8, k_init=4, autoscale=False), 0)
+        .lane("ldg", EngineConfig(k_max=8, k_init=3, autoscale=False), 1)
+        .run()
+    )
+    assert len(results) == 4
+    for r in results:
         _lane_matches(r, s)
 
 
@@ -69,7 +73,7 @@ def test_sweep_config_lanes_vary_k():
                  EngineConfig(k_max=16, k_init=k, autoscale=False), 0)
         for k in (2, 4, 8, 16)
     ]
-    for r in run_sweep(s, runs):
+    for r in Sweep(s).lanes(runs).run():
         _lane_matches(r, s)
 
 
@@ -97,7 +101,7 @@ def test_sweep_per_lane_streams():
     """Each lane rides its own stream; every lane still bit-matches
     run_stream on that stream (traces sliced to the lane's true length)."""
     streams, runs = _per_lane_fixture()
-    for r, s in zip(run_sweep(streams, runs), streams):
+    for r, s in zip(Sweep(streams).lanes(runs).run(), streams):
         _lane_matches(r, s)
 
 
@@ -106,8 +110,8 @@ def test_sweep_chunked_trace_matches_run_stream():
     with a non-divisible chunk size and an autoscale lane (the chunked
     trace concatenation path)."""
     streams, runs = _per_lane_fixture()
-    one = run_sweep(streams, runs)
-    chk = run_sweep(streams, runs, chunk=37)
+    one = Sweep(streams).lanes(runs).run()
+    chk = Sweep(streams).lanes(runs).chunked(37).run()
     for a, b, s in zip(one, chk, streams):
         _lane_matches(b, s)
         for f in a.trace._fields:
@@ -116,11 +120,10 @@ def test_sweep_chunked_trace_matches_run_stream():
 
 
 def test_sweep_windowed_engine_matches_run_stream():
-    """engine="windowed": lanes ride the mixed-event window kernel and
-    stay bit-identical to the faithful scan (states; traces are None)."""
+    """.windowed(): lanes ride the mixed-event window kernel and stay
+    bit-identical to the faithful scan (states; traces are None)."""
     streams, runs = _per_lane_fixture()
-    for r, s in zip(run_sweep(streams, runs, engine="windowed", window=64),
-                    streams):
+    for r, s in zip(Sweep(streams).lanes(runs).windowed(64).run(), streams):
         assert r.trace is None
         _lane_matches(r, s)
         # windowed lanes also rebuild the full dense arrays — check them
@@ -134,17 +137,23 @@ def test_sweep_windowed_engine_matches_run_stream():
 def test_sweep_rejects_mismatched_static_shape():
     g = make_graph("mesh", 40, 100, seed=8)
     s = gstream.build_stream(g, seed=9)
-    runs = [SweepRun("sdp", EngineConfig(k_max=4), 0),
-            SweepRun("sdp", EngineConfig(k_max=8), 0)]
+    sw = (Sweep(s)
+          .lane("sdp", EngineConfig(k_max=4), 0)
+          .lane("sdp", EngineConfig(k_max=8), 0))
     with pytest.raises(ValueError, match="k_max"):
-        run_sweep(s, runs)
+        sw.run()
 
 
 def test_sweep_rejects_bad_inputs():
     g = make_graph("mesh", 40, 100, seed=8)
     s = gstream.build_stream(g, seed=9)
-    runs = [SweepRun("sdp", EngineConfig(k_max=4), 0)]
-    with pytest.raises(ValueError, match="engine"):
-        run_sweep(s, runs, engine="nope")
     with pytest.raises(ValueError, match="streams"):
-        run_sweep([s, s], runs)
+        Sweep([s, s]).lane("sdp", EngineConfig(k_max=4)).run()
+    with pytest.raises(ValueError, match="balance_guard"):
+        (Sweep(s)
+         .lane("sdp", EngineConfig(k_max=4))
+         .lane("sdp", EngineConfig(k_max=4, balance_guard="alg1"))
+         .run())
+    with pytest.raises(ValueError, match="policy"):
+        Sweep(s).lanes([("nope", EngineConfig(k_max=4), 0)]).run()
+    assert Sweep(s).run() == []  # no lanes -> empty, like the old entry

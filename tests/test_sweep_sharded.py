@@ -10,10 +10,10 @@ import jax
 import numpy as np
 import pytest
 
+from repro.api import Sweep, SweepRun
 from repro.core import EngineConfig, run_stream
 from repro.graph.generators import make_graph
 from repro.graph import stream as gstream
-from repro.runtime.sweep import SweepRun, run_sweep
 
 multi_device = pytest.mark.skipif(
     jax.device_count() < 2,
@@ -70,7 +70,7 @@ def test_forced_shard_padding_no_leakage():
     multiple of the device count and results are exactly the requested
     lanes — bit-identical to run_stream, no padded-lane leakage."""
     streams, runs = _fixture()
-    results = run_sweep(streams, runs, shard=True)
+    results = Sweep(streams).lanes(runs).sharded().run()
     assert len(results) == len(runs)
     for r, s in zip(results, streams):
         _assert_lane_matches(r, s)
@@ -79,8 +79,8 @@ def test_forced_shard_padding_no_leakage():
 def test_forced_shard_matches_unsharded():
     """Sharded and vmapped-host paths agree bitwise on states AND traces."""
     streams, runs = _fixture(n_lanes=3)
-    a = run_sweep(streams, runs, shard=True)
-    b = run_sweep(streams, runs, shard=False)
+    a = Sweep(streams).lanes(runs).sharded().run()
+    b = Sweep(streams).lanes(runs).sharded(False).run()
     for ra, rb in zip(a, b):
         np.testing.assert_array_equal(np.asarray(ra.state.assignment),
                                       np.asarray(rb.state.assignment))
@@ -96,14 +96,14 @@ def test_sharded_nondivisible_lanes_multi_device():
     assert jax.device_count() >= 2
     streams, runs = _fixture()
     assert len(runs) % jax.device_count() != 0, "want a non-divisible count"
-    for r, s in zip(run_sweep(streams, runs), streams):
+    for r, s in zip(Sweep(streams).lanes(runs).run(), streams):
         _assert_lane_matches(r, s)
 
 
 @multi_device
 def test_sharded_chunked_multi_device():
     streams, runs = _fixture(n_lanes=3)
-    for r, s in zip(run_sweep(streams, runs, chunk=29), streams):
+    for r, s in zip(Sweep(streams).lanes(runs).chunked(29).run(), streams):
         _assert_lane_matches(r, s)
 
 
@@ -111,7 +111,6 @@ def test_sharded_chunked_multi_device():
 def test_sharded_windowed_multi_device():
     """Windowed-lane sweep under shard_map: states bit-match run_stream."""
     streams, runs = _fixture()
-    for r, s in zip(run_sweep(streams, runs, engine="windowed", window=32),
-                    streams):
+    for r, s in zip(Sweep(streams).lanes(runs).windowed(32).run(), streams):
         assert r.trace is None
         _assert_lane_matches(r, s)
