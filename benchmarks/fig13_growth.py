@@ -1,0 +1,120 @@
+"""Beyond-paper Fig. 13: elastic-geometry growth overhead.
+
+Sessions seeded at 1/16, 1/4, and the full power-of-two tier of the
+stream's geometry ingest the same growing stream (ids ordered by first
+appearance, so the id universe expands with the cursor — the
+serving regime where nobody knows the final size). Auto-grow doubles
+the exceeded dimension per regeometry (repro.core.geometry), so the
+undersized sessions pay O(log n) grow_state copies + kernel re-jits;
+this benchmark reports that overhead against the presized baseline.
+Growth is a semantics no-op, so all variants must end bit-identical —
+asserted per run. Writes BENCH_growth.json (mirrored to the repo root;
+CI bench-smoke runs and uploads it like fig12).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.api import Partitioner
+from repro.core import EngineConfig, Geometry, next_pow2
+from repro.graph import stream as gstream
+
+CHUNK = 512      # events per feed() call (the arrival granularity)
+WINDOW = 256
+
+
+def _stream(quick: bool) -> gstream.VertexStream:
+    g = C.bench_graph("3elt", quick)
+    # feed in ascending-id order: the mesh's id locality makes the
+    # required universe grow with the cursor instead of jumping to n at
+    # the first event
+    order = np.arange(g.n, dtype=np.int32)
+    return gstream.build_stream(g, seed=0, order=order)
+
+
+def run(quick: bool = True) -> list:
+    s = _stream(quick)
+    full = Geometry(next_pow2(s.n), next_pow2(s.max_deg))
+    cfg = EngineConfig(k_max=16, k_init=1,
+                       max_cap=max(s.num_events // 6, 30), autoscale=True)
+    variants = {
+        "presized": full,
+        "quarter": Geometry(max(full.n // 4, 1), max(full.max_deg // 4, 1)),
+        "sixteenth": Geometry(max(full.n // 16, 1),
+                              max(full.max_deg // 16, 1)),
+    }
+    rows, finals = [], {}
+    for name, g0 in variants.items():
+
+        def feed_all():
+            part = Partitioner(cfg, n=g0.n, max_deg=g0.max_deg, seed=0,
+                               engine="windowed", window=WINDOW)
+            t0 = time.perf_counter()
+            t = 0
+            while t < s.num_events:
+                e = min(t + CHUNK, s.num_events)
+                part.feed((s.etype[t:e], s.vertex[t:e], s.nbrs[t:e]))
+                t = e
+            np.asarray(part.state.cut_edges)  # sync before stopping clock
+            return part, time.perf_counter() - t0
+
+        # the jit cache is shared across variants (they all end at the
+        # same final tier and would reuse each other's compiles), so each
+        # variant's cold pass starts from a cleared cache: cold includes
+        # ALL of that variant's tier compiles, warm isolates the
+        # grow_state copies + extra dispatches
+        jax.clear_caches()
+        part, cold = feed_all()
+        _, warm = feed_all()
+        finals[name] = part.state
+        rows.append({
+            "variant": name, "seconds_cold": cold, "seconds_warm": warm,
+            "events": s.num_events,
+            "start_n": g0.n, "start_max_deg": g0.max_deg,
+            "final_n": part.n, "final_max_deg": part.max_deg,
+            "regeometries": part.regeometries,
+            "events_per_s_warm": s.num_events / max(warm, 1e-9),
+        })
+    # doubling tiers from a pow2 start land every variant on the same
+    # final geometry, and growth is a semantics no-op — so the final
+    # states must be bit-identical to the presized run
+    base = finals["presized"]
+    for name, st in finals.items():
+        match = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(base, st))
+        if not match:
+            raise AssertionError(
+                f"elastic variant {name!r} diverged from the presized "
+                "baseline — growth must be a semantics no-op")
+    base = next(r for r in rows if r["variant"] == "presized")
+    for r in rows:
+        r["states_match_presized"] = True
+        r["rejit_seconds"] = max(r["seconds_cold"] - r["seconds_warm"], 0.0)
+        r["overhead_warm_vs_presized"] = (
+            r["seconds_warm"] / max(base["seconds_warm"], 1e-9))
+    for r in rows:
+        # re-jit cost elasticity adds on top of the one compile a
+        # presized session pays anyway
+        r["marginal_rejit_vs_presized"] = max(
+            r["rejit_seconds"] - base["rejit_seconds"], 0.0)
+    C.save_rows("fig13_growth", rows)
+    C.save_rows("BENCH_growth", rows)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    d = {r["variant"]: r for r in rows}
+    six = d["sixteenth"]
+    return [
+        f"fig13/growth,{six['seconds_warm']:.3f},"
+        f"warm_overhead_vs_presized={six['overhead_warm_vs_presized']:.2f}x"
+        f";marginal_rejit_s={six['marginal_rejit_vs_presized']:.3f}"
+        f";regeometries={six['regeometries']}"
+        f";final_n={six['final_n']}"
+        f";states_match={six['states_match_presized']}"
+    ]

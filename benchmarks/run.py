@@ -13,7 +13,9 @@ instead of a host loop re-scanning the stream per policy. fig10 times
 the mixed-event window engine against the legacy delete-splitting driver
 on an interleaved churn stream (BENCH_mixed_window.json); fig11 times
 host-loop vs vmapped vs sharded vs windowed-lane sweeps
-(BENCH_sweep_scaling.json).
+(BENCH_sweep_scaling.json); fig12 times incremental vs recompute
+autoscale lanes (BENCH_autoscale_churn.json); fig13 times elastic
+geometry growth against a presized session (BENCH_growth.json).
 """
 from __future__ import annotations
 
@@ -32,13 +34,13 @@ def main() -> int:
     from benchmarks import (fig4_edgecut, fig5_vs_offline, fig6_dynamics,
                             fig7_imbalance, fig8_npartitions, fig9_scaling,
                             fig10_time, fig11_sweep_scaling,
-                            fig12_autoscale_churn, roofline)
+                            fig12_autoscale_churn, fig13_growth, roofline)
     mods = {
         "fig4": fig4_edgecut, "fig5": fig5_vs_offline,
         "fig6": fig6_dynamics, "fig7": fig7_imbalance,
         "fig8": fig8_npartitions, "fig9": fig9_scaling,
         "fig10": fig10_time, "fig11": fig11_sweep_scaling,
-        "fig12": fig12_autoscale_churn,
+        "fig12": fig12_autoscale_churn, "fig13": fig13_growth,
         "roofline": roofline,
     }
     only = [s for s in args.only.split(",") if s]

@@ -37,8 +37,9 @@ def main():
           f"{part.cursor} events (snapshot -> {ckpt_dir})")
     first_half = part.trace()
 
-    part = Partitioner.restore(ckpt_dir, cfg, n=s.n, max_deg=s.max_deg,
-                               policy="sdp", collect_trace=True)
+    # no shapes needed: the checkpoint records its geometry in metadata
+    part = Partitioner.restore(ckpt_dir, cfg, policy="sdp",
+                               collect_trace=True)
     part.feed((s.etype[mid:], s.vertex[mid:], s.nbrs[mid:]))
     tr = part.trace()   # post-restore events (traces are not checkpointed)
     state = part.state

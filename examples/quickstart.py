@@ -49,6 +49,21 @@ def main():
           "\nof its neighbours (Eq. 1), guarded by the communication-aware"
           "\nbalance test (Eqs. 2-4), and auto-scales partitions (Eq. 5-8).")
 
+    # -- elastic geometry: nobody declared the stream's size -------------
+    # a session built with NO n/max_deg grows its state along power-of-two
+    # tiers as events reference new ids — bit-identical to a presized run
+    cfg = EngineConfig(k_max=8, k_init=1, max_cap=g.num_edges // 3)
+    part = Partitioner(cfg, policy="sdp")
+    prev = 0
+    for mark in (*s.intervals, s.num_events):
+        part.feed((s.etype[prev:mark], s.vertex[prev:mark],
+                   s.nbrs[prev:mark]))
+        prev = mark
+    print(f"\nelastic session: started at (n=1, max_deg=1), grew to "
+          f"(n={part.n}, max_deg={part.max_deg}) in "
+          f"{part.regeometries} regeometries; edge-cut "
+          f"{part.metrics()['edge_cut_ratio']:.4f}")
+
 
 if __name__ == "__main__":
     main()

@@ -32,9 +32,20 @@ Guarantees:
   backend (``collect_trace=True`` implies the scan, the only backend
   that produces per-event traces).
 * **Resumability.** ``snapshot()``/``Partitioner.restore()`` wrap
-  ``repro.checkpoint`` (atomic renames, retention); checkpoints that
-  predate ``PartitionState.cut_matrix`` restore via ``fill_missing`` and
-  are healed with ``recount_cut_matrix``.
+  ``repro.checkpoint`` (atomic renames, retention); checkpoints record
+  their geometry in metadata, and checkpoints that predate
+  ``PartitionState.cut_matrix`` restore via ``fill_missing`` and are
+  healed with ``recount_cut_matrix``.
+* **Elastic geometry.** The session's ``(n, max_deg)`` allocation is a
+  starting point, not a contract: ``feed()`` grows the state
+  (``repro.core.state.grow_state``) along power-of-two tiers whenever an
+  event references a vertex id or neighbour-row width beyond the current
+  geometry — a semantics no-op, so a session started tiny and grown on
+  demand stays bit-identical to one presized at the final geometry (see
+  repro.core.geometry; LDG is the one knob-level exception). Each tier
+  change re-jits the kernels (donation keeps reusing buffers within a
+  tier); ``grow_to()`` pre-sizes explicitly to pay one re-jit instead of
+  log-many.
 """
 from __future__ import annotations
 
@@ -46,11 +57,15 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core import engine as eng
 from repro.core import windowed as wnd
 from repro.core.config import EngineConfig, POLICIES
+from repro.core.geometry import Geometry, geometry_of, grow_tier
 from repro.core.state import (
-    PartitionState, init_state, recount_cut_matrix, state_metrics,
+    PartitionState, grow_state, init_state, recount_cut_matrix,
+    state_metrics,
 )
 from repro.core.transition import EventTrace
-from repro.graph.stream import EVENT_ADD, EVENT_PAD, VertexStream
+from repro.graph.stream import (
+    EVENT_ADD, EVENT_PAD, VertexStream, normalize_rows, required_geometry_of,
+)
 
 _ENGINES = ("auto", "scan", "windowed")
 
@@ -75,10 +90,13 @@ class Partitioner:
 
     Args:
       cfg: engine knobs (validated in ``EngineConfig.__post_init__``).
-      n: vertex-universe size — device arrays are fixed-shape, so the id
-        space must be declared up front (use ``from_stream`` to take it
-        from a stream).
-      max_deg: neighbour-row width of the padded adjacency.
+      n: starting vertex-universe size. Optional — the session grows its
+        geometry on demand (tier-doubling, see module docstring), so a
+        serving session whose stream size nobody knows can start with no
+        pre-sizing at all; declare it (or use ``from_stream`` /
+        ``grow_to``) to avoid the growth re-jits when the size IS known.
+      max_deg: starting neighbour-row width of the padded adjacency
+        (optional, grows like ``n``).
       policy: one of ``repro.core.config.POLICIES``.
       seed: PRNG seed for tie-breaking (folds with the global event index).
       engine: ``"auto"`` (default — windows when a call has them, scan for
@@ -91,8 +109,9 @@ class Partitioner:
         ``partition_affinity`` kernel instead of the jnp reference.
     """
 
-    def __init__(self, cfg: EngineConfig | None = None, *, n: int,
-                 max_deg: int, policy: str = "sdp", seed: int = 0,
+    def __init__(self, cfg: EngineConfig | None = None, *,
+                 n: int | None = None, max_deg: int | None = None,
+                 policy: str = "sdp", seed: int = 0,
                  engine: str = "auto", window: int = 256,
                  collect_trace: bool = False, use_kernel: bool = False):
         cfg = cfg or EngineConfig()
@@ -108,10 +127,12 @@ class Partitioner:
             raise ValueError(
                 f"window={window} must be > 0: it is the number of events "
                 "the windowed backend batches per device step")
-        if n <= 0 or max_deg <= 0:
+        if (n is not None and n <= 0) or (max_deg is not None
+                                          and max_deg <= 0):
             raise ValueError(
-                f"n={n} and max_deg={max_deg} must be > 0: they size the "
-                "dense (n, max_deg) adjacency")
+                f"n={n} and max_deg={max_deg} must be > 0 (or omitted to "
+                "grow on demand): they size the dense (n, max_deg) "
+                "adjacency")
         if collect_trace and engine == "windowed":
             raise ValueError(
                 "collect_trace=True needs the per-event scan (the window "
@@ -119,8 +140,6 @@ class Partitioner:
                 "'auto'")
         self.cfg = cfg
         self.policy = policy
-        self.n = int(n)
-        self.max_deg = int(max_deg)
         self.engine = engine
         self.window = int(window)
         self.collect_trace = bool(collect_trace)
@@ -129,8 +148,9 @@ class Partitioner:
             self._score_fn = scores_for_state
         else:
             self._score_fn = None
-        self._state = init_state(self.n, self.max_deg, cfg.k_max,
+        self._state = init_state(int(n or 1), int(max_deg or 1), cfg.k_max,
                                  cfg.k_init, seed)
+        self._regeometries = 0
         self._cursor = 0
         self._traces: list[EventTrace] = []
         self._managers: dict[str, CheckpointManager] = {}
@@ -139,8 +159,12 @@ class Partitioner:
     def from_stream(cls, stream: VertexStream,
                     cfg: EngineConfig | None = None, **kw) -> "Partitioner":
         """Size a session for ``stream``'s vertex universe and degree cap
-        (the stream itself is NOT ingested — call ``feed``)."""
-        return cls(cfg, n=stream.n, max_deg=stream.max_deg, **kw)
+        — its declared geometry unioned with ``required_geometry()``, the
+        same definition the feed-time auto-grow check uses (the stream
+        itself is NOT ingested — call ``feed``)."""
+        geom = Geometry(stream.n, stream.max_deg).union(
+            stream.required_geometry())
+        return cls(cfg, n=geom.n, max_deg=geom.max_deg, **kw)
 
     # -- properties ---------------------------------------------------------
 
@@ -151,6 +175,27 @@ class Partitioner:
         return self._state
 
     @property
+    def n(self) -> int:
+        """Current vertex-universe allocation (grows, never shrinks)."""
+        return int(self._state.assignment.shape[0])
+
+    @property
+    def max_deg(self) -> int:
+        """Current neighbour-row width (grows, never shrinks)."""
+        return int(self._state.adj.shape[1])
+
+    @property
+    def geometry(self) -> Geometry:
+        """The session's current :class:`Geometry` (n, max_deg, k_max)."""
+        return geometry_of(self._state)
+
+    @property
+    def regeometries(self) -> int:
+        """How many times the state geometry grew (auto or ``grow_to``)
+        — each one re-jits the engine kernels for the new tier."""
+        return self._regeometries
+
+    @property
     def cursor(self) -> int:
         """Global index of the next event (== events ingested so far)."""
         return self._cursor
@@ -159,6 +204,32 @@ class Partitioner:
         return (f"Partitioner(policy={self.policy!r}, engine={self.engine!r},"
                 f" n={self.n}, max_deg={self.max_deg}, events={self._cursor},"
                 f" partitions={int(self._state.num_partitions)})")
+
+    # -- geometry -----------------------------------------------------------
+
+    def grow_to(self, n: int | None = None,
+                max_deg: int | None = None) -> "Partitioner":
+        """Explicitly pre-size the session geometry (exact — no tier
+        rounding: the caller knows the size). Grows the state to cover
+        ``(n, max_deg)``; dimensions already covered are untouched, and
+        shrinking is never performed. Use before a large ``feed`` to pay
+        one re-jit instead of log-many tier doublings."""
+        cur = geometry_of(self._state)
+        target = cur.union(Geometry(int(n or 1), int(max_deg or 1)))
+        if target != cur:
+            self._state = grow_state(self._state, target)
+            self._regeometries += 1
+        return self
+
+    def _ensure_geometry(self, required: Geometry) -> None:
+        """Grow the state along power-of-two tiers until it covers
+        ``required`` (no-op when it already does) — the feed-time
+        auto-grow. Growth is a semantics no-op (repro.core.geometry), so
+        donation simply resumes at the new tier after one re-jit."""
+        cur = geometry_of(self._state)
+        if not cur.covers(required):
+            self._state = grow_state(self._state, grow_tier(cur, required))
+            self._regeometries += 1
 
     # -- ingestion ----------------------------------------------------------
 
@@ -224,14 +295,10 @@ class Partitioner:
 
     def _coerce(self, events):
         if isinstance(events, VertexStream):
-            if events.n != self.n:
-                raise ValueError(
-                    f"stream has vertex universe n={events.n} but this "
-                    f"session was sized n={self.n}: sessions are fixed-shape"
-                    " — build one with from_stream() or matching n")
             et = np.asarray(events.etype, np.int32)
             vx = np.asarray(events.vertex, np.int32)
             nb = np.asarray(events.nbrs, np.int32)
+            required = events.required_geometry()
         else:
             try:
                 et, vx, nb = events
@@ -248,31 +315,24 @@ class Partitioner:
                     f"event triple shapes disagree: etype{et.shape}, "
                     f"vertex{vx.shape}, nbrs{nb.shape} — want (T,), (T,), "
                     "(T, max_deg)")
-        if np.any(vx >= self.n):
-            raise ValueError(
-                f"event vertex id {int(vx.max())} is outside this session's"
-                f" universe n={self.n}")
-        d = nb.shape[1]
-        if d < self.max_deg:
-            nb = np.concatenate(
-                [nb, np.full((nb.shape[0], self.max_deg - d), -1, np.int32)],
-                axis=1)
-        elif d > self.max_deg:
-            if np.any(nb[:, self.max_deg:] >= 0):
-                raise ValueError(
-                    f"events carry neighbour rows of width {d} but this "
-                    f"session was sized max_deg={self.max_deg} — re-create "
-                    "the session with the larger max_deg")
-            nb = nb[:, : self.max_deg]
-        return et, vx, nb
+            required = required_geometry_of(vx, nb)
+        # elastic: events beyond the current geometry grow the state
+        # (tier-doubled) instead of raising — the session's shapes are a
+        # starting point, not a contract
+        self._ensure_geometry(required)
+        return et, vx, normalize_rows(nb, self.max_deg)
 
     # -- observation --------------------------------------------------------
 
     def metrics(self) -> dict:
         """Paper metrics (Eq. 9 edge-cut ratio, Eq. 10 imbalance, scaling
-        counters) of the state as of the last ``feed``, plus the cursor."""
+        counters) of the state as of the last ``feed``, plus the cursor
+        and the elastic-geometry counters."""
         m = state_metrics(self._state)
         m["events_ingested"] = self._cursor
+        m["n"] = self.n
+        m["max_deg"] = self.max_deg
+        m["regeometries"] = self._regeometries
         return m
 
     def trace(self) -> EventTrace:
@@ -309,7 +369,8 @@ class Partitioner:
             self._managers[directory] = mgr
         else:
             mgr.keep = keep
-        mgr.maybe_save(self._cursor, self._state, blocking=blocking)
+        mgr.maybe_save(self._cursor, self._state, blocking=blocking,
+                       geometry=geometry_of(self._state))
         return self._cursor
 
     def wait(self) -> None:
@@ -320,37 +381,75 @@ class Partitioner:
 
     @classmethod
     def restore(cls, directory: str, cfg: EngineConfig | None = None, *,
-                n: int, max_deg: int, step: int | None = None,
-                **kw) -> "Partitioner":
+                n: int | None = None, max_deg: int | None = None,
+                step: int | None = None, **kw) -> "Partitioner":
         """Resume a session from ``snapshot()`` output (default: latest
-        step). Also restores bare ``PartitionState`` checkpoints written
-        by older code: states that predate ``cut_matrix`` come back via
-        ``fill_missing`` and are healed with ``recount_cut_matrix``.
-        ``cfg``/``policy``/engine knobs are not stored in the checkpoint —
-        pass the ones the session ran with. Traces are not checkpointed;
-        a restored session's ``trace()`` covers post-restore events only.
+        step). The checkpoint's recorded geometry sizes the restore —
+        ``n``/``max_deg`` are only needed to pre-size *larger* (the
+        restored state is grown to cover them; requesting smaller than
+        the checkpoint raises — geometry never shrinks), or for
+        checkpoints so old their geometry cannot be inferred from the
+        leaf shapes. ``cfg.k_max`` larger than the checkpoint's likewise
+        grows the partition-slot headroom. Also restores bare
+        ``PartitionState`` checkpoints written by older code: states
+        that predate ``cut_matrix`` come back via ``fill_missing`` and
+        are healed with ``recount_cut_matrix``. ``cfg``/``policy``/
+        engine knobs are not stored in the checkpoint — pass the ones
+        the session ran with. Traces are not checkpointed; a restored
+        session's ``trace()`` covers post-restore events only.
         """
-        part = cls(cfg, n=n, max_deg=max_deg, **kw)
+        cfg = cfg or EngineConfig()
         mgr = CheckpointManager(directory, interval=1)
         step = step if step is not None else mgr.latest()
         if step is None:
             raise FileNotFoundError(
                 f"no checkpoint found under {directory!r}")
-        keys = mgr.leaf_keys(step)
-        state, step = mgr.restore(part._state, step=step, fill_missing=True)
-        if state.assignment.shape[0] != part.n \
-                or state.adj.shape[1] != part.max_deg \
-                or state.edge_load.shape[0] != part.cfg.k_max:
+        ck = mgr.geometry(step)
+        if ck is None:
+            if n is None or max_deg is None:
+                raise ValueError(
+                    f"checkpoint at step {step} records no geometry and "
+                    "none could be inferred from its leaf shapes — pass "
+                    "n= and max_deg= explicitly")
+            ck = Geometry(int(n), int(max_deg), cfg.k_max)
+        if (n is not None and n < ck.n) \
+                or (max_deg is not None and max_deg < ck.max_deg):
             raise ValueError(
-                f"checkpoint shapes (n={state.assignment.shape[0]}, "
-                f"max_deg={state.adj.shape[1]}, "
-                f"k_max={state.edge_load.shape[0]}) do not match the "
-                f"requested session (n={part.n}, max_deg={part.max_deg}, "
-                f"k_max={part.cfg.k_max})")
-        if len(keys) < len(jax.tree_util.tree_leaves(part._state)):
+                f"checkpoint geometry (n={ck.n}, max_deg={ck.max_deg}) "
+                f"exceeds the requested session shapes (n={n}, "
+                f"max_deg={max_deg}): sessions grow, never shrink — "
+                "request at least the checkpoint geometry (or omit "
+                "n/max_deg to take it verbatim)")
+        if cfg.k_max < (ck.k_max or 0):
+            raise ValueError(
+                f"checkpoint was taken at k_max={ck.k_max} but "
+                f"cfg.k_max={cfg.k_max}: partition-slot shapes grow, "
+                "never shrink — raise cfg.k_max")
+        target = Geometry(max(int(n or 0), ck.n),
+                          max(int(max_deg or 0), ck.max_deg), cfg.k_max)
+        # build the session tier-minimal — its placeholder state is
+        # replaced below, and allocating it at the target would hold a
+        # third full-size state alive during the restore
+        part = cls(cfg, **kw)
+        # restore into a `like` at the EXACT checkpoint geometry (the
+        # payload dictates leaf shapes), then grow to the target
+        like = init_state(ck.n, ck.max_deg, ck.k_max or cfg.k_max,
+                          cfg.k_init, 0)
+        keys = mgr.leaf_keys(step)
+        state, step = mgr.restore(like, step=step, fill_missing=True)
+        # the payload dictates the restored leaf shapes, so a checkpoint
+        # whose recorded geometry omitted k_max (Geometry.k_max is
+        # Optional) is validated here, against the real saved shape
+        k_saved = int(state.edge_load.shape[0])
+        if k_saved > cfg.k_max:
+            raise ValueError(
+                f"checkpoint was taken at k_max={k_saved} but "
+                f"cfg.k_max={cfg.k_max}: partition-slot shapes grow, "
+                "never shrink — raise cfg.k_max")
+        if len(keys) < len(jax.tree_util.tree_leaves(like)):
             # pre-cut_matrix checkpoint: fill_missing kept `like`'s zero
             # matrix — rebuild it exactly from the restored adjacency
             state = recount_cut_matrix(state)
-        part._state = state
+        part._state = grow_state(state, target)
         part._cursor = int(step)
         return part

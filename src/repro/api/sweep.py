@@ -15,8 +15,11 @@ stacked:
 
 Execution is unchanged: every lane is bit-identical to ``run_stream`` on
 that lane's stream (tests/test_sweep.py, tests/test_sweep_sharded.py).
-The old ``repro.runtime.sweep.run_sweep`` survives as a deprecation shim
-that builds a ``Sweep`` and runs it.
+Per-lane streams may differ in geometry (``n`` / ``max_deg``) — the
+runtime pads all lanes to the union geometry before stacking, which is a
+semantics no-op per lane (tests/test_geometry.py; see
+repro.core.geometry). The old ``repro.runtime.sweep.run_sweep`` survives
+as a deprecation shim that builds a ``Sweep`` and runs it.
 """
 from __future__ import annotations
 

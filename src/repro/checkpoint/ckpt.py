@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import os
 import tempfile
+import zipfile
 
 import jax
 import jax.numpy as jnp
@@ -23,10 +24,17 @@ def _flatten(tree):
     return keys, vals, treedef
 
 
-def save_pytree(path: str, tree, *, step: int | None = None) -> str:
-    """Atomic save. Returns the final path."""
+def save_pytree(path: str, tree, *, step: int | None = None,
+                geometry=None) -> str:
+    """Atomic save. Returns the final path.
+
+    ``geometry`` (a ``repro.core.geometry.Geometry`` or mapping with
+    n/max_deg/k_max) is recorded in the metadata so a restorer can size
+    its target — and grow it — without loading the payload."""
     keys, vals, _ = _flatten(tree)
-    meta = {"keys": keys, "step": step}
+    if geometry is not None and hasattr(geometry, "_asdict"):
+        geometry = dict(geometry._asdict())
+    meta = {"keys": keys, "step": step, "geometry": geometry}
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                suffix=".tmp")
@@ -82,6 +90,51 @@ def checkpoint_step(path: str) -> int | None:
         with open(path + ".meta", "rb") as f:
             return msgpack.unpackb(f.read()).get("step")
     except FileNotFoundError:
+        return None
+
+
+def _npy_header_shape(f) -> tuple:
+    """Shape from an .npy member's header alone — no payload read."""
+    version = np.lib.format.read_magic(f)
+    read_header = (np.lib.format.read_array_header_1_0 if version == (1, 0)
+                   else np.lib.format.read_array_header_2_0)
+    shape, _, _ = read_header(f)
+    return shape
+
+
+def checkpoint_geometry(path: str):
+    """The ``Geometry`` a checkpointed ``PartitionState`` was taken at:
+    read from the metadata when recorded (``save_pytree(geometry=...)``),
+    else inferred from the saved leaf *headers* (assignment → n, adj →
+    max_deg, edge_load → k_max; only the npy headers inside the npz are
+    read, never the payload) so pre-geometry checkpoints restore without
+    the caller re-declaring their shapes. ``None`` if the checkpoint is
+    missing or not a partition state."""
+    from repro.core.geometry import Geometry
+    try:
+        with open(path + ".meta", "rb") as f:
+            meta = msgpack.unpackb(f.read())
+    except FileNotFoundError:
+        return None
+    g = meta.get("geometry")
+    if g:
+        k = g.get("k_max")
+        return Geometry(int(g["n"]), int(g["max_deg"]),
+                        int(k) if k is not None else None)
+    # namedtuple key paths serialize as ".assignment" (GetAttrKey) —
+    # normalize to bare field names before member lookup
+    idx = {k.rsplit("/", 1)[-1].lstrip("."): i
+           for i, k in enumerate(meta.get("keys") or [])}
+    try:
+        with zipfile.ZipFile(path) as zf:
+            def shape(field: str) -> tuple:
+                with zf.open(f"a{idx[field]}.npy") as f:
+                    return _npy_header_shape(f)
+            return Geometry(int(shape("assignment")[0]),
+                            int(shape("adj")[1]),
+                            int(shape("edge_load")[0]))
+    except (KeyError, IndexError, FileNotFoundError, ValueError,
+            zipfile.BadZipFile):
         return None
 
 

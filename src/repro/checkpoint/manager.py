@@ -21,7 +21,9 @@ import threading
 import jax
 import numpy as np
 
-from repro.checkpoint.ckpt import checkpoint_keys, restore_pytree, save_pytree
+from repro.checkpoint.ckpt import (
+    checkpoint_geometry, checkpoint_keys, restore_pytree, save_pytree,
+)
 
 
 class CheckpointManager:
@@ -53,13 +55,15 @@ class CheckpointManager:
     def _path(self, step: int) -> str:
         return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
 
-    def maybe_save(self, step: int, tree, *, blocking: bool = False):
+    def maybe_save(self, step: int, tree, *, blocking: bool = False,
+                   geometry=None):
         if step % self.interval != 0:
             return False
         host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
 
         def work():
-            save_pytree(self._path(step), host_tree, step=step)
+            save_pytree(self._path(step), host_tree, step=step,
+                        geometry=geometry)
             self._gc()
 
         if self._thread is not None:
@@ -105,6 +109,16 @@ class CheckpointManager:
         if step is None:
             return None
         return checkpoint_keys(self._path(step))
+
+    def geometry(self, step: int | None = None):
+        """The ``Geometry`` recorded for (or inferred from) the
+        checkpoint at ``step`` (default: latest) — lets a restorer build
+        its target at the saved shape and grow from there
+        (repro.api.Partitioner.restore)."""
+        step = step if step is not None else self.latest()
+        if step is None:
+            return None
+        return checkpoint_geometry(self._path(step))
 
     def restore(self, like, *, step: int | None = None, shardings=None,
                 fill_missing=False):

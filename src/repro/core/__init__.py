@@ -1,7 +1,8 @@
 """SDP core: the paper's contribution as a composable JAX module."""
 from repro.core.config import EngineConfig, POLICIES
+from repro.core.geometry import Geometry, geometry_of, grow_tier, next_pow2
 from repro.core.state import (
-    PartitionState, init_state, recount_cut_matrix, state_metrics,
+    PartitionState, grow_state, init_state, recount_cut_matrix, state_metrics,
 )
 from repro.core.engine import run_events, run_stream, trace_at, EventTrace
 from repro.core.windowed import (
@@ -16,6 +17,7 @@ from repro.core.ref import run_reference
 
 __all__ = [
     "EngineConfig", "POLICIES", "PartitionState", "init_state",
+    "Geometry", "geometry_of", "grow_tier", "next_pow2", "grow_state",
     "recount_cut_matrix", "state_metrics",
     "run_events", "run_stream", "trace_at", "EventTrace",
     "run_stream_windowed", "run_window_adds", "run_window_mixed",

@@ -28,13 +28,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.config import EngineConfig
+from repro.core.geometry import Geometry, check_row_width, resolve_geometry
 from repro.core.state import PartitionState, init_state
 from repro.core.transition import (
     EventTrace, Knobs, make_knobs, knobs_arrays, neighbor_stats, nth_active,
     masked_argmin, load_stats, policy_fns, POLICY_INDEX, scale_out, scale_in,
     scale_in_trigger, make_transition, scan_events,
 )
-from repro.graph.stream import VertexStream
+from repro.graph.stream import VertexStream, normalize_rows
 
 __all__ = [
     "EventTrace", "Knobs", "make_knobs", "knobs_arrays", "neighbor_stats",
@@ -65,6 +66,7 @@ def _run_events(
     donated, so back-to-back ``feed()`` calls reuse the (n, max_deg)
     adjacency buffers instead of copying them per call.
     """
+    check_row_width(state, nbrs)
     n = state.assignment.shape[0]
     trn = make_transition(
         make_knobs(cfg, n), n,
@@ -85,13 +87,23 @@ def run_stream(
     cfg: EngineConfig | None = None,
     seed: int = 0,
     chunk: int | None = None,
+    geometry: Geometry | None = None,
 ) -> tuple[PartitionState, EventTrace]:
-    """Host entry: run a full stream through the faithful engine."""
+    """Host entry: run a full stream through the faithful engine.
+
+    ``geometry`` overrides the state allocation (default: the stream's
+    declared ``(n, max_deg)`` with the config's ``k_max``) — how an
+    elastic session's auto-grown run is replayed whole-stream at its
+    final geometry, and how heterogeneous sweep lanes are checked
+    against their padded shape. Must cover the stream's
+    ``required_geometry()``; growing is a semantics no-op for every
+    policy except LDG (see repro.core.geometry)."""
     cfg = cfg or EngineConfig()
-    state = init_state(stream.n, stream.max_deg, cfg.k_max, cfg.k_init, seed)
+    geom = resolve_geometry(stream, cfg, geometry)
+    state = init_state(geom.n, geom.max_deg, geom.k_max, cfg.k_init, seed)
     et = jnp.asarray(stream.etype)
     vx = jnp.asarray(stream.vertex)
-    nb = jnp.asarray(stream.nbrs)
+    nb = jnp.asarray(normalize_rows(stream.nbrs, geom.max_deg))
     if chunk is None:
         return run_events(state, et, vx, nb, jnp.int32(0), policy=policy, cfg=cfg)
     traces = []

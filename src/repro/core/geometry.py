@@ -1,0 +1,152 @@
+"""Elastic state geometry: the (n, max_deg, k_max) shape triple as a value.
+
+SDP's premise is partitioning a graph whose size is not known up front
+("streaming manner to overcome the memory bottleneck"), but XLA arrays
+are fixed-shape: every engine runs at SOME concrete ``(n, max_deg,
+k_max)``. This module makes that triple an explicit, comparable value —
+a :class:`Geometry` — so shapes can *flow* through the stack instead of
+being frozen at construction:
+
+* ``repro.core.state.grow_state(state, geom)`` pads a live state to a
+  larger geometry (new rows absent, wider rows -1-padded) — a semantics
+  no-op, see below;
+* ``repro.api.Partitioner`` auto-grows its session geometry in
+  ``feed()`` along power-of-two tiers (:func:`grow_tier`);
+* checkpoints record their geometry in metadata and ``restore()`` grows
+  or validates on mismatch;
+* the sweep runtime pads lanes of heterogeneous geometry to the union
+  geometry before stacking.
+
+Geometry-neutrality
+-------------------
+Growing ``n``/``max_deg`` never changes a single decision: every
+transition core scores absent-padded rows as empty (``present`` is False
+on new slots, ``-1`` neighbour entries are masked), the drop-mode
+scatter sentinel row ``n`` is semantics-free, and the RNG folds
+``(base_key, global_event_index)`` — none of it reads the array sizes.
+A state grown mid-stream is therefore **bit-identical** (original slots
+plus all counters, including ``cut_matrix``) to one that ran at the
+larger geometry from the start. The single exception is the LDG
+baseline: its capacity knob is derived from the live ``n``
+(``ldg_slack * n`` in ``transition.make_knobs``), so LDG runs are
+bit-comparable only at matching geometry — grow-vs-presized identity
+holds for every other policy and for LDG lanes compared at the same
+final geometry.
+
+Growing ``k_max`` adds *inactive* partition slots. Past decisions are
+unchanged (inactive slots are masked everywhere), but future scale-outs
+that would have been denied at the old ``k_max`` may now succeed — that
+is the point of growing it, and why auto-grow never touches ``k_max``
+(it is pinned by the session's ``EngineConfig``; only an explicit
+restore-into-larger-``cfg.k_max`` grows it).
+
+Tier policy
+-----------
+Auto-growth re-jits every kernel the state flows through (shapes are
+trace-time statics), so :func:`grow_tier` doubles at minimum: each grown
+dimension jumps to ``next_pow2(max(required, 2 * current))``. A session
+fed a stream of unknown size therefore re-jits O(log n) times total, and
+donation keeps reusing buffers within a tier. Explicit pre-sizing
+(``Partitioner.grow_to``) is exact — the caller knows the size.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= max(x, 1)."""
+    x = int(x)
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+class Geometry(NamedTuple):
+    """The shape triple every dense partition state is allocated at.
+
+    ``k_max=None`` means "no requirement" — streams know the vertex
+    universe and row width they need but have no opinion on the
+    partition-slot count (that is the config's job).
+    """
+    n: int
+    max_deg: int
+    k_max: int | None = None
+
+    def covers(self, other: "Geometry") -> bool:
+        """True iff a state at this geometry can ingest work requiring
+        ``other`` (componentwise >=; a ``None`` requirement is free)."""
+        return (self.n >= other.n and self.max_deg >= other.max_deg
+                and (other.k_max is None or (self.k_max or 0) >= other.k_max))
+
+    def union(self, other: "Geometry") -> "Geometry":
+        """Componentwise max — the smallest geometry covering both."""
+        ks = [k for k in (self.k_max, other.k_max) if k is not None]
+        return Geometry(max(self.n, other.n),
+                        max(self.max_deg, other.max_deg),
+                        max(ks) if ks else None)
+
+    def tiered(self) -> "Geometry":
+        """This geometry rounded up to its power-of-two tier (``k_max``
+        is never tiered — it is config-pinned, see module docstring)."""
+        return self._replace(n=next_pow2(self.n),
+                             max_deg=next_pow2(self.max_deg))
+
+
+def geometry_of(state) -> Geometry:
+    """The geometry a live ``PartitionState`` is allocated at."""
+    return Geometry(int(state.assignment.shape[0]),
+                    int(state.adj.shape[1]),
+                    int(state.edge_load.shape[0]))
+
+
+def grow_tier(current: Geometry, required: Geometry) -> Geometry:
+    """The tier-doubling growth policy (see module docstring): every
+    dimension that ``required`` exceeds jumps to
+    ``next_pow2(max(required, 2 * current))``; satisfied dimensions keep
+    their current size. ``k_max`` grows exactly (config-driven), never
+    tiered."""
+    def dim(cur: int, req: int) -> int:
+        return cur if req <= cur else next_pow2(max(req, 2 * cur))
+
+    k = current.k_max
+    if required.k_max is not None and (k or 0) < required.k_max:
+        k = required.k_max
+    return Geometry(dim(current.n, required.n),
+                    dim(current.max_deg, required.max_deg), k)
+
+
+def check_row_width(state, nbrs) -> None:
+    """Geometry guard at the engine boundaries (scan, window kernels,
+    sweep lanes): event rows must match the state's allocated row width
+    exactly — a mismatch would otherwise surface as an opaque XLA
+    scatter shape error deep inside the scan. Shape-only, so it runs at
+    trace time for free."""
+    if nbrs.shape[-1] != state.adj.shape[-1]:
+        raise ValueError(
+            f"event neighbour rows are {nbrs.shape[-1]} wide but the state "
+            f"geometry is max_deg={state.adj.shape[-1]} — normalize the rows "
+            "(repro.graph.stream.normalize_rows) or grow the state "
+            "(repro.core.state.grow_state)")
+
+
+def resolve_geometry(stream, cfg, geometry: Geometry | None) -> Geometry:
+    """Geometry an engine entry point should run ``stream`` at: the
+    stream's declared geometry by default, or the caller's ``geometry``
+    (validated to cover the stream's requirement; ``k_max`` defaults to
+    the config's). Shared by ``run_stream`` and ``run_stream_windowed``
+    so a grown session can be replayed against the batch engines at its
+    final geometry."""
+    if geometry is None:
+        return Geometry(int(stream.n), int(stream.max_deg), int(cfg.k_max))
+    geom = Geometry(int(geometry.n), int(geometry.max_deg),
+                    int(geometry.k_max) if geometry.k_max else int(cfg.k_max))
+    req = stream.required_geometry()
+    if not geom.covers(req):
+        raise ValueError(
+            f"geometry=(n={geom.n}, max_deg={geom.max_deg}) cannot ingest "
+            f"this stream: it requires at least (n={req.n}, "
+            f"max_deg={req.max_deg})")
+    if geom.k_max < cfg.k_init:
+        raise ValueError(
+            f"geometry k_max={geom.k_max} is smaller than cfg.k_init="
+            f"{cfg.k_init}: the initial partitions would not fit")
+    return geom

@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.geometry import Geometry
+
 
 class PartitionState(NamedTuple):
     assignment: jax.Array    # (n,) int32, -1 = absent
@@ -53,6 +55,42 @@ def init_state(n: int, max_deg: int, k_max: int, k_init: int, seed: int = 0) -> 
         scale_events=jnp.asarray(0, jnp.int32),
         key=jax.random.PRNGKey(seed),
         cut_matrix=jnp.zeros((k_max, k_max), jnp.int32),
+    )
+
+
+def grow_state(state: PartitionState, geom: Geometry) -> PartitionState:
+    """Host-side regeometry: pad ``state`` to the larger ``geom``.
+
+    New vertex rows are absent (``assignment=-1``, ``present=False``,
+    ``adj=-1``), wider neighbour rows are -1-padded, and new partition
+    slots are inactive with zero counters — all of which are inert in
+    every transition core, so growing ``n``/``max_deg`` is a semantics
+    no-op: the grown state is bit-identical (original slots plus all
+    counters, including ``cut_matrix``) to one allocated at ``geom``
+    from the start (see repro.core.geometry for the neutrality argument
+    and the one LDG-knob caveat). Growing ``k_max`` adds scale-out
+    headroom going forward. Never shrinks. ``geom.k_max=None`` keeps the
+    current partition-slot count."""
+    n0, d0 = state.adj.shape
+    k0 = state.edge_load.shape[0]
+    n1, d1 = int(geom.n), int(geom.max_deg)
+    k1 = int(geom.k_max) if geom.k_max else int(k0)
+    if n1 < n0 or d1 < d0 or k1 < k0:
+        raise ValueError(
+            f"grow_state cannot shrink: state is (n={n0}, max_deg={d0}, "
+            f"k_max={k0}), requested (n={n1}, max_deg={d1}, k_max={k1}) — "
+            "build a fresh session for a smaller universe")
+    if (n1, d1, k1) == (n0, d0, k0):
+        return state
+    dn, dd, dk = n1 - n0, d1 - d0, k1 - k0
+    return state._replace(
+        assignment=jnp.pad(state.assignment, (0, dn), constant_values=-1),
+        present=jnp.pad(state.present, (0, dn)),
+        adj=jnp.pad(state.adj, ((0, dn), (0, dd)), constant_values=-1),
+        edge_load=jnp.pad(state.edge_load, (0, dk)),
+        vertex_count=jnp.pad(state.vertex_count, (0, dk)),
+        active=jnp.pad(state.active, (0, dk)),
+        cut_matrix=jnp.pad(state.cut_matrix, ((0, dk), (0, dk))),
     )
 
 

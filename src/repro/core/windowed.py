@@ -46,9 +46,11 @@ import numpy as np
 
 from repro.core import transition as tx
 from repro.core.config import EngineConfig
+from repro.core.geometry import Geometry, check_row_width, resolve_geometry
 from repro.core.state import PartitionState, init_state
 from repro.graph.stream import (
     EVENT_ADD, EVENT_DEL_EDGE, EVENT_DEL_VERTEX, EVENT_PAD, VertexStream,
+    normalize_rows,
 )
 
 
@@ -108,6 +110,7 @@ def _run_window_adds(
     Unjitted body — ``run_window_adds`` is the plain jitted binding; the
     session facade (repro.api.partitioner) re-jits it with the carried
     state donated."""
+    check_row_width(state, rows)
     n = state.assignment.shape[0]
     w = vs.shape[0]
     k_max = state.edge_load.shape[0]
@@ -393,6 +396,7 @@ def _run_window_mixed(
     the journal decomposition). Unjitted body — ``run_window_mixed`` is
     the plain jitted binding; repro.api.partitioner re-jits it with the
     carried state donated."""
+    check_row_width(state, rows)
     n = state.assignment.shape[0]
     return _window_mixed_lane(
         state, ets, vs, rows, t0, tx.make_knobs(cfg, n),
@@ -434,6 +438,7 @@ def sweep_window_mixed(
     repro.runtime.sweep._scan_lanes for why the vertex index must be
     lane-batched). Not jitted here — the sweep runtime wraps it in jit
     or shard_map+jit (repro.runtime.sweep)."""
+    check_row_width(states, rows)
     dynamic = autoscale_mode == "dynamic"
     sdp_idx = tx.POLICY_INDEX["sdp"]
 
@@ -484,6 +489,7 @@ def run_stream_windowed(
     seed: int = 0,
     window: int = 256,
     use_kernel: bool = False,
+    geometry: Geometry | None = None,
 ) -> PartitionState:
     """Host driver: fixed windows of ``window`` events per device step.
 
@@ -493,10 +499,13 @@ def run_stream_windowed(
     which scores from its label journal instead. Both are bit-identical to
     ``run_stream``. (The pre-mixed legacy driver that split windows at
     deletion boundaries lives on only as the fig10 benchmark baseline,
-    benchmarks/fig10_time.py.)
+    benchmarks/fig10_time.py.) ``geometry`` overrides the state
+    allocation exactly as in ``run_stream`` — growth is a semantics
+    no-op (repro.core.geometry).
     """
     cfg = cfg or EngineConfig()
-    state = init_state(stream.n, stream.max_deg, cfg.k_max, cfg.k_init, seed)
+    geom = resolve_geometry(stream, cfg, geometry)
+    state = init_state(geom.n, geom.max_deg, geom.k_max, cfg.k_init, seed)
     if use_kernel:
         from repro.kernels.partition_affinity.ops import scores_for_state
         score_fn = scores_for_state
@@ -505,7 +514,7 @@ def run_stream_windowed(
 
     et = np.asarray(stream.etype)
     vx = jnp.asarray(stream.vertex)
-    nb = jnp.asarray(stream.nbrs)
+    nb = jnp.asarray(normalize_rows(stream.nbrs, geom.max_deg))
 
     T = stream.num_events
     for t in range(0, T, window):

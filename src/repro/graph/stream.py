@@ -59,6 +59,56 @@ class VertexStream:
     def max_deg(self) -> int:
         return int(self.nbrs.shape[1])
 
+    def required_geometry(self):
+        """Minimal :class:`repro.core.geometry.Geometry` able to ingest
+        this stream: ``n`` covers the declared universe AND every vertex
+        id the events actually reference, ``max_deg`` is the real
+        content width (all-pad trailing columns don't count, so padded
+        streams never force a wider state). The ONE definition shared by
+        ``Partitioner.from_stream`` sizing and the feed-time auto-grow
+        check."""
+        return required_geometry_of(self.vertex, self.nbrs, n=self.n)
+
+
+def required_geometry_of(vertex, nbrs, n: int = 0):
+    """``VertexStream.required_geometry`` over bare event arrays — the
+    session feed path calls this on ``(etype, vertex, nbrs)`` triples."""
+    from repro.core.geometry import Geometry  # deferred: core imports us
+    vertex = np.asarray(vertex)
+    nbrs = np.asarray(nbrs)
+    n_req = max(int(n), 1)
+    if vertex.size:
+        n_req = max(n_req, int(vertex.max()) + 1)
+    real = nbrs >= 0
+    width = 1
+    if real.any():
+        n_req = max(n_req, int(nbrs[real].max()) + 1)
+        width = int(np.flatnonzero(real.any(axis=0)).max()) + 1
+    return Geometry(n_req, width)
+
+
+def normalize_rows(nbrs: np.ndarray, width: int) -> np.ndarray:
+    """Pad (with -1) or losslessly trim neighbour rows to ``width``
+    columns — the ONE definition of neighbour-row re-widthing, shared by
+    the session feed path (repro.api.partitioner), stream concatenation,
+    and the sweep runtime's lane stacking. Raises if trimming would drop
+    a real neighbour id; callers grow the target geometry first (see
+    repro.core.geometry) rather than widening here."""
+    nbrs = np.asarray(nbrs, np.int32)
+    d = nbrs.shape[1]
+    if d == width:
+        return nbrs
+    if d < width:
+        return np.concatenate(
+            [nbrs, np.full((nbrs.shape[0], width - d), -1, np.int32)],
+            axis=1)
+    if np.any(nbrs[:, width:] >= 0):
+        raise ValueError(
+            f"neighbour rows carry real ids beyond column {width} (rows are "
+            f"{d} wide) — grow the target geometry's max_deg instead of "
+            "trimming (repro.core.state.grow_state)")
+    return nbrs[:, :width]
+
 
 def _neighbor_rows(
     g: Graph, order: np.ndarray, max_deg: int, rng: np.random.Generator
@@ -314,12 +364,7 @@ def pad_stream(s: VertexStream, multiple: int) -> VertexStream:
 def concat_streams(streams: Sequence[VertexStream]) -> VertexStream:
     """Concatenate streams over the same vertex universe."""
     max_deg = max(s.max_deg for s in streams)
-    nbrs = []
-    for s in streams:
-        pad = max_deg - s.max_deg
-        nbrs.append(
-            np.pad(s.nbrs, ((0, 0), (0, pad)), constant_values=-1) if pad else s.nbrs
-        )
+    nbrs = [normalize_rows(s.nbrs, max_deg) for s in streams]
     offs, acc = [], 0
     for s in streams:
         offs.extend(i + acc for i in s.intervals)

@@ -32,10 +32,16 @@ lane's stream with that lane's (policy, cfg, seed). Enforced by
 tests/test_sweep.py and tests/test_sweep_sharded.py (the latter also
 under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` in CI).
 
-Static requirements across lanes: identical ``k_max`` (array shapes),
-``balance_guard`` (trace-time branch), and vertex-universe size ``n``.
-``k_init``, ``seed``, ``autoscale``, the stream, and all numeric knobs
-vary freely per lane.
+Static requirements across lanes: identical ``k_max`` (array shapes)
+and ``balance_guard`` (trace-time branch). ``k_init``, ``seed``,
+``autoscale``, the stream, and all numeric knobs vary freely per lane —
+including the stream *geometry*: per-lane streams of unequal ``n`` /
+``max_deg`` are padded to the union geometry (componentwise max) before
+stacking, and since absent-padded rows are inert in every transition
+core (repro.core.geometry), each lane stays bit-identical to
+``run_stream(stream, geometry=union)`` — which equals the lane's
+own-geometry ``run_stream`` for every policy except LDG (whose capacity
+knob reads the live ``n``).
 """
 from __future__ import annotations
 
@@ -50,9 +56,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import transition as tx
 from repro.core.config import EngineConfig
+from repro.core.geometry import Geometry, check_row_width
 from repro.core.state import PartitionState, init_state
 from repro.core.windowed import sweep_window_mixed
-from repro.graph.stream import EVENT_PAD, VertexStream
+from repro.graph.stream import EVENT_PAD, VertexStream, normalize_rows
 from repro.launch.mesh import make_lane_mesh, shard_map_compat
 
 
@@ -97,6 +104,7 @@ def _scan_lanes(
     *vertex* index against lane-batched state lowers to a pathologically
     slow batched gather/scatter on CPU; unbatched neighbour *rows* are
     fine and they are where the memory is)."""
+    check_row_width(states, nbrs)
     n = states.assignment.shape[1]
     sdp_idx = tx.POLICY_INDEX["sdp"]
     dynamic = autoscale_mode == "dynamic"
@@ -180,22 +188,25 @@ def _pad_lanes(tree, pad: int):
 
 def _stack_streams(streams: Sequence[VertexStream], length: int):
     """Per-lane streams → dense (L, T[, D]) event tensors, EVENT_PAD-padded
-    on the right so shorter lanes no-op through the shared scan."""
-    n = streams[0].n
-    max_deg = max(s.max_deg for s in streams)
+    on the right so shorter lanes no-op through the shared scan. Lanes of
+    heterogeneous geometry (unequal ``n`` / ``max_deg``) are padded to
+    the union geometry before stacking — absent-padded rows are inert,
+    so each lane stays bit-identical to ``run_stream`` at the union
+    geometry (see repro.core.geometry; the per-lane union is returned as
+    the (n, max_deg) the caller sizes the stacked states at)."""
+    geom = functools.reduce(
+        Geometry.union, (Geometry(s.n, s.max_deg) for s in streams))
     L = len(streams)
     et = np.full((L, length), EVENT_PAD, np.int32)
     vx = np.full((L, length), -1, np.int32)
-    nb = np.full((L, length, max_deg), -1, np.int32)
+    nb = np.full((L, length, geom.max_deg), -1, np.int32)
     for i, s in enumerate(streams):
-        if s.n != n:
-            raise ValueError("all sweep lanes must share the vertex universe"
-                             f" size n (got {s.n} vs {n})")
         t = s.num_events
         et[i, :t] = s.etype
         vx[i, :t] = s.vertex
-        nb[i, :t, :s.max_deg] = s.nbrs
-    return jnp.asarray(et), jnp.asarray(vx), jnp.asarray(nb), n, max_deg
+        nb[i, :t] = normalize_rows(s.nbrs, geom.max_deg)
+    return jnp.asarray(et), jnp.asarray(vx), jnp.asarray(nb), geom.n, \
+        geom.max_deg
 
 
 def _shared_stream_arrays(s: VertexStream, length: int):
@@ -229,8 +240,10 @@ def _execute_sweep(
 
     stream: one shared ``VertexStream`` (broadcast to every lane at trace
       time — never materialized L-fold), or a sequence of per-lane
-      streams (one per run; may differ in length, order, and churn mix —
-      they are right-padded with no-op events to a common T).
+      streams (one per run; may differ in length, order, churn mix, and
+      geometry — they are right-padded with no-op events to a common T
+      and padded to the union (n, max_deg) geometry, see
+      ``_stack_streams``).
     chunk: re-dispatch the scan engine every ``chunk`` events (resumable,
       bounds step count per program); traces are concatenated along the
       event axis.

@@ -152,14 +152,28 @@ def test_restore_pre_cut_matrix_checkpoint(tmp_path):
     _identical(ref, sess.state)
 
 
-def test_restore_rejects_mismatched_shapes(tmp_path):
+def test_restore_grows_larger_rejects_smaller(tmp_path):
+    """Restore takes its shapes from the checkpoint's recorded geometry:
+    a larger requested geometry grows the restored state (semantics
+    no-op), a smaller one raises — sessions never shrink."""
     s, cfg = _churn_fixture()
     part = Partitioner.from_stream(s, cfg, seed=0)
     part.feed(s)
     part.snapshot(str(tmp_path))
-    with pytest.raises(ValueError, match="shapes"):
-        Partitioner.restore(str(tmp_path), cfg, n=s.n + 5,
+    big = Partitioner.restore(str(tmp_path), cfg, n=s.n + 5,
+                              max_deg=s.max_deg + 2)
+    assert (big.n, big.max_deg) == (s.n + 5, s.max_deg + 2)
+    assert big.cursor == s.num_events
+    np.testing.assert_array_equal(np.asarray(part.state.assignment),
+                                  np.asarray(big.state.assignment)[:s.n])
+    assert not np.asarray(big.state.present)[s.n:].any()
+    with pytest.raises(ValueError, match="shrink"):
+        Partitioner.restore(str(tmp_path), cfg, n=s.n - 5,
                             max_deg=s.max_deg)
+    with pytest.raises(ValueError, match="k_max"):
+        Partitioner.restore(
+            str(tmp_path),
+            EngineConfig(k_max=cfg.k_max - 2, k_init=1, max_cap=100))
     with pytest.raises(FileNotFoundError):
         Partitioner.restore(os.path.join(str(tmp_path), "empty"), cfg,
                             n=s.n, max_deg=s.max_deg)
@@ -176,22 +190,32 @@ def test_constructor_and_feed_validation():
     with pytest.raises(ValueError, match="collect_trace"):
         Partitioner.from_stream(s, cfg, engine="windowed",
                                 collect_trace=True)
+    with pytest.raises(ValueError, match="> 0"):
+        Partitioner(cfg, n=0, max_deg=3)
     part = Partitioner(cfg, n=s.n, max_deg=s.max_deg)
     with pytest.raises(RuntimeError, match="collect_trace"):
         part.trace()
     with pytest.raises(TypeError, match="VertexStream"):
         part.feed(42)
-    with pytest.raises(ValueError, match="universe"):
-        part.feed((s.etype, np.full_like(s.vertex, s.n + 3), s.nbrs))
     with pytest.raises(ValueError, match="shapes disagree"):
         part.feed((s.etype[:4], s.vertex[:3], s.nbrs[:4]))
-    small = Partitioner(cfg, n=s.n, max_deg=4)
-    with pytest.raises(ValueError, match="max_deg"):
-        small.feed(s)  # stream rows are wider with real neighbour ids
-    other = gstream.VertexStream(etype=s.etype, vertex=s.vertex,
-                                 nbrs=s.nbrs, n=s.n + 1)
-    with pytest.raises(ValueError, match="universe"):
-        part.feed(other)
+
+
+def test_feed_grows_instead_of_raising():
+    """The old fixed-shape feed errors (vertex id beyond the universe,
+    wider neighbour rows, mismatched stream n) are gone: feed auto-grows
+    the session geometry and keeps going (tests/test_geometry.py holds
+    the bit-identity coverage)."""
+    s, cfg = _churn_fixture()
+    part = Partitioner(cfg, n=10, max_deg=2, seed=0)
+    part.feed(s)                      # ids up to s.n-1, rows s.max_deg wide
+    assert part.n >= s.n and part.max_deg >= s.max_deg
+    assert part.regeometries >= 1
+    assert part.metrics()["regeometries"] == part.regeometries
+    other = gstream.VertexStream(etype=s.etype[:1], vertex=s.vertex[:1],
+                                 nbrs=s.nbrs[:1], n=4 * part.n)
+    part.feed(other)                  # larger declared universe grows too
+    assert part.n >= 4 * s.n
 
 
 def test_feed_narrow_and_padded_wide_rows():

@@ -61,6 +61,27 @@ def test_run_sweep_shim_warns_and_matches_builder(fixture):
                                       np.asarray(b.state.assignment))
 
 
+def test_run_sweep_shim_heterogeneous_geometry_lanes():
+    """After the sweep-runtime geometry changes the deprecated shim must
+    still warn-and-work — including on per-lane streams of unequal
+    (n, max_deg), which the runtime now pads to the union geometry."""
+    streams = [gstream.build_stream(make_graph("mesh", 40, 100, seed=1),
+                                    seed=1),
+               gstream.build_stream(make_graph("mesh", 70, 180, seed=2),
+                                    seed=2)]
+    assert streams[0].n != streams[1].n
+    runs = [SweepRun("sdp", EngineConfig(k_max=4, k_init=1, max_cap=60), 0),
+            SweepRun("greedy", EngineConfig(k_max=4, k_init=2,
+                                            autoscale=False), 1)]
+    want = Sweep(streams).lanes(runs).run()
+    with pytest.warns(DeprecationWarning, match="Sweep"):
+        got = run_sweep(streams, runs)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(a.state.assignment),
+                                      np.asarray(b.state.assignment))
+        assert int(a.state.cut_edges) == int(b.state.cut_edges)
+
+
 def test_run_sweep_shim_rejects_unknown_engine(fixture):
     s, runs = fixture
     with pytest.raises(ValueError, match="engine"):

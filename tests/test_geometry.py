@@ -1,0 +1,362 @@
+"""Elastic state geometry (repro.core.geometry): tier math, grow_state
+semantics-neutrality, the session auto-grow bit-identity contract (a
+session started at tier-minimal geometry and grown >=2 times must end
+bit-identical to one whole-stream run at the final geometry, for the
+scan and windowed backends), heterogeneous-geometry sweep lanes, and
+geometry-aware checkpoints (record / restore-grow / pre-geometry
+inference + heal)."""
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Partitioner, Sweep, SweepRun
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import (
+    EngineConfig, Geometry, geometry_of, grow_state, grow_tier, next_pow2,
+    run_stream,
+)
+from repro.core.engine import run_events
+from repro.core.state import PartitionState, init_state
+from repro.graph.generators import make_graph
+from repro.graph import stream as gstream
+from repro.graph.stream import normalize_rows
+
+
+def _identical(ref: PartitionState, got: PartitionState):
+    for f in ("assignment", "present", "adj", "edge_load", "vertex_count",
+              "active", "cut_matrix"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(got, f)), f)
+    for f in ("num_partitions", "total_edges", "cut_edges",
+              "denied_scaleout", "scale_events"):
+        assert int(getattr(ref, f)) == int(getattr(got, f)), f
+
+
+def _feed_chunked(part: Partitioner, s, chunk: int):
+    t = 0
+    while t < s.num_events:
+        e = min(t + chunk, s.num_events)
+        part.feed((s.etype[t:e], s.vertex[t:e], s.nbrs[t:e]))
+        t = e
+    return part
+
+
+def _relabel_by_first_sight(s: gstream.VertexStream) -> gstream.VertexStream:
+    """Isomorphic stream whose vertex ids are assigned in order of first
+    appearance — the id universe then GROWS with the cursor (a serving
+    stream whose size nobody knows), driving repeated tier growth when
+    fed chunked into a tier-minimal session."""
+    ids: dict[int, int] = {}
+
+    def m(x: int) -> int:
+        return ids.setdefault(int(x), len(ids))
+
+    vx = np.empty_like(s.vertex)
+    nb = np.empty_like(s.nbrs)
+    for i in range(s.num_events):
+        vx[i] = m(s.vertex[i]) if s.vertex[i] >= 0 else -1
+        for j in range(s.nbrs.shape[1]):
+            u = s.nbrs[i, j]
+            nb[i, j] = m(u) if u >= 0 else -1
+    return gstream.VertexStream(etype=s.etype.copy(), vertex=vx, nbrs=nb,
+                                n=max(len(ids), 1), intervals=s.intervals)
+
+
+def _growing_churn_fixture():
+    """Delete-heavy interleaved churn (every transition type + autoscale)
+    relabelled so the id universe grows with the cursor."""
+    g = make_graph("social", 300, 900, seed=7)
+    s = _relabel_by_first_sight(
+        gstream.interleaved_churn(g, warmup_frac=0.2, del_every=3,
+                                  edge_del_every=5, seed=4))
+    cfg = EngineConfig(k_max=8, k_init=1, max_cap=300)
+    return s, cfg
+
+
+# -- tier math ---------------------------------------------------------------
+
+def test_tier_math():
+    assert next_pow2(0) == 1 and next_pow2(1) == 1
+    assert next_pow2(2) == 2 and next_pow2(3) == 4
+    assert next_pow2(1024) == 1024 and next_pow2(1025) == 2048
+    cur = Geometry(90, 7, 8)
+    # exceeded dims double at minimum: next_pow2(max(91, 2*90)) = 256
+    assert grow_tier(cur, Geometry(91, 7)) == Geometry(256, 7, 8)
+    assert grow_tier(cur, Geometry(64, 3)) == cur          # covered: no-op
+    assert grow_tier(cur, Geometry(1000, 20)) == Geometry(1024, 32, 8)
+    assert grow_tier(cur, Geometry(90, 7, 12)).k_max == 12  # k grows exactly
+    assert Geometry(8, 4, 2).union(Geometry(6, 9)) == Geometry(8, 9, 2)
+    assert Geometry(8, 4, 2).covers(Geometry(8, 4))
+    assert not Geometry(8, 4, 2).covers(Geometry(9, 4))
+    assert not Geometry(8, 4, 2).covers(Geometry(8, 4, 3))
+    assert Geometry(90, 7).tiered() == Geometry(128, 8)
+
+
+def test_normalize_rows_and_required_geometry():
+    nb = np.array([[3, -1, -1], [5, 7, -1]], np.int32)
+    widened = normalize_rows(nb, 4)
+    assert widened.shape == (2, 4) and np.all(widened[:, 3] == -1)
+    np.testing.assert_array_equal(normalize_rows(nb, 2), nb[:, :2])
+    with pytest.raises(ValueError, match="max_deg"):
+        normalize_rows(nb, 1)   # column 1 holds a real id
+    s = gstream.VertexStream(
+        etype=np.zeros(2, np.int32), vertex=np.array([0, 9], np.int32),
+        nbrs=np.pad(nb, ((0, 0), (0, 2)), constant_values=-1), n=4)
+    # n covers declared universe AND referenced ids; width is the real
+    # content width (all-pad trailing columns don't count)
+    assert s.required_geometry() == Geometry(10, 2)
+
+
+# -- grow_state --------------------------------------------------------------
+
+def test_grow_state_pads_inert_and_never_shrinks():
+    g = make_graph("mesh", 60, 150, seed=1)
+    s = gstream.build_stream(g, seed=1)
+    cfg = EngineConfig(k_max=4, k_init=1, max_cap=60)
+    state, _ = run_stream(s, cfg=cfg, seed=0)
+    geom = Geometry(s.n + 40, s.max_deg + 3, cfg.k_max + 4)
+    big = grow_state(state, geom)
+    assert geometry_of(big) == geom
+    np.testing.assert_array_equal(np.asarray(big.assignment)[:s.n],
+                                  np.asarray(state.assignment))
+    np.testing.assert_array_equal(np.asarray(big.adj)[:s.n, :s.max_deg],
+                                  np.asarray(state.adj))
+    np.testing.assert_array_equal(
+        np.asarray(big.cut_matrix)[:cfg.k_max, :cfg.k_max],
+        np.asarray(state.cut_matrix))
+    assert np.all(np.asarray(big.assignment)[s.n:] == -1)
+    assert not np.asarray(big.present)[s.n:].any()
+    assert np.all(np.asarray(big.adj)[:, s.max_deg:] == -1)
+    assert np.asarray(big.edge_load)[cfg.k_max:].sum() == 0
+    assert not np.asarray(big.active)[cfg.k_max:].any()
+    assert int(big.cut_edges) == int(state.cut_edges)
+    assert int(big.num_partitions) == int(state.num_partitions)
+    # covered geometry is the identity, shrinking is refused
+    assert grow_state(state, geometry_of(state)) is state
+    assert grow_state(state, Geometry(s.n, s.max_deg)) is state  # k None
+    with pytest.raises(ValueError, match="shrink"):
+        grow_state(state, Geometry(s.n - 1, s.max_deg, cfg.k_max))
+
+
+def test_grow_then_events_commutes_with_events_then_grow():
+    """grow_state -> events == events -> grow_state, bit-for-bit on every
+    leaf (the deterministic twin of the hypothesis property in
+    tests/test_property.py)."""
+    g = make_graph("social", 90, 260, seed=2)
+    s = gstream.interleaved_churn(g, warmup_frac=0.2, del_every=3,
+                                  edge_del_every=5, seed=4)
+    cfg = EngineConfig(k_max=8, k_init=1, max_cap=100)
+    small = init_state(s.n, s.max_deg, cfg.k_max, cfg.k_init, 0)
+    geom = Geometry(s.n + 37, s.max_deg + 2, cfg.k_max)
+    et, vx = jnp.asarray(s.etype), jnp.asarray(s.vertex)
+    a, _ = run_events(
+        grow_state(small, geom), et, vx,
+        jnp.asarray(normalize_rows(s.nbrs, geom.max_deg)), jnp.int32(0),
+        policy="sdp", cfg=cfg)
+    b, _ = run_events(small, et, vx, jnp.asarray(s.nbrs), jnp.int32(0),
+                      policy="sdp", cfg=cfg)
+    b = grow_state(b, geom)
+    for fa, fb, name in zip(a, b, PartitionState._fields):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb), name)
+
+
+# -- session auto-grow (the acceptance contract) -----------------------------
+
+@pytest.mark.parametrize("engine", ["scan", "windowed", "auto"])
+def test_autogrow_bit_identical_to_presized(engine):
+    """A session started at tier-minimal (1, 1) geometry and fed a churn
+    stream forcing >=2 auto-grows ends bit-identical — assignment,
+    every counter, cut_matrix — to one whole-stream run_stream at the
+    final geometry, on every backend."""
+    s, cfg = _growing_churn_fixture()
+    part = Partitioner(cfg, seed=0, engine=engine, window=32)
+    _feed_chunked(part, s, 41)
+    assert part.cursor == s.num_events
+    assert part.regeometries >= 2, "fixture must force repeated tier growth"
+    assert part.geometry.covers(s.required_geometry())
+    ref, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0,
+                        geometry=part.geometry)
+    _identical(ref, part.state)
+
+
+def test_unsized_session_grows_from_nothing():
+    """Partitioner() with no n/max_deg at all — the serving shape for a
+    stream whose size nobody knows in advance."""
+    s, cfg = _growing_churn_fixture()
+    part = Partitioner(cfg, seed=0, window=64).feed(s)
+    ref, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0,
+                        geometry=part.geometry)
+    _identical(ref, part.state)
+
+
+def test_grow_to_presizes_exactly():
+    cfg = EngineConfig(k_max=4, k_init=1)
+    part = Partitioner(cfg, n=16, max_deg=2)
+    part.grow_to(n=500, max_deg=11)
+    assert (part.n, part.max_deg) == (500, 11)    # exact, no tier rounding
+    assert part.regeometries == 1
+    part.grow_to(n=100)                           # never shrinks; no-op
+    assert (part.n, part.max_deg) == (500, 11)
+    assert part.regeometries == 1
+
+
+def test_engine_guards_row_width():
+    """The engine boundary rejects rows that disagree with the state's
+    allocated width, with an actionable message (instead of an opaque
+    XLA scatter error deep inside the scan)."""
+    cfg = EngineConfig(k_max=4, k_init=1)
+    state = init_state(8, 3, cfg.k_max, cfg.k_init, 0)
+    with pytest.raises(ValueError, match="max_deg"):
+        run_events(state, jnp.zeros(2, jnp.int32), jnp.zeros(2, jnp.int32),
+                   jnp.full((2, 5), -1, jnp.int32), jnp.int32(0),
+                   policy="sdp", cfg=cfg)
+    g = make_graph("mesh", 40, 100, seed=8)
+    s = gstream.build_stream(g, seed=9)
+    with pytest.raises(ValueError, match="requires at least"):
+        run_stream(s, cfg=cfg, geometry=Geometry(10, 1))
+
+
+# -- heterogeneous-geometry sweep lanes --------------------------------------
+
+def _heterogeneous_fixture():
+    gs = [make_graph("mesh", 60, 150, seed=1),
+          make_graph("social", 90, 260, seed=2),
+          make_graph("mesh", 140, 380, seed=3)]
+    streams = [
+        gstream.build_stream(gs[0], seed=1),
+        gstream.dynamic_schedule(gs[1], n_intervals=3, seed=3,
+                                 del_edges_per_interval=5),
+        gstream.interleaved_churn(gs[2], warmup_frac=0.3, del_every=4,
+                                  seed=5),
+    ]
+    assert len({s.n for s in streams}) == 3, "want three distinct universes"
+    assert len({s.max_deg for s in streams}) > 1, "want unequal row widths"
+    runs = [
+        SweepRun("sdp", EngineConfig(k_max=8, k_init=1, max_cap=100), 0),
+        SweepRun("greedy", EngineConfig(k_max=8, k_init=3,
+                                        autoscale=False), 1),
+        SweepRun("sdp", EngineConfig(k_max=8, k_init=2, max_cap=140), 2),
+    ]
+    union = Geometry(max(s.n for s in streams),
+                     max(s.max_deg for s in streams))
+    return streams, runs, union
+
+
+def test_heterogeneous_sweep_lanes_scan():
+    """ACCEPTANCE: three lanes of pairwise-different (n, max_deg) stack
+    into ONE program; each lane — state AND trace — bit-matches
+    run_stream on its own stream at the union geometry (which equals its
+    own-geometry run for these policies, repro.core.geometry)."""
+    streams, runs, union = _heterogeneous_fixture()
+    for r, s in zip(Sweep(streams).lanes(runs).run(), streams):
+        ref, trace = run_stream(s, policy=r.policy, cfg=r.cfg, seed=r.seed,
+                                geometry=union)
+        _identical(ref, r.state)
+        assert r.trace.cut_edges.shape[0] == s.num_events
+        for f in trace._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(trace, f)),
+                                          np.asarray(getattr(r.trace, f)), f)
+
+
+def test_heterogeneous_sweep_lanes_windowed():
+    streams, runs, union = _heterogeneous_fixture()
+    for r, s in zip(Sweep(streams).lanes(runs).windowed(64).run(), streams):
+        assert r.trace is None
+        ref, _ = run_stream(s, policy=r.policy, cfg=r.cfg, seed=r.seed,
+                            geometry=union)
+        _identical(ref, r.state)
+
+
+def test_heterogeneous_sweep_lanes_sharded_forced():
+    """Heterogeneous lanes THROUGH the shard_map path: .sharded(True)
+    forces it even on one device, and under CI's forced-4-device matrix
+    job this also exercises lane padding with unequal-geometry lanes."""
+    streams, runs, union = _heterogeneous_fixture()
+    for r, s in zip(Sweep(streams).lanes(runs).sharded().run(), streams):
+        ref, _ = run_stream(s, policy=r.policy, cfg=r.cfg, seed=r.seed,
+                            geometry=union)
+        _identical(ref, r.state)
+
+
+# -- geometry-aware checkpoints ----------------------------------------------
+
+def test_snapshot_records_geometry_restore_needs_no_shapes(tmp_path):
+    s, cfg = _growing_churn_fixture()
+    ref, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    mid = s.num_events // 2
+    part = Partitioner.from_stream(s, cfg, seed=0, window=32)
+    part.feed((s.etype[:mid], s.vertex[:mid], s.nbrs[:mid]))
+    part.snapshot(str(tmp_path))
+    assert CheckpointManager(str(tmp_path), interval=1).geometry() \
+        == Geometry(s.n, s.max_deg, cfg.k_max)
+    sess = Partitioner.restore(str(tmp_path), cfg, window=32)  # no shapes
+    assert (sess.n, sess.max_deg) == (s.n, s.max_deg)
+    assert sess.cursor == mid
+    sess.feed((s.etype[mid:], s.vertex[mid:], s.nbrs[mid:]))
+    _identical(ref, sess.state)
+
+
+def test_restore_into_larger_session_continues_bit_identically(tmp_path):
+    """Snapshot at the stream geometry, restore pre-grown, finish the
+    stream: identical to run_stream at the large geometry from t=0."""
+    s, cfg = _growing_churn_fixture()
+    big = Geometry(s.n + 64, s.max_deg + 4, cfg.k_max)
+    ref, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0, geometry=big)
+    mid = s.num_events // 2
+    part = Partitioner.from_stream(s, cfg, seed=0, window=32)
+    part.feed((s.etype[:mid], s.vertex[:mid], s.nbrs[:mid]))
+    part.snapshot(str(tmp_path))
+    sess = Partitioner.restore(str(tmp_path), cfg, n=big.n,
+                               max_deg=big.max_deg, window=32)
+    assert (sess.n, sess.max_deg) == (big.n, big.max_deg)
+    sess.feed((s.etype[mid:], s.vertex[mid:], s.nbrs[mid:]))
+    _identical(ref, sess.state)
+
+
+def test_checkpoint_geometry_without_k_max_roundtrips(tmp_path):
+    """A save recording a k_max-less Geometry (k_max is Optional by
+    design) must not make the checkpoint unrestorable through the
+    geometry path, and shape inference must survive junk payloads."""
+    from repro.checkpoint.ckpt import checkpoint_geometry, save_pytree
+    state = init_state(12, 3, 4, 1, 0)
+    p = str(tmp_path / "ckpt_00000000.npz")
+    save_pytree(p, state, step=0, geometry=Geometry(12, 3))
+    assert checkpoint_geometry(p) == Geometry(12, 3, None)
+    # ... and the k_max-less metadata cannot dodge the restore-time
+    # shrink guard: the payload's real k is validated after restore
+    with pytest.raises(ValueError, match="cfg.k_max"):
+        Partitioner.restore(str(tmp_path), EngineConfig(k_max=2, k_init=1))
+    # no geometry recorded: inferred from the saved npy headers
+    save_pytree(p, state, step=0)
+    assert checkpoint_geometry(p) == Geometry(12, 3, 4)
+    # not a partition state at all -> None, not an exception
+    save_pytree(p, {"weights": np.zeros(3)}, step=0)
+    assert checkpoint_geometry(p) is None
+
+
+def test_pre_geometry_checkpoint_restores_into_larger_session(tmp_path):
+    """SATELLITE: a checkpoint with NO geometry metadata — and no
+    cut_matrix leaf either (the oldest layout) — restores via leaf-shape
+    inference, heals through the fill_missing + recount path, and grows
+    into a larger session that finishes the stream bit-identically."""
+    s, cfg = _growing_churn_fixture()
+    big = Geometry(s.n + 32, s.max_deg + 3, cfg.k_max)
+    ref, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0, geometry=big)
+    mid = s.num_events // 2
+    part = Partitioner.from_stream(s, cfg, seed=0, window=32)
+    part.feed((s.etype[:mid], s.vertex[:mid], s.nbrs[:mid]))
+    # same field names so key paths align by attribute; no cut_matrix
+    # leaf, no geometry= passed to the manager
+    Legacy = collections.namedtuple("Legacy", PartitionState._fields[:-1])
+    legacy = Legacy(*tuple(part.state)[:-1])
+    CheckpointManager(str(tmp_path), interval=1).maybe_save(
+        mid, legacy, blocking=True)
+
+    sess = Partitioner.restore(str(tmp_path), cfg, n=big.n,
+                               max_deg=big.max_deg, window=32)
+    assert sess.cursor == mid
+    assert (sess.n, sess.max_deg) == (big.n, big.max_deg)
+    sess.feed((s.etype[mid:], s.vertex[mid:], s.nbrs[mid:]))
+    _identical(ref, sess.state)

@@ -1,4 +1,5 @@
 """Hypothesis property tests on the partitioner's invariants."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -6,12 +7,15 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="optional dep: pip install -e .[test] (CI runs it)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (EngineConfig, recompute_counters, run_stream,
+from repro.core import (EngineConfig, Geometry, PartitionState, grow_state,
+                        init_state, recompute_counters, run_stream,
                         state_metrics)
+from repro.core.engine import run_events
 from repro.core.offline import cut_of, offline_partition
 from repro.graph.csr import from_edge_list
 from repro.graph.generators import make_graph
 from repro.graph import stream as gstream
+from repro.graph.stream import normalize_rows
 
 
 @st.composite
@@ -117,6 +121,38 @@ def test_cut_matrix_matches_recount_after_churn(case):
     np.testing.assert_array_equal(cm, rec["cut_matrix"])
     assert int(state.cut_edges) == rec["cut_edges"]
     assert int(state.total_edges) == rec["total_edges"]
+
+
+@given(churn_case(),
+       st.sampled_from([(8, 1), (32, 2), (64, 5)]),
+       st.sampled_from(["sdp", "greedy", "hash"]))
+@settings(max_examples=8, deadline=None)
+def test_grow_state_commutes_with_events(case, extra, policy):
+    """grow_state -> k events == k events -> grow_state, bit-for-bit on
+    every leaf: growth is a semantics no-op, so it can land anywhere in
+    the stream (which is what lets the elastic session auto-grow
+    mid-feed). LDG is excluded — its capacity knob reads the live ``n``
+    (repro.core.geometry documents the caveat)."""
+    g, kwargs, cfg, seed = case
+    s = gstream.interleaved_churn(g, **kwargs)
+    if s.num_events == 0:
+        return
+    if policy != "sdp":
+        cfg = EngineConfig(k_max=cfg.k_max, k_init=cfg.k_max,
+                           max_cap=cfg.max_cap, autoscale=False)
+    extra_n, extra_d = extra
+    geom = Geometry(s.n + extra_n, s.max_deg + extra_d, cfg.k_max)
+    small = init_state(s.n, s.max_deg, cfg.k_max, cfg.k_init, seed)
+    et, vx = jnp.asarray(s.etype), jnp.asarray(s.vertex)
+    a, _ = run_events(
+        grow_state(small, geom), et, vx,
+        jnp.asarray(normalize_rows(s.nbrs, geom.max_deg)), jnp.int32(0),
+        policy=policy, cfg=cfg)
+    b, _ = run_events(small, et, vx, jnp.asarray(s.nbrs), jnp.int32(0),
+                      policy=policy, cfg=cfg)
+    b = grow_state(b, geom)
+    for fa, fb, name in zip(a, b, PartitionState._fields):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb), name)
 
 
 @given(random_graph(max_n=30), st.integers(2, 4), st.integers(0, 3))
