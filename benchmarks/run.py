@@ -15,7 +15,11 @@ on an interleaved churn stream (BENCH_mixed_window.json); fig11 times
 host-loop vs vmapped vs sharded vs windowed-lane sweeps
 (BENCH_sweep_scaling.json); fig12 times incremental vs recompute
 autoscale lanes (BENCH_autoscale_churn.json); fig13 times elastic
-geometry growth against a presized session (BENCH_growth.json).
+geometry growth against a presized session (BENCH_growth.json); fig14
+times the double-buffered PartitionService against a synchronous
+per-arrival feed loop under Poisson arrivals (BENCH_serving.json).
+See docs/BENCHMARKS.md for every artifact's provenance and how to
+regenerate it.
 """
 from __future__ import annotations
 
@@ -34,14 +38,15 @@ def main() -> int:
     from benchmarks import (fig4_edgecut, fig5_vs_offline, fig6_dynamics,
                             fig7_imbalance, fig8_npartitions, fig9_scaling,
                             fig10_time, fig11_sweep_scaling,
-                            fig12_autoscale_churn, fig13_growth, roofline)
+                            fig12_autoscale_churn, fig13_growth,
+                            fig14_serving, roofline)
     mods = {
         "fig4": fig4_edgecut, "fig5": fig5_vs_offline,
         "fig6": fig6_dynamics, "fig7": fig7_imbalance,
         "fig8": fig8_npartitions, "fig9": fig9_scaling,
         "fig10": fig10_time, "fig11": fig11_sweep_scaling,
         "fig12": fig12_autoscale_churn, "fig13": fig13_growth,
-        "roofline": roofline,
+        "fig14": fig14_serving, "roofline": roofline,
     }
     only = [s for s in args.only.split(",") if s]
     failures = 0

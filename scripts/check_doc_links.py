@@ -1,0 +1,84 @@
+"""Link-check the docs tree: dead file refs and anchors fail CI.
+
+    python scripts/check_doc_links.py [files...]
+
+Defaults to README.md, API.md, ROADMAP.md, and docs/*.md. Stdlib only —
+no venv needed. Checks every markdown link ``[text](target)``:
+
+* relative file targets must exist (resolved against the linking file);
+* ``#anchor`` fragments — bare or on a relative ``.md`` target — must
+  match a heading in the target file (GitHub slugification);
+* absolute ``http(s)://`` / ``mailto:`` targets are skipped (no network
+  in CI).
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+CODE_FENCE = re.compile(r"```.*?```", re.S)
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: drop markup, lowercase, strip punctuation,
+    spaces to hyphens."""
+    h = heading.strip().replace("`", "")
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)     # linked headings
+    h = re.sub(r"[^\w\- ]", "", h.lower(), flags=re.UNICODE)
+    return h.strip().replace(" ", "-")
+
+
+def anchors_of(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        text = CODE_FENCE.sub("", f.read())
+    return {slugify(m) for m in HEADING.findall(text)}
+
+
+def check_file(path: str, repo: str) -> list[str]:
+    errors = []
+    with open(path, encoding="utf-8") as f:
+        text = CODE_FENCE.sub("", f.read())
+    rel = os.path.relpath(path, repo)
+    for target in LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, frag = target.partition("#")
+        if base:
+            dest = os.path.normpath(os.path.join(os.path.dirname(path),
+                                                 base))
+            if not os.path.exists(dest):
+                errors.append(f"{rel}: dead link -> {target}")
+                continue
+        else:
+            dest = path                                 # bare #anchor
+        if frag:
+            if not dest.endswith(".md"):
+                continue                                # can't check
+            if slugify(frag) not in anchors_of(dest):
+                errors.append(f"{rel}: dead anchor -> {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = argv or [p for p in
+                     [os.path.join(repo, n)
+                      for n in ("README.md", "API.md", "ROADMAP.md")]
+                     if os.path.exists(p)] + sorted(
+                         glob.glob(os.path.join(repo, "docs", "*.md")))
+    errors = []
+    for path in files:
+        errors += check_file(path, repo)
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} dead refs)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -1,13 +1,17 @@
 """Public facade over the SDP reproduction: stateful streaming sessions
-(:class:`Partitioner`) and fluent multi-lane sweeps (:class:`Sweep`).
+(:class:`Partitioner`), the serving tier over them
+(:class:`PartitionService` — double-buffered async ingest, backpressure,
+query/routing API), and fluent multi-lane sweeps (:class:`Sweep`).
 
 This is THE surface new code should build on; the engine modules
 (``repro.core.engine``/``windowed``) stay importable as the semantic
 reference and for tests, and ``repro.runtime.sweep.run_sweep`` is a
 deprecation shim over :class:`Sweep`.
 """
-from repro.api.partitioner import Partitioner
+from repro.api.partitioner import Partitioner, PreparedChunk
+from repro.api.serve import PartitionService, RouteResult
 from repro.api.sweep import Sweep
 from repro.runtime.sweep import SweepResult, SweepRun
 
-__all__ = ["Partitioner", "Sweep", "SweepRun", "SweepResult"]
+__all__ = ["Partitioner", "PartitionService", "PreparedChunk",
+           "RouteResult", "Sweep", "SweepRun", "SweepResult"]

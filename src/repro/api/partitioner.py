@@ -49,6 +49,8 @@ Guarantees:
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -83,6 +85,25 @@ _mixed_donated = jax.jit(
     donate_argnums=(0,))
 
 _TRACE_DTYPES = (jnp.int32, jnp.int32, jnp.int32, jnp.float32)
+
+
+class PreparedChunk(NamedTuple):
+    """The host-side half of a ``feed()``: validated, dtype-coerced event
+    arrays plus their ingestion requirement. Produced by
+    ``Partitioner.prepare`` — which touches no session state, so a
+    serving thread may prepare chunk *t+1* while the device executes
+    chunk *t* (repro.api.serve) — and consumed by ``feed_prepared``.
+    Chunks over the same session concatenate associatively: feeding two
+    merged chunks is bit-identical to feeding them back to back."""
+
+    etype: np.ndarray    # (T,) int32 event codes
+    vertex: np.ndarray   # (T,) int32 subject vertices
+    nbrs: np.ndarray     # (T, width) int32 neighbour rows, -1 padded
+    required: Geometry   # minimal geometry able to ingest these events
+
+    @property
+    def num_events(self) -> int:
+        return int(self.etype.shape[0])
 
 
 class Partitioner:
@@ -239,10 +260,58 @@ class Partitioner:
         ``events`` is a :class:`VertexStream` (over the same vertex
         universe) or an ``(etype, vertex, nbrs)`` triple of arrays.
         Bit-identical to one whole-stream run regardless of how the
-        stream is chopped across calls.
+        stream is chopped across calls. Equivalent to
+        ``feed_prepared(prepare(events))``; dispatch is asynchronous
+        (JAX async dispatch) — call ``sync()`` to block on completion.
         """
-        et, vx, nb = self._coerce(events)
-        T = int(et.shape[0])
+        return self.feed_prepared(self.prepare(events))
+
+    def prepare(self, events) -> PreparedChunk:
+        """Host-only coercion: validate ``events`` (a
+        :class:`VertexStream` or ``(etype, vertex, nbrs)`` triple),
+        coerce dtypes, and compute the required ingestion geometry —
+        WITHOUT touching session state. The expensive O(T·max_deg) host
+        work of a ``feed`` lives here, so a serving loop
+        (repro.api.serve) can run it on chunk *t+1* while the device
+        executes chunk *t*. Thread-safe with respect to the session."""
+        if isinstance(events, VertexStream):
+            et = np.asarray(events.etype, np.int32)
+            vx = np.asarray(events.vertex, np.int32)
+            nb = np.asarray(events.nbrs, np.int32)
+            required = events.required_geometry()
+        else:
+            try:
+                et, vx, nb = events
+            except (TypeError, ValueError):
+                raise TypeError(
+                    "feed() takes a VertexStream or an (etype, vertex, "
+                    f"nbrs) triple, got {type(events).__name__}") from None
+            et = np.atleast_1d(np.asarray(et, np.int32))
+            vx = np.atleast_1d(np.asarray(vx, np.int32))
+            nb = np.asarray(nb, np.int32)
+            if nb.ndim != 2 or et.shape != vx.shape \
+                    or nb.shape[0] != et.shape[0]:
+                raise ValueError(
+                    f"event triple shapes disagree: etype{et.shape}, "
+                    f"vertex{vx.shape}, nbrs{nb.shape} — want (T,), (T,), "
+                    "(T, max_deg)")
+            required = required_geometry_of(vx, nb)
+        return PreparedChunk(et, vx, nb, required)
+
+    def feed_prepared(self, chunk: PreparedChunk) -> "Partitioner":
+        """Ingest a :class:`PreparedChunk` (see ``prepare``): grow the
+        geometry if the chunk requires it, re-width the neighbour rows
+        to the session, and dispatch the engine kernels. Dispatch is
+        asynchronous — the call returns once the work is enqueued, and
+        the carried state is a future until ``sync()`` (or any host
+        read) blocks on it."""
+        # elastic: events beyond the current geometry grow the state
+        # (tier-doubled) instead of raising — the session's shapes are a
+        # starting point, not a contract
+        self._ensure_geometry(chunk.required)
+        et, vx = chunk.etype, chunk.vertex
+        nb = normalize_rows(chunk.nbrs, self.max_deg)
+        T = chunk.num_events
         if T == 0:
             return self
         use_scan = self.collect_trace or self.engine == "scan"
@@ -293,43 +362,27 @@ class Partitioner:
                 self._state, wnd._pad_to(et, w, EVENT_PAD),
                 vs_w, rows_w, t0, policy=self.policy, cfg=self.cfg)
 
-    def _coerce(self, events):
-        if isinstance(events, VertexStream):
-            et = np.asarray(events.etype, np.int32)
-            vx = np.asarray(events.vertex, np.int32)
-            nb = np.asarray(events.nbrs, np.int32)
-            required = events.required_geometry()
-        else:
-            try:
-                et, vx, nb = events
-            except (TypeError, ValueError):
-                raise TypeError(
-                    "feed() takes a VertexStream or an (etype, vertex, "
-                    f"nbrs) triple, got {type(events).__name__}") from None
-            et = np.atleast_1d(np.asarray(et, np.int32))
-            vx = np.atleast_1d(np.asarray(vx, np.int32))
-            nb = np.asarray(nb, np.int32)
-            if nb.ndim != 2 or et.shape != vx.shape \
-                    or nb.shape[0] != et.shape[0]:
-                raise ValueError(
-                    f"event triple shapes disagree: etype{et.shape}, "
-                    f"vertex{vx.shape}, nbrs{nb.shape} — want (T,), (T,), "
-                    "(T, max_deg)")
-            required = required_geometry_of(vx, nb)
-        # elastic: events beyond the current geometry grow the state
-        # (tier-doubled) instead of raising — the session's shapes are a
-        # starting point, not a contract
-        self._ensure_geometry(required)
-        return et, vx, normalize_rows(nb, self.max_deg)
+    def sync(self) -> "Partitioner":
+        """Block until every dispatched feed has executed (feeds are
+        asynchronous — JAX async dispatch). THE explicit query point:
+        after ``sync()`` the carried state is materialized and host
+        reads of it are free. Returns ``self`` for chaining."""
+        jax.block_until_ready(self._state)
+        return self
 
     # -- observation --------------------------------------------------------
 
     def metrics(self) -> dict:
         """Paper metrics (Eq. 9 edge-cut ratio, Eq. 10 imbalance, scaling
-        counters) of the state as of the last ``feed``, plus the cursor
-        and the elastic-geometry counters."""
+        counters) of the state as of the last ``feed``, plus the session
+        counters (``cursor`` — also under its historical name
+        ``events_ingested`` — and the elastic-geometry counters), so
+        observers like ``repro.api.serve.PartitionService`` report them
+        without reaching into privates. Blocks on in-flight feeds (a
+        query point)."""
         m = state_metrics(self._state)
         m["events_ingested"] = self._cursor
+        m["cursor"] = self._cursor
         m["n"] = self.n
         m["max_deg"] = self.max_deg
         m["regeometries"] = self._regeometries

@@ -12,6 +12,12 @@ definition site shared with the windowed kernels and the sweep runtime.
 This module is the *static-knob* driver: policy and config are Python
 values, so XLA sees one specialized program per (policy, cfg).
 
+The driver is split in two: ``_run_events`` is the unjitted body and
+``run_events`` its plain jitted binding; the session facade
+(repro.api.partitioner) re-jits the body with the carried state donated,
+so streaming ``feed()`` calls reuse buffers instead of copying the state
+per call. ``run_stream`` stays the whole-stream reference entry.
+
 The windowed engine (repro.core.windowed) is bit-identical to this one but
 restructures the hot affinity scoring into a batched kernel; this module is
 the semantic reference. The carried ``PartitionState`` includes the

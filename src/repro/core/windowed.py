@@ -27,8 +27,9 @@ Two window kernels exist:
   ``repro.core.transition`` (the single definition site shared with the
   faithful engine and the sweep runtime). ``sweep_window_mixed`` is the
   same kernel under the *traced* knob (lax.switch policy, per-lane
-  autoscale gate), vmapped across sweep lanes — how ``run_sweep``'s
-  ``engine="windowed"`` mode inherits the window speedup.
+  autoscale gate), vmapped across sweep lanes — how the ``Sweep``
+  builder's ``.windowed()`` mode (repro.api.sweep; ``run_sweep`` is its
+  deprecation shim) inherits the window speedup.
 
 The host driver slices the stream into *fixed* windows — deletion events
 no longer split windows, so delete-heavy churn streams (the paper's

@@ -344,6 +344,48 @@ def interleaved_churn(
     )
 
 
+def poisson_arrivals(
+    s: VertexStream,
+    *,
+    rate: float,
+    mean_batch: float = 24.0,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Chop a stream into arrival batches with Poisson-process due times
+    — the serving-workload model behind benchmarks/fig14_serving.py.
+
+    Events arrive in bursts: batch sizes are Poisson-distributed around
+    ``mean_batch`` (clamped ≥ 1, truncated at the stream end), and batch
+    due times follow a Poisson process whose long-run **event** rate is
+    ``rate`` events/second (inter-arrival gaps are exponential with mean
+    ``batch_size / rate``, drawn per batch so bigger bursts are spaced
+    proportionally further apart).
+
+    Returns ``(bounds, due)``: ``bounds`` is (B+1,) int64 slice
+    boundaries into the stream (batch ``i`` is events
+    ``bounds[i]:bounds[i+1]``) and ``due`` is (B,) float64 arrival times
+    in seconds from the start of the process. A driver replays the
+    workload by sleeping until ``due[i]`` (when early) before
+    submitting batch ``i`` — see ``PartitionService`` and fig14.
+    """
+    if rate <= 0:
+        raise ValueError(f"rate={rate} must be > 0 events/second")
+    if mean_batch <= 0:
+        raise ValueError(f"mean_batch={mean_batch} must be > 0 events")
+    rng = np.random.default_rng(seed)
+    T = s.num_events
+    sizes: list[int] = []
+    total = 0
+    while total < T:
+        b = max(int(rng.poisson(mean_batch)), 1)
+        b = min(b, T - total)
+        sizes.append(b)
+        total += b
+    bounds = np.concatenate([[0], np.cumsum(sizes, dtype=np.int64)])
+    gaps = rng.exponential(np.asarray(sizes, np.float64) / rate)
+    return bounds, np.cumsum(gaps)
+
+
 def pad_stream(s: VertexStream, multiple: int) -> VertexStream:
     """Pad the event tensor length to a multiple (for fixed-window engines)."""
     t = s.num_events
