@@ -6,9 +6,18 @@ Also benchmarks the mixed-event window engine on a delete-heavy
 *interleaved* churn stream — the regime where the legacy driver split
 windows at every deletion boundary and degenerated to window-size-1
 chunks — and writes the comparison to BENCH_mixed_window.json.
+
+``PALLAS=1`` adds the fused-chooser rows: the full churn stream through
+``use_kernel=True`` (``windowed_fused``) plus a per-window *step split*
+(``stream="churn_step"``) timing one mixed window through the XLA step,
+the fused Pallas kernel, and the two scoring paths in isolation — the
+kernel-vs-XLA scoring breakdown. Off TPU these run the kernels in
+interpret mode (see repro.kernels.common.default_interpret), so the
+numbers gate wiring and shape-handling, not Mosaic throughput.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -20,11 +29,17 @@ from repro.api import Partitioner
 from repro.core import run_reference, run_stream
 from repro.core.engine import run_events
 from repro.core.state import init_state
-from repro.core.windowed import _pad_to, run_window_adds
+from repro.core.windowed import (_pad_to, committed_scores, run_window_adds,
+                                 run_window_mixed)
 from repro.graph import stream as gstream
+from repro.kernels.fused_chooser.ops import run_window_mixed_fused
+from repro.kernels.partition_affinity.ops import scores_for_state
 
 DATASETS = ("3elt", "grqc", "wiki-vote")
 CHURN_DATASETS = ("grqc",)
+
+PALLAS = os.environ.get("PALLAS", "").strip().lower() in (
+    "1", "true", "yes", "on")
 
 
 def _windowed_session(s, cfg, *, window=256, use_kernel=False):
@@ -67,6 +82,31 @@ def _windowed_legacy(s, cfg, *, window=256):
                 jnp.int32(t), policy="sdp", cfg=cfg)
         t = end
     return state
+
+
+def _step_split(s, cfg, ds, *, window=256):
+    """Per-window step-time split on one representative mixed window:
+    the whole step through XLA (gather/score/choose/commit as separate
+    ops) vs through the fused Pallas chooser, plus the scoring stage in
+    isolation (``committed_scores`` vs the ``partition_affinity``
+    kernel) — so the non-scoring share of the step is the difference."""
+    state = init_state(s.n, s.max_deg, cfg.k_max, cfg.k_init, 0)
+    w = min(window, s.num_events)
+    et = jnp.asarray(s.etype[:w])
+    vx = jnp.asarray(s.vertex[:w])
+    nb = jnp.asarray(s.nbrs[:w])
+    t0 = jnp.int32(0)
+    steps = {
+        "window_step_xla": lambda: run_window_mixed(
+            state, et, vx, nb, t0, policy="sdp", cfg=cfg),
+        "window_step_kernel": lambda: run_window_mixed_fused(
+            state, et, vx, nb, t0, policy="sdp", cfg=cfg),
+        "window_score_xla": lambda: committed_scores(state, nb),
+        "window_score_kernel": lambda: scores_for_state(state, nb),
+    }
+    return _time_engines(steps, w,
+                         {"dataset": ds, "stream": "churn_step",
+                          "window": w})
 
 
 def _time_engines(engines, num_events, extra):
@@ -114,8 +154,13 @@ def run(quick: bool = True) -> list:
             "windowed_mixed": lambda: _windowed_session(
                 cs, cfg, window=256),
         }
+        if PALLAS:
+            engines["windowed_fused"] = lambda: _windowed_session(
+                cs, cfg, window=256, use_kernel=True)
         churn_rows += _time_engines(engines, cs.num_events,
                                     {"dataset": ds, "stream": "churn"})
+        if PALLAS:
+            churn_rows += _step_split(cs, cfg, ds)
 
     rows += churn_rows
     C.save_rows("fig10_time", rows)
@@ -142,7 +187,26 @@ def summarize(rows) -> list[str]:
         mixed = d["windowed_mixed"]
         legacy = d["windowed_legacy"]
         speed = legacy["seconds"] / max(mixed["seconds"], 1e-9)
-        out.append(f"fig10/churn/{ds},{mixed['seconds']:.3f},"
-                   f"mixed_vs_legacy_windowed={speed:.1f}x"
-                   f";events_per_s={mixed['events_per_s']:.0f}")
+        line = (f"fig10/churn/{ds},{mixed['seconds']:.3f},"
+                f"mixed_vs_legacy_windowed={speed:.1f}x"
+                f";events_per_s={mixed['events_per_s']:.0f}")
+        if "windowed_fused" in d:
+            fused = d["windowed_fused"]
+            line += (f";fused_vs_mixed="
+                     f"{mixed['seconds']/max(fused['seconds'],1e-9):.2f}x")
+        out.append(line)
+    for ds in CHURN_DATASETS:
+        d = {r["engine"]: r for r in rows
+             if r["dataset"] == ds and r.get("stream") == "churn_step"}
+        if not d:
+            continue
+        sx, sk = d["window_step_xla"], d["window_step_kernel"]
+        cx, ck = d["window_score_xla"], d["window_score_kernel"]
+        out.append(
+            f"fig10/step/{ds},{sx['seconds']*1e6:.0f},"
+            f"step_xla_us={sx['seconds']*1e6:.0f}"
+            f";step_kernel_us={sk['seconds']*1e6:.0f}"
+            f";score_xla_us={cx['seconds']*1e6:.0f}"
+            f";score_kernel_us={ck['seconds']*1e6:.0f}"
+            f";score_share_xla={cx['seconds']/max(sx['seconds'],1e-9):.2f}")
     return out

@@ -17,9 +17,16 @@ throughput.
 In quick mode the host loop is measured only for L ≤ 16 (it is 15-20×
 slower than the device paths; a 64-lane host loop is minutes of
 wall-clock that measures nothing new).
+
+``PALLAS=1`` adds ``windowed_fused_lanes``: the same windowed lanes
+through the fused Pallas chooser (``Sweep...kernel()``, vmapped over the
+pallas_call). Off TPU the kernel runs in interpret mode, so the row
+gates wiring, not Mosaic throughput; in quick mode it is measured at
+L ≤ 16 only (interpret mode is host-speed).
 """
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -30,6 +37,9 @@ from repro.core import run_stream
 from repro.graph import stream as gstream
 
 LANE_COUNTS = (4, 16, 64)
+
+PALLAS = os.environ.get("PALLAS", "").strip().lower() in (
+    "1", "true", "yes", "on")
 
 
 def _lanes(n_lanes: int):
@@ -80,6 +90,11 @@ def run(quick: bool = True) -> list:
         modes["windowed_lanes"] = (
             lambda: [r.state for r in
                      Sweep(s).lanes(runs).sharded(False).windowed().run()], 5)
+        if PALLAS and (not quick or L <= 16):
+            modes["windowed_fused_lanes"] = (
+                lambda: [r.state for r in
+                         Sweep(s).lanes(runs).sharded(False).windowed()
+                         .kernel().run()], 2)
         if ndev > 1:
             modes["sharded"] = (
                 lambda: [r.state for r in
@@ -107,6 +122,11 @@ def summarize(rows) -> list[str]:
             host = d["host_loop"]
             parts.insert(0, f"vmapped_vs_host="
                          f"{vm['lanes_per_s']/max(host['lanes_per_s'],1e-9):.1f}x")
+        if "windowed_fused_lanes" in d:
+            fused = d["windowed_fused_lanes"]
+            parts.append(
+                f"fused_vs_windowed="
+                f"{fused['lanes_per_s']/max(win['lanes_per_s'],1e-9):.2f}x")
         if "sharded" in d:
             sh = d["sharded"]
             parts.append(

@@ -84,6 +84,17 @@ _mixed_donated = jax.jit(
     wnd._run_window_mixed, static_argnames=("policy", "cfg"),
     donate_argnums=(0,))
 
+
+def _mixed_fused_donated():
+    """Donated re-jit of the fused Pallas mixed-window kernel — imported
+    lazily so sessions that never set ``use_kernel=True`` do not import
+    the kernels layer at all."""
+    from repro.kernels.fused_chooser.ops import _run_window_mixed_fused
+    return jax.jit(
+        _run_window_mixed_fused,
+        static_argnames=("policy", "cfg", "interpret", "variant"),
+        donate_argnums=(0,))
+
 _TRACE_DTYPES = (jnp.int32, jnp.int32, jnp.int32, jnp.float32)
 
 
@@ -126,8 +137,18 @@ class Partitioner:
       window: events per device step for the windowed backend.
       collect_trace: record the per-event :class:`EventTrace`; forces the
         scan backend (the window kernels return no trace).
-      use_kernel: score pure-ADD windows with the Pallas
-        ``partition_affinity`` kernel instead of the jnp reference.
+      use_kernel: route full windows through the Pallas kernels —
+        pure-ADD windows score with ``partition_affinity``, mixed windows
+        run the whole slot loop in the fused chooser
+        (``repro.kernels.fused_chooser``); both bit-identical to the XLA
+        paths, interpret mode resolved per backend at one site
+        (``repro.kernels.common.default_interpret``). Coverage is NOT
+        total: the per-event scan backend — ``engine="scan"``,
+        ``collect_trace``, and ``engine="auto"``'s small tails — always
+        runs pure XLA (it is the faithful reference the kernels are
+        verified against). ``metrics()`` reports the split as
+        ``kernel_windows`` vs ``fallback_windows`` so a session can tell
+        how much of its stream actually rode the kernels.
     """
 
     def __init__(self, cfg: EngineConfig | None = None, *,
@@ -164,11 +185,16 @@ class Partitioner:
         self.engine = engine
         self.window = int(window)
         self.collect_trace = bool(collect_trace)
+        self.use_kernel = bool(use_kernel)
         if use_kernel:
             from repro.kernels.partition_affinity.ops import scores_for_state
             self._score_fn = scores_for_state
+            self._mixed_fn = _mixed_fused_donated()
         else:
             self._score_fn = None
+            self._mixed_fn = _mixed_donated
+        self._kernel_windows = 0
+        self._fallback_windows = 0
         self._state = init_state(int(n or 1), int(max_deg or 1), cfg.k_max,
                                  cfg.k_init, seed)
         self._regeometries = 0
@@ -338,6 +364,9 @@ class Partitioner:
         return self
 
     def _feed_scan(self, et, vx, nb):
+        # the scan backend is outside the kernel surface (it is the
+        # faithful reference) — count it as fallback coverage
+        self._fallback_windows += 1
         self._state, tr = _scan_donated(
             self._state, jnp.asarray(et), jnp.asarray(vx), jnp.asarray(nb),
             jnp.int32(self._cursor), policy=self.policy, cfg=self.cfg)
@@ -349,6 +378,10 @@ class Partitioner:
         Pad slots are no-ops that still occupy RNG indices past the true
         events — the cursor advances by the true count only, so the next
         call's fold_in indices line up with an unchopped run."""
+        if self.use_kernel:
+            self._kernel_windows += 1
+        else:
+            self._fallback_windows += 1
         w = self.window
         vs_w = wnd._pad_to(vx, w, -1)
         rows_w = wnd._pad_to(nb, w, -1)
@@ -358,7 +391,7 @@ class Partitioner:
                 self._state, vs_w, rows_w, t0,
                 policy=self.policy, cfg=self.cfg, score_fn=self._score_fn)
         else:
-            self._state = _mixed_donated(
+            self._state = self._mixed_fn(
                 self._state, wnd._pad_to(et, w, EVENT_PAD),
                 vs_w, rows_w, t0, policy=self.policy, cfg=self.cfg)
 
@@ -386,6 +419,12 @@ class Partitioner:
         m["n"] = self.n
         m["max_deg"] = self.max_deg
         m["regeometries"] = self._regeometries
+        # kernel coverage: window dispatches that rode the Pallas kernels
+        # vs the XLA fallback (scan slices count as one fallback unit) —
+        # use_kernel=True with a large fallback share means the stream is
+        # mostly scan tails and the kernels barely engage
+        m["kernel_windows"] = self._kernel_windows
+        m["fallback_windows"] = self._fallback_windows
         return m
 
     def trace(self) -> EventTrace:

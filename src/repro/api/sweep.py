@@ -43,6 +43,7 @@ class Sweep:
         self._window = 256
         self._chunk: int | None = None
         self._shard: bool | None = None
+        self._use_kernel = False
 
     # -- lanes --------------------------------------------------------------
 
@@ -76,6 +77,15 @@ class Sweep:
         self._window = int(window)
         return self
 
+    def kernel(self, use_kernel: bool = True) -> "Sweep":
+        """Run the windowed lanes through the fused Pallas chooser
+        (repro.kernels.fused_chooser) instead of the XLA window kernel —
+        bit-identical by contract, interpret mode off TPU. Windowed-engine
+        only: the scan engine is the semantic reference and stays XLA
+        (``run()`` raises on ``.scan().kernel()``)."""
+        self._use_kernel = bool(use_kernel)
+        return self
+
     def chunked(self, chunk: int) -> "Sweep":
         """Re-dispatch the scan engine every ``chunk`` events (resumable,
         bounds step count per program). Scan-engine only."""
@@ -104,6 +114,13 @@ class Sweep:
                 "lax.scan over windows — its window IS the chunk. Drop "
                 ".chunked() (or the chunk= argument) or use the scan "
                 "engine.")
+        if self._use_kernel and self._engine != "windowed":
+            raise ValueError(
+                "kernel() requires the windowed engine: the fused Pallas "
+                "chooser is the windowed kernel's Pallas form; the scan "
+                "engine is the semantic reference and always scores with "
+                "XLA gathers. Chain .windowed() before .kernel(), or drop "
+                ".kernel().")
         if not isinstance(self._stream, (list, tuple)):
             streams = None
         else:
@@ -139,4 +156,5 @@ class Sweep:
             return []
         return _execute_sweep(
             self._stream, self._runs, chunk=self._chunk,
-            engine=self._engine, window=self._window, shard=self._shard)
+            engine=self._engine, window=self._window, shard=self._shard,
+            use_kernel=self._use_kernel)

@@ -20,7 +20,13 @@ per call. ``run_stream`` stays the whole-stream reference entry.
 
 The windowed engine (repro.core.windowed) is bit-identical to this one but
 restructures the hot affinity scoring into a batched kernel; this module is
-the semantic reference. The carried ``PartitionState`` includes the
+the semantic reference. For the same reason it is deliberately OUTSIDE the
+``use_kernel`` surface: the Pallas kernels (partition_affinity scoring,
+the fused_chooser window loop) attach to the windowed paths only, and
+their bit-identity gates all compare against this scan — a session on
+``engine="scan"`` (or its small-tail fallback) therefore always scores
+with XLA gathers, counted as ``fallback_windows`` in
+``Partitioner.metrics()``. The carried ``PartitionState`` includes the
 incremental pairwise ``cut_matrix`` (see the transition-module docstring
 for its invariant), so autoscale scale-ins here — like everywhere — merge
 cuts in O(K²) with no adjacency recompute.

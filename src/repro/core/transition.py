@@ -69,7 +69,10 @@ from repro.core.config import EngineConfig, POLICIES
 from repro.core.state import PartitionState
 from repro.graph.stream import EVENT_ADD, EVENT_DEL_EDGE, EVENT_DEL_VERTEX
 
-_BIG = jnp.int32(2**30)
+# a Python int, not a jnp constant: masked_argmin runs inside the fused
+# Pallas kernel body, where captured device constants are not allowed —
+# a weak-typed literal traces to the same int32 ops either way
+_BIG = 2**30
 
 
 class EventTrace(NamedTuple):
@@ -182,16 +185,31 @@ def load_stats(state):
 # policies: choose a partition for an arriving vertex
 # ---------------------------------------------------------------------------
 
-def _affinity_choice(state, scores: jax.Array, key: jax.Array):
-    """Paper Alg. 3: argmax affinity; tie → min load; no overlap → random."""
+def _affinity_choice_at(state, scores: jax.Array, ridx: jax.Array):
+    """Paper Alg. 3 with the random draw precomputed: argmax affinity; tie →
+    min load; no overlap → the ``ridx``-th active partition. The key-driven
+    ``_affinity_choice`` below and the fused Pallas chooser (which consumes
+    a per-slot ``rand_index_table``) share this body, so the two cannot
+    drift."""
     act = state.active
     s = jnp.where(act, scores, -1)
     best = jnp.max(s)
     tied = act & (s == best)
     p_tie = masked_argmin(state.edge_load, tied)          # tie → min load
-    ridx = jax.random.randint(key, (), 0, jnp.maximum(state.num_partitions, 1))
     p_rand = nth_active(act, ridx)                        # no overlap → random
     return jnp.where(best > 0, p_tie, p_rand)
+
+
+def _rand_index(state, key: jax.Array) -> jax.Array:
+    """The ONE random draw any policy makes: an index in
+    [0, num_partitions). ``rand_index_table`` precomputes it per possible
+    ``num_partitions`` so the fused kernel can look it up instead."""
+    return jax.random.randint(key, (), 0, jnp.maximum(state.num_partitions, 1))
+
+
+def _affinity_choice(state, scores: jax.Array, key: jax.Array):
+    """Paper Alg. 3: argmax affinity; tie → min load; no overlap → random."""
+    return _affinity_choice_at(state, scores, _rand_index(state, key))
 
 
 def _sdp_guard_inputs(state):
@@ -202,22 +220,30 @@ def _sdp_guard_inputs(state):
     return avg_d, load_dev, th
 
 
-def _choose_sdp_text(state, scores, deg, v, key, kn: Knobs, n: int):
-    """§4.2.2 text semantics: imbalance (AVG_d > TH) ⇒ least-loaded."""
+def _sdp_text_pick(state, p_aff):
+    """§4.2.2 guard around an already-made affinity choice."""
     avg_d, _, th = _sdp_guard_inputs(state)
     p_min = masked_argmin(state.edge_load, state.active)
-    p_aff = _affinity_choice(state, scores, key)
     guard = (state.num_partitions > 1) & (avg_d > th)
     return jnp.where(guard, p_min, p_aff)
 
 
-def _choose_sdp_alg1(state, scores, deg, v, key, kn: Knobs, n: int):
-    """Alg. 1 listing semantics: σ > TH ⇒ affinity path, else least-loaded."""
+def _sdp_alg1_pick(state, p_aff):
+    """Alg. 1 listing guard around an already-made affinity choice."""
     _, load_dev, th = _sdp_guard_inputs(state)
     p_min = masked_argmin(state.edge_load, state.active)
-    p_aff = _affinity_choice(state, scores, key)
     guard = (state.num_partitions > 1) & (load_dev > th)
     return jnp.where(guard, p_aff, p_min)
+
+
+def _choose_sdp_text(state, scores, deg, v, key, kn: Knobs, n: int):
+    """§4.2.2 text semantics: imbalance (AVG_d > TH) ⇒ least-loaded."""
+    return _sdp_text_pick(state, _affinity_choice(state, scores, key))
+
+
+def _choose_sdp_alg1(state, scores, deg, v, key, kn: Knobs, n: int):
+    """Alg. 1 listing semantics: σ > TH ⇒ affinity path, else least-loaded."""
+    return _sdp_alg1_pick(state, _affinity_choice(state, scores, key))
 
 
 def _choose_ldg(state, scores, deg, v, key, kn: Knobs, n: int):
@@ -283,6 +309,84 @@ def make_chooser(balance_guard: str, policy: str | None = None,
         return jax.lax.switch(
             policy_idx, list(table), state, scores, deg, v, key, kn, n)
     return choose
+
+
+# ---------------------------------------------------------------------------
+# table-driven choosers (the fused Pallas kernel's policy seam)
+# ---------------------------------------------------------------------------
+#
+# Identical policy bodies with the single random draw hoisted out: every
+# key-consuming policy draws exactly ``_rand_index`` (randint in
+# [0, num_partitions)), so a chooser parameterized on that *index* instead
+# of the key needs no RNG inside the kernel. ``rand_index_table``
+# precomputes the draw for every possible num_partitions per window slot —
+# the kernel looks up ``rand_tab[slot, num_partitions - 1]`` and feeds it
+# to ``make_table_chooser``'s table, which reuses the exact ``_choose_*``
+# bodies above. Bit-identity with ``make_chooser`` is a theorem of
+# ``randint(key, (), 0, m)`` being reproducible per (key, m), asserted by
+# tests/test_fused_chooser.py property tests.
+
+def _choose_sdp_text_at(state, scores, deg, v, ridx, kn: Knobs, n: int):
+    return _sdp_text_pick(state, _affinity_choice_at(state, scores, ridx))
+
+
+def _choose_sdp_alg1_at(state, scores, deg, v, ridx, kn: Knobs, n: int):
+    return _sdp_alg1_pick(state, _affinity_choice_at(state, scores, ridx))
+
+
+def _choose_random_at(state, scores, deg, v, ridx, kn: Knobs, n: int):
+    return nth_active(state.active, ridx)
+
+
+def _choose_greedy_at(state, scores, deg, v, ridx, kn: Knobs, n: int):
+    return _affinity_choice_at(state, scores, ridx)
+
+
+def policy_fns_at(balance_guard: str):
+    """Table-driven policy table in POLICIES order: each entry takes the
+    precomputed random index where ``policy_fns`` takes a PRNG key. The
+    ldg/fennel/hash entries never consume randomness, so the key-position
+    argument is simply ignored and the functions are shared verbatim."""
+    sdp = _choose_sdp_text_at if balance_guard == "text" else _choose_sdp_alg1_at
+    return (sdp, _choose_ldg, _choose_fennel, _choose_hash, _choose_random_at,
+            _choose_greedy_at)
+
+
+def make_table_chooser(balance_guard: str, policy: str | None = None,
+                       policy_idx: jax.Array | None = None) -> Callable:
+    """``choose(state, scores, deg, v, ridx, kn, n) -> p`` — the
+    ``make_chooser`` contract with the PRNG key replaced by the precomputed
+    random index ``ridx`` (see ``rand_index_table``). Same static-string /
+    traced-index parameterization; the traced form is built *inside* the
+    fused kernel body so the lax.switch runs on the kernel's scalars."""
+    table = policy_fns_at(balance_guard)
+    if (policy is None) == (policy_idx is None):
+        raise ValueError("pass exactly one of policy / policy_idx")
+    if policy is not None:
+        return table[POLICY_INDEX[policy]]
+
+    def choose(state, scores, deg, v, ridx, kn, n):
+        return jax.lax.switch(
+            policy_idx, list(table), state, scores, deg, v, ridx, kn, n)
+    return choose
+
+
+def rand_index_table(base_key: jax.Array, t0, w: int, k_max: int) -> jax.Array:
+    """(w, k_max) int32 table of the per-slot random draw for every possible
+    partition count: ``tab[i, m-1] = randint(fold_in(base_key, t0+i), (),
+    0, m)``. ``fold_in(base_key, t0+i)`` is exactly the per-event key of
+    ``scan_events``, and ``randint`` with a static maxval m draws the same
+    bits as the traced-maxval draw inside ``_rand_index`` — so a chooser
+    reading ``tab[i, num_partitions-1]`` reproduces the key-driven engines
+    bit-for-bit without tracing threefry inside the Pallas kernel."""
+    idx = t0 + jnp.arange(w, dtype=jnp.int32)
+    keys = jax.vmap(lambda i: jax.random.fold_in(base_key, i))(idx)
+
+    def per_key(k):
+        return jnp.stack([jax.random.randint(k, (), 0, m)
+                          for m in range(1, k_max + 1)])
+
+    return jax.vmap(per_key)(keys).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

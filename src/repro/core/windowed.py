@@ -29,7 +29,11 @@ Two window kernels exist:
   same kernel under the *traced* knob (lax.switch policy, per-lane
   autoscale gate), vmapped across sweep lanes — how the ``Sweep``
   builder's ``.windowed()`` mode (repro.api.sweep; ``run_sweep`` is its
-  deprecation shim) inherits the window speedup.
+  deprecation shim) inherits the window speedup. Under ``use_kernel``
+  both kinds swap in their Pallas form: ``partition_affinity`` for the
+  batched committed scores here, and ``repro.kernels.fused_chooser`` for
+  the entire mixed-window slot loop (plus its lane-batched
+  ``sweep_window_mixed_fused`` twin) — same bit-identity contract.
 
 The host driver slices the stream into *fixed* windows — deletion events
 no longer split windows, so delete-heavy churn streams (the paper's
@@ -494,24 +498,38 @@ def run_stream_windowed(
 ) -> PartitionState:
     """Host driver: fixed windows of ``window`` events per device step.
 
-    Pure-ADD windows take the small-carry ``run_window_adds`` kernel
-    (where ``use_kernel`` routes the batched committed scores through the
-    Pallas kernel); windows containing deletions take ``run_window_mixed``,
-    which scores from its label journal instead. Both are bit-identical to
+    Pure-ADD windows take the small-carry ``run_window_adds`` kernel;
+    windows containing deletions take ``run_window_mixed``, which scores
+    from its label journal instead. Both are bit-identical to
     ``run_stream``. (The pre-mixed legacy driver that split windows at
     deletion boundaries lives on only as the fig10 benchmark baseline,
     benchmarks/fig10_time.py.) ``geometry`` overrides the state
     allocation exactly as in ``run_stream`` — growth is a semantics
     no-op (repro.core.geometry).
+
+    ``use_kernel=True`` routes BOTH window kinds through Pallas: pure-ADD
+    windows score their batched committed affinities with the
+    ``partition_affinity`` kernel, and mixed windows run the whole
+    slot loop — gather, score, policy argmax, commit — inside the fused
+    chooser kernel (``repro.kernels.fused_chooser``), still bit-identical.
+    Interpret mode resolves per backend at ONE site
+    (``repro.kernels.common.default_interpret``). The per-event scan
+    engine (``repro.core.engine.run_stream``) remains pure XLA — it is
+    the faithful reference the kernels are verified against; session
+    callers see the split in ``Partitioner.metrics()``
+    (``kernel_windows`` vs ``fallback_windows``).
     """
     cfg = cfg or EngineConfig()
     geom = resolve_geometry(stream, cfg, geometry)
     state = init_state(geom.n, geom.max_deg, geom.k_max, cfg.k_init, seed)
     if use_kernel:
+        from repro.kernels.fused_chooser.ops import run_window_mixed_fused
         from repro.kernels.partition_affinity.ops import scores_for_state
         score_fn = scores_for_state
+        mixed_fn = run_window_mixed_fused
     else:
         score_fn = None
+        mixed_fn = run_window_mixed
 
     et = np.asarray(stream.etype)
     vx = jnp.asarray(stream.vertex)
@@ -529,7 +547,7 @@ def run_stream_windowed(
                 policy=policy, cfg=cfg, score_fn=score_fn,
             )
         else:
-            state = run_window_mixed(
+            state = mixed_fn(
                 state, ets_w, vs_w, rows_w, jnp.int32(t),
                 policy=policy, cfg=cfg,
             )

@@ -1,0 +1,66 @@
+"""Shared Pallas plumbing — ONE definition site for two conventions every
+repro kernel must agree on:
+
+* **interpret-mode policy** (``default_interpret``): kernels run in Pallas
+  interpret mode everywhere except a real TPU backend, so the same
+  ``use_kernel=True`` call sites exercise the kernel logic bit-identically
+  in CPU CI and compile to real Mosaic on TPU. ``REPRO_PALLAS_INTERPRET``
+  overrides for debugging (``=1`` forces interpret on TPU, ``=0`` forces a
+  real compile elsewhere — which will fail off-TPU; that is the point of
+  the override).
+
+* **label-histogram masking** (``label_histogram``): affinity scoring is a
+  compare+reduce one-hot histogram over neighbour labels where ``-1``
+  means "no neighbour here" (absent vertex, padded slot, or padded tile)
+  and matches no partition id. Both the batched committed-scores kernel
+  (``partition_affinity``) and the fused window chooser score through this
+  helper, so their tiling/masking semantics cannot drift.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+# TPU VPU lane tiling — kernels pad the (window/vertex, k) trailing dims to
+# multiples of this when compiled for real hardware (interpret mode accepts
+# any geometry; see docs/ARCHITECTURE.md "Kernels").
+TILE = (8, 128)
+
+_ENV = "REPRO_PALLAS_INTERPRET"
+
+
+def default_interpret() -> bool:
+    """True ⇔ Pallas kernels should run in interpret mode.
+
+    Derived from the backend (`jax.default_backend() != "tpu"`) so the one
+    ``use_kernel=True`` flag means "real kernel on TPU, interpreted
+    elsewhere"; the ``REPRO_PALLAS_INTERPRET`` env var overrides both ways
+    for debugging.
+    """
+    override = os.environ.get(_ENV)
+    if override is not None:
+        return override.strip().lower() not in ("0", "false", "no", "off")
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a kernel call's ``interpret=None`` default to the policy."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def label_histogram(labels: jax.Array, k_max: int):
+    """(…, D) int32 labels → ((…, K) scores, (…, 1) degree).
+
+    ``scores[..., k] = |{j : labels[..., j] == k}|`` and ``degree`` counts
+    labels ``>= 0``. Labels ``-1`` (absent / padding) match no k — THE
+    masking convention shared by every scoring path; integer compare+sum,
+    so results are exact and bit-identical across engines.
+    """
+    ks = jax.lax.broadcasted_iota(
+        jnp.int32, (1,) * labels.ndim + (k_max,), labels.ndim)
+    onehot = (labels[..., None] == ks).astype(jnp.int32)
+    scores = jnp.sum(onehot, axis=-2)
+    deg = jnp.sum((labels >= 0).astype(jnp.int32), axis=-1, keepdims=True)
+    return scores, deg

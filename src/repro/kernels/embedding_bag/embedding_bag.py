@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import resolve_interpret
+
 
 def _bag_kernel(idx_ref, table_ref, out_ref, *, n_slots: int, mean: bool):
     b = pl.program_id(0)
@@ -50,9 +52,10 @@ def embedding_bag(
     *,
     mode: str = "sum",    # 'sum' | 'mean'
     block_d: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """(B, D) bag-reduced embeddings."""
+    interpret = resolve_interpret(interpret)
     v, d = table.shape
     bsz, l = indices.shape
     bd = min(block_d, d)

@@ -11,7 +11,8 @@ Covers the attention variants of the assigned LM archs:
 TPU adaptation: HBM→VMEM tiles of (block_q × d) and (block_k × d); the
 running max/denominator/accumulator live in VMEM scratch across the
 innermost (kv) grid axis; the two matmuls hit the MXU with d and block
-sizes kept multiples of 128 on real hardware (interpret=True here).
+sizes kept multiples of 128 on real hardware (interpret mode off TPU,
+resolved by repro.kernels.common.default_interpret).
 
 Forward only: training uses the XLA-differentiable reference path
 (``ref.py``), serving and the dry-run use this kernel's semantics. A
@@ -24,6 +25,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.common import resolve_interpret
 
 _NEG_INF = -1e30
 
@@ -95,8 +98,9 @@ def flash_attention(
     q_offset: int = 0,        # absolute position of q[0] (decode)
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     b, h, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     assert h % hkv == 0, "GQA requires H % Hkv == 0"

@@ -1,0 +1,279 @@
+"""Fused Pallas window chooser: gather→score→argmax→commit in ONE kernel.
+
+The mixed-window engine (`repro.core.windowed._window_mixed_lane`) walks a
+window of W events with a lax.scan whose carry includes a dense O(n) label
+journal: every slot re-gathers neighbour labels through HBM, scores them,
+runs the policy chooser, and scatters the decision back into the journal.
+That per-slot HBM round-trip is the remaining hot-path cost (ROADMAP "fuse
+the chooser").
+
+This kernel keeps the whole window resident in VMEM instead. The insight
+making that possible: *which* labels a slot can observe is choice-
+independent — presence, adjacency, freshness, and "which earlier slot last
+touched this vertex" depend only on the event structure, never on the
+partition decisions. So a cheap choice-independent prep pass
+(`ops._prepare_window`, batched XLA outside the kernel) reduces the O(n)
+journal to three window-local **touch tables**:
+
+* ``src_lbl[i, d]`` — the *committed* label of slot i's d-th score-source
+  vertex (−1 if absent/padded), gathered once;
+* ``touch[i, d]`` — the index of the last earlier slot that re-labelled
+  that vertex (−1 if none): the in-window label is then
+  ``w_label[touch[i, d]]``, a (W,) VMEM lookup;
+* a per-slot scalar row (event code, subject vertex, fresh/was/exists
+  flags, the subject's and deletion-peer's committed label + touch index).
+
+Inside the kernel a ``fori_loop`` carries only O(K) counters plus the
+(W,) ``w_label`` decision vector and a (K,) ``remap`` composing scale-in
+merges over committed labels — the score tile never leaves VMEM, and the
+policy chooser is the *same table* as the engines
+(``transition.make_table_chooser``: the ``make_chooser`` bodies with the
+single random draw precomputed by ``transition.rand_index_table``). Both
+knob bindings exist: static policy string (single runs) and traced
+policy_idx via lax.switch on a kernel scalar (sweep lanes, vmapped over
+the pallas_call).
+
+Bit-identity with `run_stream` (all policies, autoscale on, interleaved
+churn) is the contract — tests/test_fused_chooser.py; `ref.py` is the
+same slot step driven by lax.scan for kernel-vs-oracle triangulation.
+Interpret-mode policy and histogram masking come from
+`repro.kernels.common` (shared with `partition_affinity`).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import transition as tx
+from repro.core.windowed import SmallState
+from repro.graph.stream import EVENT_ADD, EVENT_DEL_VERTEX
+from repro.kernels.common import label_histogram, resolve_interpret
+
+# per-slot scalar row layout (ops._prepare_window packs, the kernel unpacks)
+EV_ET, EV_V, EV_FRESH, EV_WAS, EV_EXISTS = 0, 1, 2, 3, 4
+EV_VLBL, EV_VTOUCH, EV_ULBL, EV_UTOUCH = 5, 6, 7, 8
+EV_COLS = 9
+
+# scalar-counter vector layout (window in/out)
+SCAL_NP, SCAL_TOTAL, SCAL_CUT, SCAL_DENIED, SCAL_SCALE = 0, 1, 2, 3, 4
+SCAL_N = 5
+
+
+def _scale_in_touch(small: SmallState, w_label, remap, kn):
+    """transition.scale_in on the touch-table representation: the trigger
+    and counter merges are shared with the faithful engine
+    (`windowed._scale_in_journal`); only the relabel target differs — the
+    (W,) in-window decisions and the (K,) committed-label remap instead of
+    the O(n) journal. Future slots' w_label entries are −1 and src is
+    always a valid partition id, so the select cannot corrupt them."""
+    src, dst, do = tx.scale_in_trigger(small, kn)
+
+    def migrate(args):
+        sm, wl, rm = args
+        sm2 = sm._replace(
+            edge_load=sm.edge_load.at[dst].add(
+                sm.edge_load[src]).at[src].set(0),
+            vertex_count=sm.vertex_count.at[dst].add(
+                sm.vertex_count[src]).at[src].set(0),
+            active=sm.active.at[src].set(False),
+            num_partitions=sm.num_partitions - 1,
+            cut_edges=sm.cut_edges - sm.cut_matrix[src, dst],
+            cut_matrix=tx.merge_cut_matrix(sm.cut_matrix, src, dst),
+            scale_events=sm.scale_events + 1,
+        )
+        return sm2, jnp.where(wl == src, dst, wl), jnp.where(rm == src, dst, rm)
+
+    return jax.lax.cond(do, migrate, lambda a: a, (small, w_label, remap))
+
+
+def make_slot_step(*, k_max: int, n: int, choose, autoscaling: bool,
+                   dynamic: bool):
+    """One window slot on the touch-table representation.
+
+    ``choose`` is a ``transition.make_table_chooser`` chooser. The body
+    mirrors ``windowed._window_mixed_lane``'s scan step op-for-op (same
+    cores, same masked counter merge, same scale gates) with the journal
+    gathers replaced by touch-table lookups — the seam both the Pallas
+    kernel and the `ref.py` lax.scan oracle drive, so they cannot drift.
+    """
+
+    def slot_step(small: SmallState, w_label, remap, kn, do_scale, i,
+                  ev, src_lbl, touch, rand_row):
+        et = ev[EV_ET]
+        v = ev[EV_V]
+        fresh = ev[EV_FRESH] != 0
+        was = ev[EV_WAS] != 0
+        exists = ev[EV_EXISTS] != 0
+        add_i = et == EVENT_ADD
+        dv_i = et == EVENT_DEL_VERTEX
+
+        # --- scale-out before the ADD decision (faithful apply_add) ---
+        if autoscaling:
+            gate = add_i if not dynamic else add_i & do_scale
+            scaled = tx.scale_out(small, kn)
+            small = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(gate, a, b), scaled, small)
+
+        def label_at(lbl_c, touch_i):
+            """Current label: last in-window decision if touched, else the
+            committed label pushed through the scale-in remap."""
+            in_win = w_label[jnp.maximum(touch_i, 0)]
+            committed = jnp.where(lbl_c >= 0,
+                                  remap[jnp.maximum(lbl_c, 0)], -1)
+            return jnp.where(touch_i >= 0, in_win, committed)
+
+        # --- effective neighbour labels + affinity (paper Eq. 1) ---
+        eff = label_at(src_lbl, touch)                       # (D,)
+        sc_eff, deg_k = label_histogram(eff, k_max)
+        deg_eff = deg_k[0]
+        ridx = rand_row[jnp.maximum(small.num_partitions, 1) - 1]
+        p = choose(small, sc_eff, deg_eff, v, ridx, kn, n)
+        d_add = jnp.where(fresh, deg_eff, 0)
+        sc_a = jnp.where(fresh, sc_eff, 0)
+
+        # --- DEL_VERTEX / DEL_EDGE quantities (faithful cores) ---
+        vl = label_at(ev[EV_VLBL], ev[EV_VTOUCH])
+        ul = label_at(ev[EV_ULBL], ev[EV_UTOUCH])
+        p_dv = jnp.maximum(vl, 0)
+        d_dv = jnp.where(was, deg_eff, 0)
+        sc_d = jnp.where(was, sc_eff, 0)
+        pu = jnp.maximum(ul, 0)
+        e = exists.astype(jnp.int32)
+        cutdec = (exists & (p_dv != pu)).astype(jnp.int32)
+
+        # --- masked counter merge (one event type per slot ⇒ exact) ---
+        small = small._replace(
+            vertex_count=(small.vertex_count
+                          .at[p].add(fresh.astype(jnp.int32))
+                          .at[p_dv].add(-was.astype(jnp.int32))),
+            edge_load=((small.edge_load + sc_a - sc_d)
+                       .at[p].add(d_add).at[p_dv].add(-d_dv)
+                       .at[p_dv].add(-e).at[pu].add(-e)),
+            total_edges=small.total_edges + d_add - d_dv - e,
+            cut_edges=(small.cut_edges + (d_add - sc_a[p])
+                       - (d_dv - sc_d[p_dv]) - cutdec),
+            cut_matrix=(small.cut_matrix
+                        .at[p, :].add(sc_a).at[:, p].add(sc_a)
+                        .at[p_dv, :].add(-sc_d).at[:, p_dv].add(-sc_d)
+                        .at[p_dv, pu].add(-e).at[pu, p_dv].add(-e)),
+        )
+
+        # --- record the slot's label decision (add/dv touch the subject;
+        # del_edge leaves labels unchanged, so its slot stays -1 and no
+        # later touch index ever points at it) ---
+        new_lbl = jnp.where(add_i, jnp.where(fresh, p, vl),
+                            jnp.where(dv_i, -1, vl))
+        w_label = w_label.at[i].set(jnp.where(add_i | dv_i, new_lbl, -1))
+
+        # --- scale-in after DEL_VERTEX (faithful apply_del_vertex) ---
+        if autoscaling:
+            gate_dv = dv_i if not dynamic else dv_i & do_scale
+            small, w_label, remap = jax.lax.cond(
+                gate_dv,
+                lambda args: _scale_in_touch(args[0], args[1], args[2], kn),
+                lambda args: args,
+                (small, w_label, remap),
+            )
+        return small, w_label, remap, p
+
+    return slot_step
+
+
+def _read_small(active_ref, loads_ref, cutmat_ref, scal_ref) -> SmallState:
+    return SmallState(
+        active=active_ref[...] != 0,
+        edge_load=loads_ref[0, :],
+        vertex_count=loads_ref[1, :],
+        num_partitions=scal_ref[SCAL_NP],
+        total_edges=scal_ref[SCAL_TOTAL],
+        cut_edges=scal_ref[SCAL_CUT],
+        denied_scaleout=scal_ref[SCAL_DENIED],
+        scale_events=scal_ref[SCAL_SCALE],
+        cut_matrix=cutmat_ref[...],
+    )
+
+
+def _fused_kernel(ev_ref, srclbl_ref, touch_ref, rand_ref, active_ref,
+                  loads_ref, cutmat_ref, scal_ref, knobs_ref, flags_ref,
+                  wlabel_ref, psel_ref, remap_ref, active_o_ref, loads_o_ref,
+                  cutmat_o_ref, scal_o_ref, *, w: int, k_max: int, n: int,
+                  policy: str | None, balance_guard: str, autoscaling: bool,
+                  dynamic: bool):
+    """Single-program kernel: the whole window's refs live in VMEM; a
+    fori_loop walks the W slots carrying only O(K)+O(W) values. Policy
+    dispatch is static (trace-time table pick) when ``policy`` is a
+    string, else a lax.switch over the table on the ``flags`` scalar."""
+    kn = tx.Knobs(*(knobs_ref[j] for j in range(7)))
+    if policy is not None:
+        choose = tx.make_table_chooser(balance_guard, policy=policy)
+    else:
+        choose = tx.make_table_chooser(balance_guard,
+                                       policy_idx=flags_ref[0])
+    do_scale = flags_ref[1] != 0
+    slot_step = make_slot_step(k_max=k_max, n=n, choose=choose,
+                               autoscaling=autoscaling, dynamic=dynamic)
+
+    small0 = _read_small(active_ref, loads_ref, cutmat_ref, scal_ref)
+    w_label0 = jnp.full((w,), -1, jnp.int32)
+    remap0 = jnp.arange(k_max, dtype=jnp.int32)
+    psel0 = jnp.zeros((w,), jnp.int32)
+
+    def body(i, carry):
+        small, w_label, remap, psel = carry
+        small, w_label, remap, p = slot_step(
+            small, w_label, remap, kn, do_scale, i,
+            ev_ref[i, :], srclbl_ref[i, :], touch_ref[i, :], rand_ref[i, :])
+        return small, w_label, remap, psel.at[i].set(p)
+
+    small, w_label, remap, psel = jax.lax.fori_loop(
+        0, w, body, (small0, w_label0, remap0, psel0))
+
+    wlabel_ref[...] = w_label
+    psel_ref[...] = psel
+    remap_ref[...] = remap
+    active_o_ref[...] = small.active.astype(jnp.int32)
+    loads_o_ref[...] = jnp.stack([small.edge_load, small.vertex_count])
+    cutmat_o_ref[...] = small.cut_matrix
+    scal_o_ref[...] = jnp.stack([
+        small.num_partitions, small.total_edges, small.cut_edges,
+        small.denied_scaleout, small.scale_events])
+
+
+def fused_window_choose(ev, src_lbl, touch, rand_tab, active, edge_load,
+                        vertex_count, cut_matrix, scalars, knobs, flags, *,
+                        n: int, policy: str | None, balance_guard: str,
+                        autoscaling: bool, dynamic: bool,
+                        interpret: bool | None = None):
+    """One pallas_call for one whole window.
+
+    Inputs are the prep tables (`ops._prepare_window`), the per-slot random
+    table (`transition.rand_index_table`), and the O(K) counter slice;
+    outputs are (w_label, p_sel, remap, active, loads, cut_matrix,
+    scalars). ``interpret=None`` defers to
+    ``repro.kernels.common.default_interpret``. vmap over this call is the
+    sweep's lane batching (pallas_call lifts the batch to a grid axis).
+    """
+    interpret = resolve_interpret(interpret)
+    w = ev.shape[0]
+    k_max = int(rand_tab.shape[-1])
+    loads = jnp.stack([edge_load, vertex_count])
+    kernel = functools.partial(
+        _fused_kernel, w=w, k_max=k_max, n=n, policy=policy,
+        balance_guard=balance_guard, autoscaling=autoscaling, dynamic=dynamic)
+    return pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((w,), jnp.int32),            # w_label
+            jax.ShapeDtypeStruct((w,), jnp.int32),            # p_sel
+            jax.ShapeDtypeStruct((k_max,), jnp.int32),        # remap
+            jax.ShapeDtypeStruct((k_max,), jnp.int32),        # active
+            jax.ShapeDtypeStruct((2, k_max), jnp.int32),      # loads
+            jax.ShapeDtypeStruct((k_max, k_max), jnp.int32),  # cut_matrix
+            jax.ShapeDtypeStruct((SCAL_N,), jnp.int32),       # scalars
+        ],
+        interpret=interpret,
+    )(ev, src_lbl, touch, rand_tab, active.astype(jnp.int32), loads,
+      cut_matrix, scalars, knobs, flags)

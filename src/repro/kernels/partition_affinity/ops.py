@@ -14,7 +14,7 @@ def gather_labels(assignment, present, rows):
     return jnp.where(nb_present, assignment[safe], -1).astype(jnp.int32)
 
 
-def scores_for_state(state, rows, *, interpret: bool = True):
+def scores_for_state(state, rows, *, interpret: bool | None = None):
     """Drop-in for repro.core.windowed.committed_scores using the kernel.
 
     Tolerates in-window deletions: on churn streams the windowed driver
@@ -22,6 +22,9 @@ def scores_for_state(state, rows, *, interpret: bool = True):
     carry deletion holes — vertices with present=False but stale
     assignment entries. ``gather_labels`` masks those to -1 (scored as
     empty), matching the faithful engine's presence semantics.
+
+    ``interpret=None`` defers to ``repro.kernels.common.default_interpret``
+    (interpret mode off-TPU, real compile on TPU).
     """
     labels = gather_labels(state.assignment, state.present, rows)
     k_max = state.edge_load.shape[0]

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import label_histogram, resolve_interpret
+
 
 def _affinity_kernel(labels_ref, scores_ref, deg_ref, *, k_max: int):
     d_idx = pl.program_id(1)
@@ -34,11 +36,9 @@ def _affinity_kernel(labels_ref, scores_ref, deg_ref, *, k_max: int):
         deg_ref[...] = jnp.zeros_like(deg_ref)
 
     labels = labels_ref[...]                                  # (bW, bD) int32
-    ks = jax.lax.broadcasted_iota(jnp.int32, (1, 1, k_max), 2)
-    onehot = (labels[:, :, None] == ks).astype(jnp.int32)     # (bW, bD, K)
-    scores_ref[...] += jnp.sum(onehot, axis=1)                # (bW, K)
-    deg_ref[...] += jnp.sum((labels >= 0).astype(jnp.int32), axis=1,
-                            keepdims=True)                    # (bW, 1)
+    scores, deg = label_histogram(labels, k_max)              # shared masking
+    scores_ref[...] += scores                                 # (bW, K)
+    deg_ref[...] += deg                                       # (bW, 1)
 
 
 @functools.partial(
@@ -50,13 +50,15 @@ def partition_affinity(
     k_max: int,
     block_w: int = 128,
     block_d: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """(scores (W, K), deg (W,)) from neighbour partition labels (W, D).
 
-    ``interpret=True`` runs the kernel body on CPU (this container);
-    on TPU pass interpret=False.
+    ``interpret=None`` defers to ``repro.kernels.common.default_interpret``
+    — real Mosaic compile on a TPU backend, interpret mode elsewhere,
+    ``REPRO_PALLAS_INTERPRET`` overriding for debugging.
     """
+    interpret = resolve_interpret(interpret)
     w, d = labels.shape
     bw = min(block_w, w)
     bd = min(block_d, d)

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import resolve_interpret
+
 
 def _spmm_kernel(adj_ref, x_ref, out_ref, *, n_slots: int, mean: bool):
     i = pl.program_id(0)
@@ -49,9 +51,10 @@ def segment_spmm(
     *,
     mode: str = "sum",   # 'sum' | 'mean'
     block_f: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """(N, F) aggregated neighbour features."""
+    interpret = resolve_interpret(interpret)
     n, f = x.shape
     _, dmax = adj_ell.shape
     bf = min(block_f, f)

@@ -48,13 +48,21 @@ def make_lane_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
     return make_mesh_compat((n_devices,), ("lanes",))
 
 
-def shard_map_compat(f, mesh, in_specs, out_specs):
-    """jax.shard_map across jax versions (experimental until ~0.6)."""
+def shard_map_compat(f, mesh, in_specs, out_specs, check_rep=True):
+    """jax.shard_map across jax versions (experimental until ~0.6).
+
+    ``check_rep=False`` disables the replication checker — required when
+    the mapped body contains a ``pallas_call`` (the sweep runtime's fused
+    chooser lanes), which has no replication rule; lanes are
+    embarrassingly parallel so the check is vacuous there anyway.
+    """
+    kw = {} if check_rep else {"check_rep": False}
     if hasattr(jax, "shard_map"):
         return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs)
+                             out_specs=out_specs, **kw)
     from jax.experimental.shard_map import shard_map
-    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **kw)
 
 
 def mesh_devices(mesh: jax.sharding.Mesh) -> int:

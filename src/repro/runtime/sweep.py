@@ -60,6 +60,7 @@ from repro.core.geometry import Geometry, check_row_width
 from repro.core.state import PartitionState, init_state
 from repro.core.windowed import sweep_window_mixed
 from repro.graph.stream import EVENT_PAD, VertexStream, normalize_rows
+from repro.kernels.fused_chooser.ops import sweep_window_mixed_fused
 from repro.launch.mesh import make_lane_mesh, shard_map_compat
 
 
@@ -143,8 +144,18 @@ _JITTED = {
     "windowed": jax.jit(sweep_window_mixed,
                         static_argnames=_STATICS + ("window",),
                         donate_argnums=(0,)),
+    # the fused Pallas chooser lane-batched across lanes (vmap over
+    # pallas_call); bit-identical to "windowed", selected by use_kernel
+    "windowed_fused": jax.jit(
+        sweep_window_mixed_fused,
+        static_argnames=_STATICS + ("window", "interpret", "variant"),
+        donate_argnums=(0,)),
 }
-_KERNELS = {"scan": _scan_lanes, "windowed": sweep_window_mixed}
+_KERNELS = {
+    "scan": _scan_lanes,
+    "windowed": sweep_window_mixed,
+    "windowed_fused": sweep_window_mixed_fused,
+}
 
 
 @functools.lru_cache(maxsize=None)
@@ -159,13 +170,16 @@ def _sharded_kernel(kind: str, n_devices: int, balance_guard: str,
     stream_spec = P() if shared_stream else lanes
     kw = {"balance_guard": balance_guard, "autoscale_mode": autoscale_mode,
           "shared_stream": shared_stream}
-    if kind == "windowed":
+    if kind in ("windowed", "windowed_fused"):
         kw["window"] = window
     base = functools.partial(_KERNELS[kind], **kw)
     return jax.jit(shard_map_compat(
         base, mesh,
         in_specs=(lanes,) * 4 + (stream_spec,) * 3 + (P(),),
-        out_specs=lanes),
+        out_specs=lanes,
+        # pallas_call has no replication rule; lanes emit no collectives,
+        # so the checker is vacuous for every kind
+        check_rep=kind != "windowed_fused"),
         donate_argnums=(0,))
 
 
@@ -230,6 +244,7 @@ def _execute_sweep(
     engine: str = "scan",
     window: int = 256,
     shard: bool | None = None,
+    use_kernel: bool = False,
 ) -> list[SweepResult]:
     """Executor behind ``repro.api.Sweep`` (and the deprecated
     ``run_sweep`` shim): every (policy, cfg, seed) lane in one device
@@ -255,6 +270,11 @@ def _execute_sweep(
       shard iff more than one device exists; ``False`` forces the
       single-device vmapped path; ``True`` forces shard_map even on one
       device (exercises the padding path).
+    use_kernel: with ``engine="windowed"``, run the lanes through the
+      fused Pallas chooser (repro.kernels.fused_chooser) instead of the
+      XLA window kernel — bit-identical by contract, interpret mode off
+      TPU. Ignored for ``engine="scan"`` (the scan is the semantic
+      reference and stays XLA; ``Sweep._validate`` rejects the combo).
     """
     runs = [r if isinstance(r, SweepRun) else SweepRun(*r) for r in runs]
     if not runs:
@@ -267,6 +287,9 @@ def _execute_sweep(
         if any(r.cfg.autoscale and r.policy == "sdp" for r in runs)
         else "off"
     )
+
+    kind = ("windowed_fused" if engine == "windowed" and use_kernel
+            else engine)
 
     L = len(runs)
     lens = [s.num_events for s in streams]
@@ -293,14 +316,14 @@ def _execute_sweep(
             _pad_lanes(x, lane_pad) for x in (states, kns, pidx, auto))
         if not shared:
             et, vx, nb = (_pad_lanes(x, lane_pad) for x in (et, vx, nb))
-        call = _sharded_kernel(engine, ndev, cfg0.balance_guard,
+        call = _sharded_kernel(kind, ndev, cfg0.balance_guard,
                                autoscale_mode, shared, window)
     else:
         kw = {"balance_guard": cfg0.balance_guard,
               "autoscale_mode": autoscale_mode, "shared_stream": shared}
         if engine == "windowed":
             kw["window"] = window
-        call = functools.partial(_JITTED[engine], **kw)
+        call = functools.partial(_JITTED[kind], **kw)
 
     def ev_slice(a, sl):
         return a[sl] if shared else a[:, sl]

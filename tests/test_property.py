@@ -155,6 +155,31 @@ def test_grow_state_commutes_with_events(case, extra, policy):
         np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb), name)
 
 
+@given(churn_case(), st.sampled_from(
+    ["sdp", "greedy", "ldg", "fennel", "hash", "random"]),
+    st.sampled_from([8, 32, 64]))
+@settings(max_examples=10, deadline=None)
+def test_fused_chooser_equals_make_chooser(case, policy, window):
+    """The fused Pallas window chooser must agree bit-for-bit with the
+    faithful engine (whose decisions come from transition.make_chooser)
+    over random interleaved churn, for every policy — gather, scoring,
+    argmax tie-breaks, RNG table, touch-table apply, and the in-window
+    scale hooks all at once."""
+    from repro.core import run_stream_windowed
+    g, kwargs, cfg, seed = case
+    if policy != "sdp":
+        cfg = EngineConfig(k_max=cfg.k_max, k_init=cfg.k_max,
+                           max_cap=cfg.max_cap, autoscale=False)
+    s = gstream.interleaved_churn(g, **kwargs)
+    if s.num_events == 0:
+        return
+    a, _ = run_stream(s, policy=policy, cfg=cfg, seed=seed)
+    b = run_stream_windowed(s, policy=policy, cfg=cfg, seed=seed,
+                            window=window, use_kernel=True)
+    for fa, fb, name in zip(a, b, PartitionState._fields):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb), name)
+
+
 @given(random_graph(max_n=30), st.integers(2, 4), st.integers(0, 3))
 @settings(max_examples=15, deadline=None)
 def test_offline_partitioner_invariants(g, k, seed):
