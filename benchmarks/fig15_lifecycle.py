@@ -1,0 +1,188 @@
+"""Beyond-paper Fig. 15: the long-lived session lifecycle.
+
+fig13 priced the way UP (elastic growth); this is the way DOWN and back
+from the dead: a session grows to its peak tier, churn deletes most of
+the graph, ``compact()`` hands the peak buffers back (dense re-pack +
+tier drop, relabeling absorbed by the id map), and a crash is recovered
+from snapshot + journal replay (repro.runtime.recovery). Three questions
+priced per phase:
+
+* steady-state step time — the same update batches, measured at the
+  peak tier vs after the shrink (the post-shrink state is the same
+  graph, so any delta is pure geometry);
+* state footprint — device bytes at peak vs after compaction;
+* recovery — wall seconds from dead process to a caught-up session
+  (restore + replay of the journaled tail), vs re-feeding from scratch.
+
+Writes BENCH_lifecycle.json (mirrored to the repo root; CI bench-smoke
+runs and uploads it like fig12/fig13/fig14).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.api import Partitioner
+from repro.core import EngineConfig
+from repro.graph.stream import EVENT_ADD, EVENT_DEL_VERTEX
+from repro.runtime.recovery import CrashError, RecoverableSession
+
+WINDOW = 256
+CHUNK = 256          # events per measured feed
+STEADY_BATCHES = 12  # measured update batches per phase
+
+
+def _ring(lo, hi):
+    ids = np.arange(lo, hi, dtype=np.int32)
+    et = np.full(len(ids), EVENT_ADD, np.int32)
+    nb = np.stack([ids - 1, ids + 1], 1).astype(np.int32)
+    nb[0, 0], nb[-1, 1] = hi - 1, lo
+    return et, ids, nb
+
+
+def _dels(lo, hi):
+    ids = np.arange(lo, hi, dtype=np.int32)
+    return (np.full(len(ids), EVENT_DEL_VERTEX, np.int32), ids,
+            np.full((len(ids), 2), -1, np.int32))
+
+
+def _steady_batch(b, lo, hi):
+    """CHUNK re-adds of existing ring vertices over [lo, hi) — the
+    steady-state "update a vertex's neighbourhood" serving traffic."""
+    ids = np.arange(lo, hi, dtype=np.int32)
+    vx = np.resize(np.roll(ids, b), CHUNK).astype(np.int32)
+    nb = np.stack([vx - 1, vx + 1], 1).astype(np.int32)
+    nb[vx == lo, 0] = hi - 1
+    nb[vx == hi - 1, 1] = lo
+    return np.full(CHUNK, EVENT_ADD, np.int32), vx, nb
+
+
+def _steady(feed, sync, lo, hi) -> tuple[float, float]:
+    """Median / p90 seconds per steady-state batch."""
+    times = []
+    for b in range(STEADY_BATCHES + 2):     # +2 warmup (re-jit at new tier)
+        chunk = _steady_batch(b, lo, hi)
+        t0 = time.perf_counter()
+        feed(chunk)
+        sync()
+        times.append(time.perf_counter() - t0)
+    times = np.asarray(times[2:])
+    return float(np.median(times)), float(np.percentile(times, 90))
+
+
+def run(quick: bool = True) -> list:
+    peak = 2048 if quick else 8192
+    live_lo = peak - (128 if quick else 512)
+    cfg = EngineConfig(k_max=8, k_init=2, max_cap=10**9)
+    rows = []
+
+    with tempfile.TemporaryDirectory() as d:
+        part = Partitioner(cfg, seed=0, engine="windowed", window=WINDOW)
+        sess = RecoverableSession(part, d, snapshot_every=10**9)
+        # host-side log of everything fed, so the divergence check below
+        # can replay the EXACT event sequence (RNG is cursor-keyed)
+        log: list = []
+
+        def feed(chunk):
+            log.append(chunk)
+            sess.feed(chunk)
+
+        # -- grow to the peak tier ----------------------------------------
+        t0 = time.perf_counter()
+        feed(_ring(0, peak))
+        sess.sync()
+        grow_s = time.perf_counter() - t0
+        med, p90 = _steady(feed, sess.sync, live_lo, peak)
+        m = sess.metrics()
+        rows.append({"phase": "peak", "n": m["n"], "max_deg": m["max_deg"],
+                     "state_bytes": m["state_bytes"],
+                     "step_median_s": med, "step_p90_s": p90,
+                     "events_per_s": CHUNK / max(med, 1e-9),
+                     "phase_seconds": grow_s, "cursor": sess.cursor})
+
+        # -- churn away everything below live_lo, then reclaim ------------
+        t0 = time.perf_counter()
+        feed(_dels(0, live_lo))
+        sess.sync()
+        del_s = time.perf_counter() - t0
+        bytes_before = sess.metrics()["state_bytes"]
+        t0 = time.perf_counter()
+        sess.compact()                       # journaled; drops the tier
+        log.append("compact")
+        compact_s = time.perf_counter() - t0
+        med, p90 = _steady(feed, sess.sync, live_lo, peak)
+        m = sess.metrics()
+        assert m["n"] < peak, "compaction must drop the tier"
+        rows.append({"phase": "post_shrink", "n": m["n"],
+                     "max_deg": m["max_deg"],
+                     "state_bytes": m["state_bytes"],
+                     "step_median_s": med, "step_p90_s": p90,
+                     "events_per_s": CHUNK / max(med, 1e-9),
+                     "phase_seconds": del_s + compact_s,
+                     "compact_seconds": compact_s,
+                     "bytes_reclaimed": bytes_before - m["state_bytes"],
+                     "cursor": sess.cursor})
+
+        # -- crash + recover ----------------------------------------------
+        sess.checkpoint(blocking=True)
+        pre_crash_cursor = sess.cursor
+        # journal a tail past the snapshot, then die mid-feed (the
+        # crashing chunk is journaled but never executed — recovery must
+        # replay both)
+        feed(_ring(live_lo, peak))
+        sess.inject_crash_after = sess.cursor
+        try:
+            feed(_ring(live_lo, peak))
+        except CrashError:
+            pass
+        t0 = time.perf_counter()
+        sess2 = RecoverableSession.recover(d, cfg, seed=0,
+                                           engine="windowed", window=WINDOW)
+        sess2.sync()
+        recover_s = time.perf_counter() - t0
+        replayed = sess2.cursor - pre_crash_cursor
+        # the recovered session must match an uninterrupted replay of the
+        # logged event sequence — spot-check via the cut counter
+        ref = Partitioner(cfg, seed=0, engine="windowed", window=WINDOW)
+        t0 = time.perf_counter()
+        for item in log:
+            ref.compact() if item == "compact" else ref.feed(item)
+        ref.sync()
+        refeed_s = time.perf_counter() - t0
+        final_cut = int(np.asarray(sess2.state.cut_edges))
+        if final_cut != int(np.asarray(ref.state.cut_edges)):
+            raise AssertionError(
+                "recovered session diverged from the uninterrupted replay "
+                f"({final_cut} != {int(np.asarray(ref.state.cut_edges))})")
+        m = sess2.metrics()
+        rows.append({"phase": "recover", "n": m["n"],
+                     "max_deg": m["max_deg"],
+                     "state_bytes": m["state_bytes"],
+                     "recover_seconds": recover_s,
+                     "replayed_events": int(replayed),
+                     "refeed_from_scratch_seconds": refeed_s,
+                     "speedup_vs_refeed": refeed_s / max(recover_s, 1e-9),
+                     "matches_uninterrupted": True,
+                     "cursor": sess2.cursor})
+
+    C.save_rows("fig15_lifecycle", rows)
+    C.save_rows("BENCH_lifecycle", rows)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    d = {r["phase"]: r for r in rows}
+    pk, sh, rc = d["peak"], d["post_shrink"], d["recover"]
+    return [
+        f"fig15/lifecycle,{sh['step_median_s']:.4f},"
+        f"peak_step_s={pk['step_median_s']:.4f}"
+        f";bytes_peak={pk['state_bytes']};bytes_post_shrink="
+        f"{sh['state_bytes']}"
+        f";tier={pk['n']}->{sh['n']}"
+        f";recover_s={rc['recover_seconds']:.2f}"
+        f";recover_speedup_vs_refeed={rc['speedup_vs_refeed']:.1f}x"
+        f";replayed={rc['replayed_events']}"
+    ]

@@ -39,14 +39,15 @@ def main() -> int:
                             fig7_imbalance, fig8_npartitions, fig9_scaling,
                             fig10_time, fig11_sweep_scaling,
                             fig12_autoscale_churn, fig13_growth,
-                            fig14_serving, roofline)
+                            fig14_serving, fig15_lifecycle, roofline)
     mods = {
         "fig4": fig4_edgecut, "fig5": fig5_vs_offline,
         "fig6": fig6_dynamics, "fig7": fig7_imbalance,
         "fig8": fig8_npartitions, "fig9": fig9_scaling,
         "fig10": fig10_time, "fig11": fig11_sweep_scaling,
         "fig12": fig12_autoscale_churn, "fig13": fig13_growth,
-        "fig14": fig14_serving, "roofline": roofline,
+        "fig14": fig14_serving, "fig15": fig15_lifecycle,
+        "roofline": roofline,
     }
     only = [s for s in args.only.split(",") if s]
     failures = 0

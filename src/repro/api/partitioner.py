@@ -36,16 +36,35 @@ Guarantees:
   their geometry in metadata, and checkpoints that predate
   ``PartitionState.cut_matrix`` restore via ``fill_missing`` and are
   healed with ``recount_cut_matrix``.
-* **Elastic geometry.** The session's ``(n, max_deg)`` allocation is a
-  starting point, not a contract: ``feed()`` grows the state
-  (``repro.core.state.grow_state``) along power-of-two tiers whenever an
-  event references a vertex id or neighbour-row width beyond the current
-  geometry — a semantics no-op, so a session started tiny and grown on
-  demand stays bit-identical to one presized at the final geometry (see
-  repro.core.geometry; LDG is the one knob-level exception). Each tier
-  change re-jits the kernels (donation keeps reusing buffers within a
-  tier); ``grow_to()`` pre-sizes explicitly to pay one re-jit instead of
-  log-many.
+* **Elastic geometry — both directions.** The session's ``(n, max_deg)``
+  allocation is a starting point, not a contract: ``feed()`` grows the
+  state (``repro.core.state.grow_state``) along power-of-two tiers
+  whenever an event references a vertex id or neighbour-row width beyond
+  the current geometry — a semantics no-op, so a session started tiny
+  and grown on demand stays bit-identical to one presized at the final
+  geometry (see repro.core.geometry; LDG is the one knob-level
+  exception). Each tier change re-jits the kernels (donation keeps
+  reusing buffers within a tier); ``grow_to()`` pre-sizes explicitly to
+  pay one re-jit instead of log-many. Sessions also shrink:
+  ``compact()`` densely re-packs the live vertices to the smallest tier,
+  ``shrink_to()`` targets an exact geometry, and ``maybe_shrink()`` (or
+  ``auto_shrink=True``) applies the hysteretic ``shrink_tier`` policy so
+  a session that bulk-deleted most of its graph stops paying peak-tier
+  memory and compute. Every change is recorded in ``geometry_events``.
+
+External vs internal vertex ids
+-------------------------------
+A compaction may *relabel* vertices (dense re-pack via a permutation).
+The session hides that: callers keep using the original ("external") ids
+in events and queries, and the session maintains the external→internal
+map (persisted by ``snapshot()``/``restore()``), exposed as
+``to_internal``/``to_external``. Until the first relabeling compaction
+the map is the identity and costs nothing — pure truncation shrinks
+(``shrink_state``) preserve ids and never create a map. Relabeling is a
+semantics no-op for every policy except ``hash`` (which assigns by raw
+vertex id — relabel-compaction refuses it) and LDG's allocated-``n``
+capacity knob (the PR-5 caveat, which any geometry change already
+carries).
 """
 from __future__ import annotations
 
@@ -59,10 +78,12 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core import engine as eng
 from repro.core import windowed as wnd
 from repro.core.config import EngineConfig, POLICIES
-from repro.core.geometry import Geometry, geometry_of, grow_tier
+from repro.core.geometry import (
+    Geometry, geometry_of, grow_tier, next_pow2, shrink_tier,
+)
 from repro.core.state import (
-    PartitionState, grow_state, init_state, recount_cut_matrix,
-    state_metrics,
+    PartitionState, compact_state, grow_state, init_state, live_extent,
+    recount_cut_matrix, shrink_state, state_bytes, state_metrics,
 )
 from repro.core.transition import EventTrace
 from repro.graph.stream import (
@@ -149,13 +170,21 @@ class Partitioner:
         verified against). ``metrics()`` reports the split as
         ``kernel_windows`` vs ``fallback_windows`` so a session can tell
         how much of its stream actually rode the kernels.
+      auto_shrink: run the hysteretic ``maybe_shrink()`` check every
+        ``shrink_every`` ingested events, so a long-lived session whose
+        graph bulk-deleted drops back down the tiers without anyone
+        calling ``compact()``. Off by default — serving tiers usually
+        prefer the idle-window drain-compact (repro.api.serve).
+      shrink_every: event spacing of the ``auto_shrink`` checks (the
+        check itself syncs the device, so it is not free).
     """
 
     def __init__(self, cfg: EngineConfig | None = None, *,
                  n: int | None = None, max_deg: int | None = None,
                  policy: str = "sdp", seed: int = 0,
                  engine: str = "auto", window: int = 256,
-                 collect_trace: bool = False, use_kernel: bool = False):
+                 collect_trace: bool = False, use_kernel: bool = False,
+                 auto_shrink: bool = False, shrink_every: int = 4096):
         cfg = cfg or EngineConfig()
         if policy not in POLICIES:
             raise ValueError(
@@ -193,12 +222,27 @@ class Partitioner:
         else:
             self._score_fn = None
             self._mixed_fn = _mixed_donated
+        if shrink_every <= 0:
+            raise ValueError(
+                f"shrink_every={shrink_every} must be > 0: it is the "
+                "event spacing of the auto_shrink checks")
+        self.auto_shrink = bool(auto_shrink)
+        self.shrink_every = int(shrink_every)
         self._kernel_windows = 0
         self._fallback_windows = 0
         self._state = init_state(int(n or 1), int(max_deg or 1), cfg.k_max,
                                  cfg.k_init, seed)
         self._regeometries = 0
+        self._shrinks = 0
+        self._compactions = 0
+        self._last_shrink_check = 0
         self._cursor = 0
+        # external→internal vertex-id map (None = identity: no relabeling
+        # compaction has happened) and its dense inverse — see the module
+        # docstring's "External vs internal vertex ids"
+        self._ext2int: np.ndarray | None = None
+        self._int2ext: np.ndarray | None = None
+        self._geometry_events: list[dict] = []
         self._traces: list[EventTrace] = []
         self._managers: dict[str, CheckpointManager] = {}
 
@@ -223,12 +267,16 @@ class Partitioner:
 
     @property
     def n(self) -> int:
-        """Current vertex-universe allocation (grows, never shrinks)."""
+        """Current vertex-universe allocation (grows on demand, shrinks
+        via ``compact``/``shrink_to``/``maybe_shrink``). Internal slots —
+        after a relabeling compaction this is smaller than the external
+        id space (see ``to_internal``)."""
         return int(self._state.assignment.shape[0])
 
     @property
     def max_deg(self) -> int:
-        """Current neighbour-row width (grows, never shrinks)."""
+        """Current neighbour-row width (grows on demand, shrinks via
+        ``compact``/``shrink_to``/``maybe_shrink``)."""
         return int(self._state.adj.shape[1])
 
     @property
@@ -238,9 +286,19 @@ class Partitioner:
 
     @property
     def regeometries(self) -> int:
-        """How many times the state geometry grew (auto or ``grow_to``)
-        — each one re-jits the engine kernels for the new tier."""
+        """How many times the state geometry changed (grow, shrink or
+        tier-changing compact) — each one re-jits the engine kernels for
+        the new tier."""
         return self._regeometries
+
+    @property
+    def geometry_events(self) -> list[dict]:
+        """The session's geometry lifecycle trace: one
+        ``{"cursor", "kind", "from", "to"}`` dict per change, ``kind`` in
+        ``{"grow", "shrink", "compact", "restore"}`` and ``from``/``to``
+        the :class:`Geometry` before/after. ``compact`` entries are
+        same-tier re-packs; tier-dropping re-packs record ``shrink``."""
+        return list(self._geometry_events)
 
     @property
     def cursor(self) -> int:
@@ -254,18 +312,26 @@ class Partitioner:
 
     # -- geometry -----------------------------------------------------------
 
+    def _record_geometry(self, kind: str, before: Geometry,
+                         after: Geometry) -> None:
+        self._geometry_events.append(
+            {"cursor": self._cursor, "kind": kind,
+             "from": before, "to": after})
+
     def grow_to(self, n: int | None = None,
                 max_deg: int | None = None) -> "Partitioner":
         """Explicitly pre-size the session geometry (exact — no tier
         rounding: the caller knows the size). Grows the state to cover
         ``(n, max_deg)``; dimensions already covered are untouched, and
-        shrinking is never performed. Use before a large ``feed`` to pay
-        one re-jit instead of log-many tier doublings."""
+        shrinking is never performed (that is ``shrink_to``). Use before
+        a large ``feed`` to pay one re-jit instead of log-many tier
+        doublings."""
         cur = geometry_of(self._state)
         target = cur.union(Geometry(int(n or 1), int(max_deg or 1)))
         if target != cur:
             self._state = grow_state(self._state, target)
             self._regeometries += 1
+            self._record_geometry("grow", cur, target)
         return self
 
     def _ensure_geometry(self, required: Geometry) -> None:
@@ -275,8 +341,206 @@ class Partitioner:
         donation simply resumes at the new tier after one re-jit."""
         cur = geometry_of(self._state)
         if not cur.covers(required):
-            self._state = grow_state(self._state, grow_tier(cur, required))
+            target = grow_tier(cur, required)
+            self._state = grow_state(self._state, target)
             self._regeometries += 1
+            self._record_geometry("grow", cur, target)
+
+    def _repack_to(self, target: Geometry, kind: str) -> None:
+        """Move the (synced) state to ``target``, preferring the
+        id-preserving truncation (``shrink_state`` — no permutation, no
+        translation overhead afterwards) and falling back to the
+        relabeling dense re-pack (``compact_state``) when live content
+        sits above ``target.n``. Updates the id maps and the lifecycle
+        trace; callers guarantee ``target`` covers the packed extent."""
+        cur = geometry_of(self._state)
+        if target == cur:
+            return
+        _, prefix = live_extent(self._state)
+        if prefix.n <= target.n and prefix.max_deg <= target.max_deg:
+            self._state = shrink_state(self._state, target)
+        else:
+            if self.policy == "hash":
+                raise ValueError(
+                    "the 'hash' policy assigns by raw vertex id, so a "
+                    "relabeling compaction would change every future "
+                    "decision — only id-preserving shrinks are legal "
+                    "(shrink_to a geometry the current slot ids fit, or "
+                    "accept the current tier)")
+            self._state, perm = compact_state(self._state, target)
+            self._apply_perm(perm)
+        self._regeometries += 1
+        if kind == "shrink":
+            self._shrinks += 1
+        self._record_geometry(kind, cur, target)
+
+    def _apply_perm(self, perm: np.ndarray) -> None:
+        """Fold a relabeling permutation (old slot → new slot, -1 =
+        dropped) into the external→internal id maps. First relabel:
+        external ids ARE the old slots, so the map starts as ``perm``
+        itself."""
+        n_old = len(perm)
+        keep_idx = np.flatnonzero(perm >= 0).astype(np.int32)
+        if len(keep_idx) == n_old:
+            return  # nothing moved or dropped — still the identity
+        if self._ext2int is None:
+            self._ext2int = perm.astype(np.int32).copy()
+            self._int2ext = keep_idx
+        else:
+            self._int2ext = self._int2ext[keep_idx]
+            m = self._ext2int
+            valid = m >= 0
+            m[valid] = perm[m[valid]]
+            self._ext2int = m
+
+    def compact(self) -> "Partitioner":
+        """Densely re-pack the live vertices and drop to the smallest
+        power-of-two tier that holds them — the explicit "reclaim now"
+        seam (no hysteresis: the caller has decided). Prefers the
+        id-preserving truncation; otherwise relabels and maintains the
+        external-id map so ``feed``/``where``/``route`` keep speaking
+        original ids (see the module docstring). A semantics no-op
+        modulo that relabeling; counters are untouched. Syncs (it must
+        read the live content). Returns ``self``."""
+        self.sync()
+        cur = geometry_of(self._state)
+        packed, _ = live_extent(self._state)
+        target = Geometry(min(next_pow2(packed.n), cur.n),
+                          min(next_pow2(packed.max_deg), cur.max_deg),
+                          cur.k_max)
+        self._compactions += 1
+        self._repack_to(target, "shrink" if (target.n < cur.n
+                        or target.max_deg < cur.max_deg) else "compact")
+        return self
+
+    def shrink_to(self, n: int | None = None,
+                  max_deg: int | None = None) -> "Partitioner":
+        """Shrink the session geometry to exactly ``(n, max_deg)``
+        (omitted dimensions keep their current size) — the precise
+        counterpart of ``grow_to``. Truncates when the live slot ids
+        already fit, otherwise densely re-packs (relabeling, see
+        ``compact``). Raises if the live content cannot fit the target
+        even packed, or if a dimension would grow (use ``grow_to``)."""
+        self.sync()
+        cur = geometry_of(self._state)
+        target = Geometry(int(n if n is not None else cur.n),
+                          int(max_deg if max_deg is not None
+                              else cur.max_deg), cur.k_max)
+        if target.n > cur.n or target.max_deg > cur.max_deg:
+            raise ValueError(
+                f"shrink_to target (n={target.n}, max_deg={target.max_deg})"
+                f" exceeds the current geometry (n={cur.n}, "
+                f"max_deg={cur.max_deg}) — growing is grow_to's job")
+        packed, _ = live_extent(self._state)
+        if not Geometry(target.n, target.max_deg).covers(
+                Geometry(packed.n, packed.max_deg)):
+            raise ValueError(
+                f"live content needs (n={packed.n}, "
+                f"max_deg={packed.max_deg}) even densely packed — "
+                f"(n={target.n}, max_deg={target.max_deg}) cannot hold "
+                "this session")
+        self._repack_to(target, "shrink")
+        return self
+
+    def maybe_shrink(self, *, hysteresis: int = 4) -> bool:
+        """The auto-shrink check: apply ``repro.core.geometry.shrink_tier``
+        — shrink only when live content occupies at most
+        ``1/(2*hysteresis)`` of a dimension, landing at most half-full —
+        and re-pack if any dimension qualifies. Returns True iff the
+        geometry changed. Cheap when there is nothing to do: a one-scalar
+        device read gates the O(n·max_deg) host scan. This is what
+        ``auto_shrink=True`` runs every ``shrink_every`` events, and what
+        the serving tier runs in idle windows (repro.api.serve)."""
+        cur = geometry_of(self._state)
+        # gate on the present-count alone (an underestimate of the packed
+        # extent, so it can only produce false positives for the scan
+        # below, never a missed shrink of n; a max_deg-only shrink is
+        # deliberately not gated in — it rides along when n qualifies or
+        # when compact() is called explicitly)
+        n_present = int(jnp.sum(self._state.present))
+        if (n_present + 1) * 2 * hysteresis > cur.n:
+            return False
+        self.sync()
+        packed, _ = live_extent(self._state)
+        target = shrink_tier(cur, packed, hysteresis=hysteresis)
+        if target == cur:
+            return False
+        self._repack_to(target, "shrink")
+        return True
+
+    def place(self, device) -> "Partitioner":
+        """Move the session state onto ``device`` (a ``jax.Device``) via
+        a host round-trip — the single-session re-mesh path: after a
+        (simulated) device loss, a recovered or surviving session
+        continues on the replacement device bit-identically (placement
+        is not semantics). Syncs. Returns ``self``."""
+        self.sync()
+        host = jax.tree_util.tree_map(np.asarray, self._state)
+        self._state = jax.tree_util.tree_map(
+            lambda a: jax.device_put(a, device), host)
+        return self
+
+    # -- external ids -------------------------------------------------------
+
+    def to_internal(self, ids) -> np.ndarray:
+        """Map external (caller-facing, original) vertex ids to the
+        session's internal slot ids — the identity until a relabeling
+        compaction happens. Unknown or negative ids map to -1. Queries
+        against ``state.assignment`` must go through this (the serving
+        tier does: repro.api.serve.where_many)."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        if self._ext2int is None:
+            return ids.astype(np.int32)
+        m = self._ext2int
+        out = np.full(ids.shape, -1, np.int32)
+        ok = (ids >= 0) & (ids < len(m))
+        out[ok] = m[ids[ok]]
+        return out
+
+    def to_external(self, ids) -> np.ndarray:
+        """Inverse of ``to_internal``: internal slot ids back to the
+        external ids callers speak (identity until a relabeling
+        compaction). Out-of-range slots map to -1."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        if self._int2ext is None:
+            return ids.astype(np.int32)
+        m = self._int2ext
+        out = np.full(ids.shape, -1, np.int32)
+        ok = (ids >= 0) & (ids < len(m))
+        out[ok] = m[ids[ok]]
+        return out
+
+    def _translate(self, chunk: PreparedChunk) -> PreparedChunk:
+        """Rewrite a prepared chunk's external ids to internal slots,
+        allocating fresh slots (in first-appearance order — the property
+        that makes a journal replay allocate identically) for ids never
+        seen since the last relabeling. No-op while the map is the
+        identity."""
+        if self._ext2int is None:
+            return chunk
+        vx, nb = chunk.vertex, chunk.nbrs
+        # event-order first-appearance sequence: vertex before its row
+        seq = np.concatenate([vx[:, None], nb], axis=1).ravel()
+        seq = seq[seq >= 0].astype(np.int64)
+        m = self._ext2int
+        if seq.size:
+            mx = int(seq.max())
+            if mx >= len(m):
+                m = np.concatenate(
+                    [m, np.full(mx + 1 - len(m), -1, np.int32)])
+            unmapped = seq[m[seq] < 0]
+            if unmapped.size:
+                uniq, first = np.unique(unmapped, return_index=True)
+                order = uniq[np.argsort(first)].astype(np.int32)
+                base = len(self._int2ext)
+                m[order] = np.arange(base, base + len(order),
+                                     dtype=np.int32)
+                self._int2ext = np.concatenate([self._int2ext, order])
+            self._ext2int = m
+        vx_t = np.where(vx >= 0, m[np.clip(vx, 0, None)], -1).astype(np.int32)
+        nb_t = np.where(nb >= 0, m[np.clip(nb, 0, None)], -1).astype(np.int32)
+        return PreparedChunk(chunk.etype, vx_t, nb_t,
+                             required_geometry_of(vx_t, nb_t))
 
     # -- ingestion ----------------------------------------------------------
 
@@ -331,6 +595,9 @@ class Partitioner:
         asynchronous — the call returns once the work is enqueued, and
         the carried state is a future until ``sync()`` (or any host
         read) blocks on it."""
+        # external ids → internal slots (identity until a relabeling
+        # compaction; allocates slots for first-seen ids)
+        chunk = self._translate(chunk)
         # elastic: events beyond the current geometry grow the state
         # (tier-doubled) instead of raising — the session's shapes are a
         # starting point, not a contract
@@ -361,6 +628,10 @@ class Partitioner:
             # exactly instead of double-applying the finished slices
             self._cursor += end - t
             t = end
+        if self.auto_shrink and (self._cursor - self._last_shrink_check
+                                 >= self.shrink_every):
+            self._last_shrink_check = self._cursor
+            self.maybe_shrink()
         return self
 
     def _feed_scan(self, et, vx, nb):
@@ -419,6 +690,9 @@ class Partitioner:
         m["n"] = self.n
         m["max_deg"] = self.max_deg
         m["regeometries"] = self._regeometries
+        m["shrinks"] = self._shrinks
+        m["compactions"] = self._compactions
+        m["state_bytes"] = state_bytes(self._state)
         # kernel coverage: window dispatches that rode the Pallas kernels
         # vs the XLA fallback (scan slices count as one fallback unit) —
         # use_kernel=True with a large fallback share means the stream is
@@ -461,8 +735,17 @@ class Partitioner:
             self._managers[directory] = mgr
         else:
             mgr.keep = keep
-        mgr.maybe_save(self._cursor, self._state, blocking=blocking,
-                       geometry=geometry_of(self._state))
+        extras = {}
+        if self._ext2int is not None:
+            extras["ext2int"] = self._ext2int
+        if self._last_shrink_check:
+            # persist the auto-shrink cadence mark so a restored session
+            # checks at the same cursors the original would have
+            extras["shrink_mark"] = np.asarray([self._last_shrink_check],
+                                               np.int64)
+        mgr.save_now(self._cursor, self._state, blocking=blocking,
+                     geometry=geometry_of(self._state),
+                     extras=extras or None)
         return self._cursor
 
     def wait(self) -> None:
@@ -477,18 +760,23 @@ class Partitioner:
                 step: int | None = None, **kw) -> "Partitioner":
         """Resume a session from ``snapshot()`` output (default: latest
         step). The checkpoint's recorded geometry sizes the restore —
-        ``n``/``max_deg`` are only needed to pre-size *larger* (the
-        restored state is grown to cover them; requesting smaller than
-        the checkpoint raises — geometry never shrinks), or for
-        checkpoints so old their geometry cannot be inferred from the
-        leaf shapes. ``cfg.k_max`` larger than the checkpoint's likewise
-        grows the partition-slot headroom. Also restores bare
-        ``PartitionState`` checkpoints written by older code: states
-        that predate ``cut_matrix`` come back via ``fill_missing`` and
-        are healed with ``recount_cut_matrix``. ``cfg``/``policy``/
-        engine knobs are not stored in the checkpoint — pass the ones
-        the session ran with. Traces are not checkpointed; a restored
-        session's ``trace()`` covers post-restore events only.
+        ``n``/``max_deg`` pre-size *larger* (the restored state is grown
+        to cover them) or *smaller*: a peak-tier checkpoint restores
+        straight into a right-sized session via ``shrink_to`` (which
+        raises, with the packed extent, if the live content genuinely
+        cannot fit). They are also how checkpoints so old their geometry
+        cannot be inferred from the leaf shapes declare it.
+        ``cfg.k_max`` larger than the checkpoint's grows the
+        partition-slot headroom (smaller still raises — partition slots
+        are config-pinned). Also restores bare ``PartitionState``
+        checkpoints written by older code: states that predate
+        ``cut_matrix`` come back via ``fill_missing`` and are healed
+        with ``recount_cut_matrix``; the external-id map of a compacted
+        session rides in the checkpoint's extras channel and is restored
+        with it. ``cfg``/``policy``/engine knobs are not stored in the
+        checkpoint — pass the ones the session ran with. Traces are not
+        checkpointed; a restored session's ``trace()`` covers
+        post-restore events only.
         """
         cfg = cfg or EngineConfig()
         mgr = CheckpointManager(directory, interval=1)
@@ -504,19 +792,15 @@ class Partitioner:
                     "none could be inferred from its leaf shapes — pass "
                     "n= and max_deg= explicitly")
             ck = Geometry(int(n), int(max_deg), cfg.k_max)
-        if (n is not None and n < ck.n) \
-                or (max_deg is not None and max_deg < ck.max_deg):
-            raise ValueError(
-                f"checkpoint geometry (n={ck.n}, max_deg={ck.max_deg}) "
-                f"exceeds the requested session shapes (n={n}, "
-                f"max_deg={max_deg}): sessions grow, never shrink — "
-                "request at least the checkpoint geometry (or omit "
-                "n/max_deg to take it verbatim)")
         if cfg.k_max < (ck.k_max or 0):
             raise ValueError(
                 f"checkpoint was taken at k_max={ck.k_max} but "
                 f"cfg.k_max={cfg.k_max}: partition-slot shapes grow, "
                 "never shrink — raise cfg.k_max")
+        # restore at the union of the checkpoint and requested shapes,
+        # then shrink to any smaller requested dimensions below — the
+        # payload's leaf shapes dictate the initial restore size either
+        # way
         target = Geometry(max(int(n or 0), ck.n),
                           max(int(max_deg or 0), ck.max_deg), cfg.k_max)
         # build the session tier-minimal — its placeholder state is
@@ -544,4 +828,26 @@ class Partitioner:
             state = recount_cut_matrix(state)
         part._state = grow_state(state, target)
         part._cursor = int(step)
+        # the external-id map of a compacted session rides in the
+        # checkpoint's extras — rebuild its dense inverse
+        ext = mgr.extras(step)
+        if "ext2int" in ext:
+            e2i = np.asarray(ext["ext2int"], np.int32)
+            part._ext2int = e2i
+            valid = np.flatnonzero(e2i >= 0)
+            slots = int(e2i[valid].max()) + 1 if valid.size else 0
+            inv = np.full(slots, -1, np.int32)
+            inv[e2i[valid]] = valid.astype(np.int32)
+            part._int2ext = inv
+        if "shrink_mark" in ext:
+            part._last_shrink_check = int(np.asarray(ext["shrink_mark"])[0])
+        part._record_geometry("restore", ck, geometry_of(part._state))
+        want_n = int(n) if n is not None and n < target.n else None
+        want_d = int(max_deg) if max_deg is not None \
+            and max_deg < target.max_deg else None
+        if want_n is not None or want_d is not None:
+            # restoring into a smaller tier than the checkpoint was taken
+            # at: legal whenever the live content (packed) fits — a
+            # session snapshotted at its peak right-sizes on restore
+            part.shrink_to(n=want_n, max_deg=want_d)
         return part

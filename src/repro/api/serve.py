@@ -44,6 +44,13 @@ Design
   enqueue a small device gather ordered after the in-flight feeds, and
   block only on that gather's result. The ingest thread never stalls.
   Call ``flush()`` first for read-your-submits semantics.
+* **Reclaim in idle windows.** With ``idle_compact_s`` set, an ingest
+  lull of that many seconds runs one hysteresis-gated
+  ``Partitioner.maybe_shrink`` under the dispatch lock — churn-emptied
+  sessions hand their peak-tier buffers back without ever stalling live
+  traffic. ``drain_compact()`` is the explicit flush-then-compact seam
+  for planned lulls. Queries keep speaking original vertex ids across
+  any relabeling (``where_many`` routes through the session's id map).
 * **Bit-identity.** The service-fed final state is bit-identical to a
   synchronous whole-stream ``run_stream``/``feed`` of the same events in
   submission order — enforced by tests/test_api_serve.py and asserted by
@@ -114,12 +121,25 @@ class PartitionService:
         (submit sheds the chunk, returns ``False``).
       max_batch_events: cap on how many events one coalesced dispatch
         may contain (None = bounded only by the queue).
+      idle_compact_s: seconds of ingest silence after which the loop
+        runs one opportunistic ``Partitioner.maybe_shrink`` (hysteresis-
+        gated, so it is a cheap no-op unless churn left the state mostly
+        empty) — the drain-compact path for long-lived sessions: reclaim
+        happens in idle windows, never while traffic is arriving.
+        ``None`` (default) disables it. ``drain_compact()`` is the
+        explicit, unconditional counterpart.
       autostart: start the ingest thread immediately. Tests pass
         ``False`` to stage deterministic queue states, then ``start()``.
+
+    ``part`` may also be a ``repro.runtime.recovery.RecoverableSession``
+    — anything speaking the ``prepare``/``feed_prepared``/``sync``/
+    ``metrics``/``state``/``to_internal`` protocol serves identically
+    (that is how a crash-safe serving tier is assembled).
     """
 
     def __init__(self, part: Partitioner, *, max_pending_chunks: int = 8,
                  policy: str = "block", max_batch_events: int | None = None,
+                 idle_compact_s: float | None = None,
                  autostart: bool = True):
         if policy not in _POLICIES:
             raise ValueError(
@@ -133,10 +153,17 @@ class PartitionService:
             raise ValueError(
                 f"max_batch_events={max_batch_events} must be > 0 (or None "
                 "to coalesce everything queued)")
+        if idle_compact_s is not None and idle_compact_s <= 0:
+            raise ValueError(
+                f"idle_compact_s={idle_compact_s} must be > 0 (or None to "
+                "disable idle-window compaction)")
         self._part = part
         self.policy = policy
         self.max_pending_chunks = int(max_pending_chunks)
         self.max_batch_events = max_batch_events
+        self.idle_compact_s = idle_compact_s
+        self._idle_shrinks = 0
+        self._drain_compacts = 0
         self._queue: queue.Queue = queue.Queue(maxsize=max_pending_chunks)
         # serializes ingest-thread dispatch against query-side snapshot +
         # gather dispatch (held for microseconds; never across a device
@@ -291,11 +318,39 @@ class PartitionService:
         self._raise_pending()
         return self
 
+    def drain_compact(self, timeout: float | None = None) \
+            -> "PartitionService":
+        """Explicit drain-then-reclaim: ``flush()`` (every admitted chunk
+        ingested and executed), then densely re-pack the session to its
+        smallest tier (``Partitioner.compact``) under the dispatch lock.
+        The operational seam for planned idle windows — nightly lulls,
+        pre-snapshot right-sizing — where the hysteresis-gated automatic
+        paths are too shy. Queries keep answering in original ids
+        afterwards (the id map absorbs any relabeling)."""
+        self.flush(timeout)
+        with self._lock:
+            self._part.compact()
+            self._drain_compacts += 1
+        return self
+
     def _ingest_loop(self) -> None:
         try:
             prev_token = None
             while True:
-                item = self._queue.get()
+                try:
+                    # idle_compact_s=None blocks forever — the plain path
+                    item = self._queue.get(timeout=self.idle_compact_s)
+                except queue.Empty:
+                    # idle window: nothing arrived for idle_compact_s.
+                    # Let the device finish the last batch, then run one
+                    # hysteresis-gated shrink check under the dispatch
+                    # lock (queries wait out the repack, never race it)
+                    if prev_token is not None:
+                        jax.block_until_ready(prev_token)
+                    with self._lock:
+                        if self._part.maybe_shrink():
+                            self._idle_shrinks += 1
+                    continue
                 if item is _STOP:
                     break
                 # double buffering: coerce the first chunk while the
@@ -402,11 +457,18 @@ class PartitionService:
 
     def where_many(self, vs) -> np.ndarray:
         """Bulk lookup: one device gather for a batch of vertex ids —
-        (V,) int32 labels, -1 for absent/out-of-range ids."""
+        (V,) int32 labels, -1 for absent/out-of-range ids. Ids are the
+        caller's ORIGINAL ids: a relabeling compaction (``compact()`` /
+        idle shrink) moves vertices to new internal slots, and the
+        lookup routes through the session's id map (under the same lock
+        as the snapshot, so the map and the state it indexes are the
+        same version)."""
         vs = np.atleast_1d(np.asarray(vs, np.int32))
 
         def build(state):
-            ids = jnp.asarray(vs)
+            # external -> internal inside the locked region: unknown /
+            # never-fed ids come back -1 from the map and stay -1 here
+            ids = jnp.asarray(self._part.to_internal(vs))
             n = state.assignment.shape[0]
             safe = jnp.clip(ids, 0, n - 1)
             lab = state.assignment[safe]
@@ -470,6 +532,9 @@ class PartitionService:
                 "submit_blocked_s": self._submit_blocked_s,
                 "backpressure_policy": self.policy,
                 "max_pending_chunks": self.max_pending_chunks,
+                "idle_compact_s": self.idle_compact_s,
+                "idle_shrinks": self._idle_shrinks,
+                "drain_compacts": self._drain_compacts,
             }
         wall = None
         if self._t_start is not None:

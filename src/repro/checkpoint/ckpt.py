@@ -25,23 +25,32 @@ def _flatten(tree):
 
 
 def save_pytree(path: str, tree, *, step: int | None = None,
-                geometry=None) -> str:
+                geometry=None, extras=None) -> str:
     """Atomic save. Returns the final path.
 
     ``geometry`` (a ``repro.core.geometry.Geometry`` or mapping with
     n/max_deg/k_max) is recorded in the metadata so a restorer can size
-    its target — and grow it — without loading the payload."""
+    its target — and grow it — without loading the payload.
+
+    ``extras`` is an optional ``{name: array}`` of session-side arrays
+    that ride along OUTSIDE the pytree (so the restore-into-``like``
+    contract is untouched) — e.g. the external→internal id map a
+    compacted ``Partitioner`` needs to keep answering queries in
+    original vertex ids. Read back with :func:`checkpoint_extras`."""
     keys, vals, _ = _flatten(tree)
     if geometry is not None and hasattr(geometry, "_asdict"):
         geometry = dict(geometry._asdict())
-    meta = {"keys": keys, "step": step, "geometry": geometry}
+    extras = {str(k): np.asarray(v) for k, v in (extras or {}).items()}
+    meta = {"keys": keys, "step": step, "geometry": geometry,
+            "extras": sorted(extras)}
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                suffix=".tmp")
     os.close(fd)
     try:
         with open(tmp, "wb") as f:
-            np.savez(f, **{f"a{i}": v for i, v in enumerate(vals)})
+            np.savez(f, **{f"a{i}": v for i, v in enumerate(vals)},
+                     **{f"x_{k}": v for k, v in extras.items()})
         with open(tmp + ".meta", "wb") as f:
             f.write(msgpack.packb(meta))
         os.replace(tmp, path)
@@ -83,6 +92,20 @@ def restore_pytree(path: str, like, *, shardings=None, fill_missing=False):
     else:
         out = [jnp.asarray(v.astype(l.dtype)) for v, l in zip(vals, flat_like)]
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def checkpoint_extras(path: str) -> dict[str, np.ndarray]:
+    """The ``extras`` arrays saved alongside a checkpoint (empty dict if
+    none were recorded or the checkpoint predates the channel)."""
+    try:
+        with open(path + ".meta", "rb") as f:
+            names = msgpack.unpackb(f.read()).get("extras") or []
+    except FileNotFoundError:
+        return {}
+    if not names:
+        return {}
+    data = np.load(path)
+    return {k: data[f"x_{k}"] for k in names}
 
 
 def checkpoint_step(path: str) -> int | None:

@@ -22,16 +22,27 @@ import jax
 import numpy as np
 
 from repro.checkpoint.ckpt import (
-    checkpoint_geometry, checkpoint_keys, restore_pytree, save_pytree,
+    checkpoint_extras, checkpoint_geometry, checkpoint_keys, restore_pytree,
+    save_pytree,
 )
 
 
 class CheckpointManager:
     def __init__(self, directory: str, *, interval: int = 100, keep: int = 3,
-                 straggler_factor: float = 3.0):
+                 keep_last: int | None = None, straggler_factor: float = 3.0):
+        """``keep``/``keep_last`` (synonyms; ``keep_last`` wins when both
+        are given) bound the retained snapshots: every save garbage-
+        collects all but the newest N — the retention policy that stops a
+        long-lived session's periodic snapshots from growing the
+        directory without bound."""
         self.dir = directory
         self.interval = interval
-        self.keep = keep
+        self.keep = int(keep if keep_last is None else keep_last)
+        if self.keep < 1:
+            raise ValueError(
+                f"keep_last={self.keep} must be >= 1: retaining zero "
+                "checkpoints would garbage-collect the snapshot that was "
+                "just written")
         self.straggler_factor = straggler_factor
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
@@ -56,14 +67,29 @@ class CheckpointManager:
         return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
 
     def maybe_save(self, step: int, tree, *, blocking: bool = False,
-                   geometry=None):
+                   geometry=None, extras=None):
+        """Interval-gated save: a silent no-op (returns False) unless
+        ``step`` is a multiple of ``interval``. Callers that need THIS
+        step on disk — pre-rescale migration, recovery snapshots at
+        arbitrary event cursors — use :meth:`save_now` instead."""
         if step % self.interval != 0:
             return False
+        self.save_now(step, tree, blocking=blocking, geometry=geometry,
+                      extras=extras)
+        return True
+
+    def save_now(self, step: int, tree, *, blocking: bool = False,
+                 geometry=None, extras=None) -> int:
+        """Unconditional save of ``tree`` at ``step`` (no interval gate),
+        with the same async/atomic/retention behaviour as
+        ``maybe_save``. The tree is host-snapshotted synchronously before
+        the call returns, so a caller may mutate (or donate) the live
+        state immediately after. Returns ``step``."""
         host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
 
         def work():
             save_pytree(self._path(step), host_tree, step=step,
-                        geometry=geometry)
+                        geometry=geometry, extras=extras)
             self._gc()
 
         if self._thread is not None:
@@ -74,7 +100,7 @@ class CheckpointManager:
         else:
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
-        return True
+        return step
 
     def wait(self):
         if self._thread is not None:
@@ -119,6 +145,16 @@ class CheckpointManager:
         if step is None:
             return None
         return checkpoint_geometry(self._path(step))
+
+    def extras(self, step: int | None = None) -> dict:
+        """The ``extras`` arrays saved with the checkpoint at ``step``
+        (default: latest; empty dict when none) — the side channel a
+        compacted session's id map rides in (see
+        repro.checkpoint.ckpt.save_pytree)."""
+        step = step if step is not None else self.latest()
+        if step is None:
+            return {}
+        return checkpoint_extras(self._path(step))
 
     def restore(self, like, *, step: int | None = None, shardings=None,
                 fill_missing=False):

@@ -1,8 +1,11 @@
 """SDP core: the paper's contribution as a composable JAX module."""
 from repro.core.config import EngineConfig, POLICIES
-from repro.core.geometry import Geometry, geometry_of, grow_tier, next_pow2
+from repro.core.geometry import (
+    Geometry, geometry_of, grow_tier, next_pow2, shrink_tier,
+)
 from repro.core.state import (
-    PartitionState, grow_state, init_state, recount_cut_matrix, state_metrics,
+    PartitionState, compact_state, grow_state, init_state, live_extent,
+    recount_cut_matrix, shrink_state, state_bytes, state_metrics,
 )
 from repro.core.engine import run_events, run_stream, trace_at, EventTrace
 from repro.core.windowed import (
@@ -17,8 +20,9 @@ from repro.core.ref import run_reference
 
 __all__ = [
     "EngineConfig", "POLICIES", "PartitionState", "init_state",
-    "Geometry", "geometry_of", "grow_tier", "next_pow2", "grow_state",
-    "recount_cut_matrix", "state_metrics",
+    "Geometry", "geometry_of", "grow_tier", "next_pow2", "shrink_tier",
+    "grow_state", "shrink_state", "compact_state", "state_bytes",
+    "live_extent", "recount_cut_matrix", "state_metrics",
     "run_events", "run_stream", "trace_at", "EventTrace",
     "run_stream_windowed", "run_window_adds", "run_window_mixed",
     "recompute_counters", "edge_cut_ratio", "load_imbalance",

@@ -48,6 +48,18 @@ dimension jumps to ``next_pow2(max(required, 2 * current))``. A session
 fed a stream of unknown size therefore re-jits O(log n) times total, and
 donation keeps reusing buffers within a tier. Explicit pre-sizing
 (``Partitioner.grow_to``) is exact — the caller knows the size.
+
+Shrinking is the inverse move with deliberate asymmetry
+(:func:`shrink_tier`): a dimension shrinks only when the live content
+occupies at most ``1 / (2 * hysteresis)`` of the current allocation
+(default hysteresis=4 → below ¼ of the next tier down), and the target
+``next_pow2(2 * required)`` lands at most half-full. Re-growing out of
+the new tier needs the content to more than double; re-shrinking out of
+it needs the content to fall below an eighth — growth and shrink bands
+never overlap, so churn around a tier boundary cannot thrash re-jits.
+``k_max`` never auto-shrinks (config-pinned, like growth). The state
+move itself is ``repro.core.state.shrink_state`` /
+``compact_state``.
 """
 from __future__ import annotations
 
@@ -112,6 +124,32 @@ def grow_tier(current: Geometry, required: Geometry) -> Geometry:
         k = required.k_max
     return Geometry(dim(current.n, required.n),
                     dim(current.max_deg, required.max_deg), k)
+
+
+def shrink_tier(current: Geometry, required: Geometry, *,
+                hysteresis: int = 4) -> Geometry:
+    """The hysteretic shrink policy — the inverse of :func:`grow_tier`
+    (see module docstring). Each dimension whose live requirement has
+    fallen to ``1 / (2 * hysteresis)`` of the current allocation drops to
+    ``next_pow2(2 * required)`` (at most half-full at the new tier);
+    everything else keeps its current size. ``k_max`` is config-pinned
+    and never auto-shrinks. Returns a geometry ``current`` covers, equal
+    to ``current`` when nothing qualifies."""
+    if hysteresis < 2:
+        raise ValueError(
+            f"hysteresis={hysteresis} must be >= 2: at 1 the shrink "
+            "target is exactly the growth trigger, so a stream oscillating"
+            " around a tier boundary would re-jit every window")
+
+    def dim(cur: int, req: int) -> int:
+        req = max(int(req), 1)
+        if req * 2 * hysteresis > cur:
+            return cur
+        return next_pow2(2 * req)
+
+    return Geometry(dim(current.n, required.n),
+                    dim(current.max_deg, required.max_deg),
+                    current.k_max)
 
 
 def check_row_width(state, nbrs) -> None:

@@ -6,13 +6,16 @@ graph summary (Alg. 2)        -> edge_load / vertex_count / totals
 """
 from __future__ import annotations
 
+import contextlib
+import functools
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.geometry import Geometry
+from repro.core.geometry import Geometry, geometry_of
 
 
 class PartitionState(NamedTuple):
@@ -92,6 +95,177 @@ def grow_state(state: PartitionState, geom: Geometry) -> PartitionState:
         active=jnp.pad(state.active, (0, dk)),
         cut_matrix=jnp.pad(state.cut_matrix, ((0, dk), (0, dk))),
     )
+
+
+@functools.partial(jax.jit, static_argnames=("geom",), donate_argnums=(0,))
+def _apply_repack(state: PartitionState, keep_idx, entry_map,
+                  geom: Geometry) -> PartitionState:
+    """Device half of compact/shrink: gather the kept vertex slots into a
+    dense ``(geom.n, geom.max_deg)`` layout and relabel every adjacency
+    entry through ``entry_map`` (old slot id → new slot id, -1 dropped).
+    ``keep_idx[new] = old`` (-1 = fresh padding slot). Donated: the old
+    tier's buffers are released to XLA the moment the repack dispatches,
+    so a tier transition never holds peak+target+scratch states live —
+    the capacity-aware half of the shrink story."""
+    n_old, d_old = state.adj.shape
+    valid = keep_idx >= 0
+    src = jnp.where(valid, keep_idx, 0)
+    present = valid & state.present[src]
+    rows = state.adj[src]
+    rows = (rows[:, :geom.max_deg] if geom.max_deg <= d_old else jnp.pad(
+        rows, ((0, 0), (0, geom.max_deg - d_old)), constant_values=-1))
+    ent = entry_map[jnp.clip(rows, 0, n_old - 1)]
+    # scrub: absent slots' rows are stale history (the deletion cores
+    # never clear them — they are masked by `present`), and relabeling
+    # would dangle them, so they leave the repack empty
+    rows = jnp.where(present[:, None] & (rows >= 0), ent, -1)
+    assignment = jnp.where(present, state.assignment[src], -1)
+    return state._replace(assignment=assignment, present=present, adj=rows)
+
+
+@contextlib.contextmanager
+def _quiet_donation():
+    """A repack donates the old state so XLA frees the peak-tier buffers
+    immediately, but the n-sized leaves change shape, so they cannot be
+    aliased into the output — jax warns about exactly that. The early
+    free is the point; the warning is expected, not a bug."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
+
+
+def _present_extent(present: np.ndarray, adj: np.ndarray):
+    """Host scan of the semantically live content: the keep mask (present
+    slots plus every slot a present row references — deleted neighbours
+    keep their slot because the deletion cores leave them in survivors'
+    rows, and a re-add must find the same slot for the counters to keep
+    matching an uninterrupted run), and the tight (n, width) extent of
+    the present rows."""
+    keep = present.copy()
+    live_rows = adj[present] if present.any() else adj[:0]
+    refs = live_rows[live_rows >= 0]
+    if refs.size:
+        keep[refs] = True
+    cols = np.flatnonzero((live_rows >= 0).any(axis=0))
+    width = int(cols[-1]) + 1 if cols.size else 1
+    return keep, width
+
+
+def compact_state(state: PartitionState,
+                  geom: Geometry | None = None
+                  ) -> tuple[PartitionState, np.ndarray]:
+    """Dense re-pack of the live vertex slots — the relabel-aware shrink.
+
+    Keeps every present slot and every slot referenced by a present
+    adjacency row (see ``_present_extent``), packs them in ascending-id
+    order at the front of a ``geom``-sized state (default: the tight
+    extent), and relabels all adjacency entries accordingly. Returns
+    ``(new_state, perm)`` with ``perm[old_id] = new_id`` (-1 = dropped).
+
+    Semantics: every transition core is invariant under this relabeling —
+    scores, counters, scale decisions and the cursor-keyed RNG depend on
+    presence, adjacency *structure* and the event index, never on the
+    slot numbers themselves — so a compacted session remains bit-identical
+    to the uninterrupted run modulo ``perm``. Two documented exceptions
+    (repro.core.geometry): the ``hash`` policy assigns by raw vertex id,
+    and LDG's capacity knob reads the allocated ``n``. Callers keep the
+    inverse of ``perm`` to answer queries in original ids
+    (``repro.api.Partitioner.compact``).
+
+    Counters (edge_load, cut_matrix, totals, key, …) pass through
+    untouched; absent slots' stale rows are scrubbed. The device gather
+    donates the old state, so the transition releases the peak-tier
+    buffers immediately."""
+    present = np.asarray(state.present)
+    adj = np.asarray(state.adj)
+    cur = geometry_of(state)
+    keep, width = _present_extent(present, adj)
+    keep_idx = np.flatnonzero(keep).astype(np.int32)
+    tight = Geometry(max(len(keep_idx), 1), width)
+    if geom is None:
+        geom = tight
+    if geom.k_max is not None and int(geom.k_max) != cur.k_max:
+        raise ValueError(
+            f"compact_state cannot change k_max (state has {cur.k_max}, "
+            f"requested {geom.k_max}): partition-slot geometry is "
+            "config-pinned — grow it via restore with a larger cfg.k_max")
+    if not Geometry(geom.n, geom.max_deg).covers(tight):
+        raise ValueError(
+            f"live content needs (n={tight.n}, max_deg={tight.max_deg}) "
+            f"— {len(keep_idx)} slots are present or referenced by a "
+            f"present row — but the requested geometry is (n={geom.n}, "
+            f"max_deg={geom.max_deg})")
+    perm = np.full(cur.n, -1, np.int32)
+    perm[keep_idx] = np.arange(len(keep_idx), dtype=np.int32)
+    pad = np.full(int(geom.n) - len(keep_idx), -1, np.int32)
+    with _quiet_donation():
+        new = _apply_repack(
+            state, jnp.asarray(np.concatenate([keep_idx, pad])),
+            jnp.asarray(perm),
+            Geometry(int(geom.n), int(geom.max_deg), cur.k_max))
+    return new, perm
+
+
+def shrink_state(state: PartitionState, geom: Geometry) -> PartitionState:
+    """Truncate ``state`` to the smaller ``geom`` without relabeling —
+    the exact inverse of ``grow_state``, legal only when the live content
+    already fits: no present slot, and no entry of a present row, at or
+    beyond ``geom.n``, and no present-row entry in columns >=
+    ``geom.max_deg``. Raises (pointing at ``compact_state``) otherwise.
+    Slot ids are preserved, so no permutation is involved; absent slots'
+    stale rows are scrubbed (they are semantics-free, see
+    ``compact_state``). ``geom.k_max`` must be None or unchanged."""
+    present = np.asarray(state.present)
+    adj = np.asarray(state.adj)
+    cur = geometry_of(state)
+    n1, d1 = int(geom.n), int(geom.max_deg)
+    if geom.k_max is not None and int(geom.k_max) != cur.k_max:
+        raise ValueError(
+            f"shrink_state cannot change k_max (state has {cur.k_max}, "
+            f"requested {geom.k_max}): partition-slot geometry is "
+            "config-pinned")
+    keep, width = _present_extent(present, adj)
+    hi = np.flatnonzero(present)
+    top = int(hi[-1]) + 1 if hi.size else 1
+    refs_top = int(np.flatnonzero(keep)[-1]) + 1 if keep.any() else 1
+    if max(top, refs_top) > n1 or width > d1:
+        raise ValueError(
+            f"live content reaches (n={max(top, refs_top)}, "
+            f"max_deg={width}) — beyond the requested (n={n1}, "
+            f"max_deg={d1}); slot ids are preserved by shrink_state, so "
+            "re-pack with compact_state to move high slots down first")
+    entry_map = np.concatenate([
+        np.arange(n1, dtype=np.int32),
+        np.full(max(cur.n - n1, 0), -1, np.int32)])
+    with _quiet_donation():
+        return _apply_repack(state, jnp.arange(n1, dtype=jnp.int32),
+                             jnp.asarray(entry_map),
+                             Geometry(n1, d1, cur.k_max))
+
+
+def live_extent(state: PartitionState) -> tuple[Geometry, Geometry]:
+    """``(packed, prefix)`` — the two tight geometries of the live
+    content. ``packed`` is what a dense re-pack (``compact_state``)
+    needs: kept-slot count × used row width. ``prefix`` preserves slot
+    ids (``shrink_state`` truncation): highest kept slot + 1 × the same
+    width. ``prefix.n >= packed.n`` always; equality means truncation
+    already achieves the dense packing and no relabel is needed."""
+    present = np.asarray(state.present)
+    adj = np.asarray(state.adj)
+    k = geometry_of(state).k_max
+    keep, width = _present_extent(present, adj)
+    idx = np.flatnonzero(keep)
+    packed = Geometry(max(len(idx), 1), width, k)
+    prefix = Geometry(int(idx[-1]) + 1 if idx.size else 1, width, k)
+    return packed, prefix
+
+
+def state_bytes(state: PartitionState) -> int:
+    """Total bytes of the state's device arrays — the memory the session
+    actually pays at its current geometry (what shrinking reclaims)."""
+    return int(sum(np.dtype(leaf.dtype).itemsize * int(np.prod(leaf.shape))
+                   for leaf in jax.tree_util.tree_leaves(state)))
 
 
 def recount_cut_matrix(state: PartitionState) -> PartitionState:

@@ -1,5 +1,12 @@
 """Distributed runtime: sharding rules, halo-sharded GNN, elastic re-mesh,
-and the device-sharded (policy × seed × config × stream) sweep engine."""
+crash-safe partitioning sessions (repro.runtime.recovery), and the
+device-sharded (policy × seed × config × stream) sweep engine."""
+from repro.runtime.recovery import (
+    CrashError, EventJournal, JournalEntry, RecoverableSession,
+)
 from repro.runtime.sweep import SweepResult, SweepRun, run_sweep, sweep_events
 
-__all__ = ["SweepResult", "SweepRun", "run_sweep", "sweep_events"]
+__all__ = [
+    "CrashError", "EventJournal", "JournalEntry", "RecoverableSession",
+    "SweepResult", "SweepRun", "run_sweep", "sweep_events",
+]

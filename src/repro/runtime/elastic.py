@@ -52,9 +52,12 @@ class ElasticRunner:
 
         Mirrors SDP scale-in: checkpoint (migrate), rebuild mesh (machine
         set), restore under new shardings (reassign load)."""
-        self.ckpt.maybe_save(state.step, {"params": state.params,
-                                          "opt": state.opt_state},
-                             blocking=True) or self.ckpt.wait()
+        # unconditional pre-rescale save: maybe_save is interval-gated and
+        # can silently skip this step, which would leave the transient
+        # host copy below as the only migration safety net
+        self.ckpt.save_now(state.step, {"params": state.params,
+                                        "opt": state.opt_state},
+                           blocking=True)
         host = {"params": jax.tree.map(np.asarray, state.params),
                 "opt": jax.tree.map(np.asarray, state.opt_state)}
         mesh = self.mesh_factory(devices)

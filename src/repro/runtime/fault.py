@@ -10,6 +10,11 @@ Policies implemented (designed for 1000+ nodes, exercised here in-process):
     the slow host — the SDP scale-in migration at the resource level);
   * a bounded retry budget so a persistently failing step aborts loudly
     instead of spinning.
+
+This loop is training-shaped (state in, batches through a ``step_fn``).
+For the *partitioning session* shape — an open-ended event stream into a
+``repro.api.Partitioner`` — the same policies live in
+``repro.runtime.recovery`` (journal + snapshot + bit-identical replay).
 """
 from __future__ import annotations
 
@@ -52,6 +57,10 @@ class FaultTolerantLoop:
                                     "err": repr(err)})
                 if self.retries > self.max_retries:
                     raise
+                # join any in-flight async save first: restoring while
+                # the background writer is mid-checkpoint can read a
+                # payload whose sidecar meta has not landed yet
+                self.ckpt.wait()
                 restored, rstep = self.ckpt.restore(like or state)
                 if restored is not None:
                     state, step = restored, rstep

@@ -152,10 +152,11 @@ def test_restore_pre_cut_matrix_checkpoint(tmp_path):
     _identical(ref, sess.state)
 
 
-def test_restore_grows_larger_rejects_smaller(tmp_path):
+def test_restore_grows_larger_rejects_impossible(tmp_path):
     """Restore takes its shapes from the checkpoint's recorded geometry:
     a larger requested geometry grows the restored state (semantics
-    no-op), a smaller one raises — sessions never shrink."""
+    no-op); a smaller one shrinks into it (PR 8) unless the live content
+    cannot fit even densely packed, which raises."""
     s, cfg = _churn_fixture()
     part = Partitioner.from_stream(s, cfg, seed=0)
     part.feed(s)
@@ -167,9 +168,8 @@ def test_restore_grows_larger_rejects_smaller(tmp_path):
     np.testing.assert_array_equal(np.asarray(part.state.assignment),
                                   np.asarray(big.state.assignment)[:s.n])
     assert not np.asarray(big.state.present)[s.n:].any()
-    with pytest.raises(ValueError, match="shrink"):
-        Partitioner.restore(str(tmp_path), cfg, n=s.n - 5,
-                            max_deg=s.max_deg)
+    with pytest.raises(ValueError, match="packed"):
+        Partitioner.restore(str(tmp_path), cfg, n=5, max_deg=s.max_deg)
     with pytest.raises(ValueError, match="k_max"):
         Partitioner.restore(
             str(tmp_path),

@@ -1,0 +1,165 @@
+"""Dedicated coverage for the runtime fault-tolerance building blocks
+(repro.runtime.fault / repro.runtime.elastic): retry budgets, straggler
+hooks, and the unconditional pre-rescale save — plus the forced-4-device
+rescale round trip (bit-identity under scale-in -> scale-out)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.fault import FaultTolerantLoop
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_subprocess(code: str) -> str:
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# FaultTolerantLoop
+# ---------------------------------------------------------------------------
+
+def test_poisoned_batch_restores_and_skips(tmp_path):
+    """One poisoned batch: restore the checkpointed state, skip it, and
+    the surviving batches all land (the good-path sum is exact)."""
+    m = CheckpointManager(str(tmp_path), interval=1)
+    loop = FaultTolerantLoop(m, max_retries=2)
+    batches = [1.0, 2.0, "poison", 4.0]
+
+    def step_fn(state, batch):
+        if batch == "poison":
+            raise RuntimeError("node failure")
+        return {"w": state["w"] + batch}, {}
+
+    state = {"w": jnp.zeros(2)}
+    final, steps = loop.run(state, iter(batches), step_fn, like=state)
+    np.testing.assert_array_equal(np.asarray(final["w"]), np.full(2, 7.0))
+    assert [e["event"] for e in loop.events] == ["failure"]
+    assert loop.retries == 0              # reset after the recovery
+
+
+def test_retry_budget_aborts_loudly(tmp_path):
+    """A persistently failing step must abort after max_retries, not
+    spin forever on restore-and-retry."""
+    m = CheckpointManager(str(tmp_path), interval=1)
+    loop = FaultTolerantLoop(m, max_retries=3)
+
+    def step_fn(state, batch):
+        raise RuntimeError("hard failure")
+
+    state = {"w": jnp.zeros(2)}
+    with pytest.raises(RuntimeError, match="hard failure"):
+        loop.run(state, iter([1.0] * 10), step_fn, like=state)
+    failures = [e for e in loop.events if e["event"] == "failure"]
+    assert len(failures) == loop.max_retries + 1   # budget, then abort
+
+
+def test_straggler_hook_fires_after_patience(tmp_path):
+    """Consecutive slow steps past the patience fire on_straggler once
+    and reset the streak (timing-free: the straggler oracle is driven
+    directly)."""
+    class Oracle(CheckpointManager):
+        slow_steps: set = set()
+
+        def is_straggler(self, seconds):
+            return self._now_step in self.slow_steps
+
+    m = Oracle(str(tmp_path), interval=10**9)
+    m.slow_steps = {2, 3, 5}            # 2 consecutive, then an isolated one
+    fired = []
+    loop = FaultTolerantLoop(m, straggler_patience=2,
+                             on_straggler=fired.append)
+
+    def step_fn(state, batch):
+        m._now_step = batch
+        return state, {}
+
+    loop.run({"w": jnp.zeros(1)}, iter(range(8)), step_fn)
+    assert fired == [3]                 # streak of 2 at steps 2,3; 5 alone
+    assert [e["step"] for e in loop.events
+            if e["event"] == "straggler"] == [2, 3, 5]
+
+
+# ---------------------------------------------------------------------------
+# ElasticRunner
+# ---------------------------------------------------------------------------
+
+def test_rescale_saves_unconditionally(tmp_path):
+    """The pre-rescale migration save must not be interval-gated: with
+    interval far beyond the step, the checkpoint still lands before the
+    mesh swap (a failed rescale can always fall back to disk)."""
+    import jax
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.runtime.elastic import ElasticRunner
+
+    def mesh_factory(devices):
+        return Mesh(np.asarray(devices).reshape(len(devices)), ("data",))
+
+    def shardings_fn(mesh, tree):
+        return jax.tree.map(lambda x: NamedSharding(mesh, P()), tree,
+                            is_leaf=lambda x: hasattr(x, "shape"))
+
+    m = CheckpointManager(str(tmp_path), interval=10**9)
+    runner = ElasticRunner(mesh_factory, shardings_fn, m)
+    st = runner.place(jax.devices()[:1], {"w": jnp.arange(4.0)},
+                      {"mu": jnp.zeros(4)}, step=7)
+    assert m.latest() is None
+    st2 = runner.rescale(st, jax.devices()[:1])
+    assert m.latest() == 7              # save_now, not maybe_save
+    np.testing.assert_array_equal(np.asarray(st2.params["w"]),
+                                  np.arange(4.0))
+
+
+RESCALE_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np, tempfile
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.elastic import ElasticRunner
+
+def mesh_factory(devices):
+    n = len(devices)
+    return jax.sharding.Mesh(np.asarray(devices).reshape(n, 1),
+                             ("data", "model"))
+
+def shardings_fn(mesh, tree):
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, P("data") if np.ndim(x) >= 1
+                                and np.shape(x)[0] % mesh.shape["data"] == 0
+                                else P()), tree,
+        is_leaf=lambda x: hasattr(x, "shape"))
+
+# bit-patterns that expose any lossy migration (denormals, -0.0, big ints)
+w = np.asarray([1e-39, -0.0, 3.14159, 2.0**31, -7.5, 1e38, 0.0, -1e-45] * 4,
+               np.float32)
+params = {"w": jnp.asarray(w)}
+opt = {"mu": jnp.asarray(w[::-1].copy())}
+with tempfile.TemporaryDirectory() as d:
+    runner = ElasticRunner(mesh_factory, shardings_fn,
+                           CheckpointManager(d, interval=1))
+    st = runner.place(jax.devices()[:4], params, opt, step=1)
+    st = runner.rescale(st, jax.devices()[:2])   # scale-in 4 -> 2
+    st = runner.rescale(st, jax.devices()[:4])   # scale-out 2 -> 4
+    assert np.asarray(st.params["w"]).tobytes() == w.tobytes()
+    assert np.asarray(st.opt_state["mu"]).tobytes() == \\
+        w[::-1].copy().tobytes()
+    assert st.mesh.shape["data"] == 4
+print("RESCALE_ROUNDTRIP_OK")
+"""
+
+
+def test_rescale_round_trip_bitwise_forced_4dev():
+    out = _run_subprocess(RESCALE_CODE)
+    assert "RESCALE_ROUNDTRIP_OK" in out

@@ -1,0 +1,257 @@
+"""Crash-safe long-lived sessions (repro.runtime.recovery): journal
+ordering/pruning, injected mid-stream crashes, a genuinely SIGKILLed
+process, and snapshot retention — recovery must rebuild the exact state
+the uninterrupted run would have reached (bit-identical, modulo the
+documented compaction relabel)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import Partitioner
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import EngineConfig, run_stream
+from repro.graph.generators import make_graph
+from repro.graph import stream as gstream
+from repro.runtime.recovery import (
+    CrashError, EventJournal, RecoverableSession,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _churn():
+    g = make_graph("social", 90, 260, seed=2)
+    s = gstream.interleaved_churn(g, warmup_frac=0.2, del_every=3,
+                                  edge_del_every=5, seed=4)
+    return s, EngineConfig(k_max=8, k_init=1, max_cap=100)
+
+
+def _identical_modulo_relabel(ref, sess, n):
+    ai = sess.to_internal(np.arange(n))
+    got = np.full(n, -1, np.int64)
+    got[ai >= 0] = np.asarray(sess.state.assignment)[ai[ai >= 0]]
+    pres = np.asarray(ref.present)
+    np.testing.assert_array_equal(np.asarray(ref.assignment)[pres],
+                                  got[:len(pres)][pres])
+    for f in ("num_partitions", "total_edges", "cut_edges",
+              "denied_scaleout", "scale_events"):
+        assert int(getattr(ref, f)) == int(getattr(sess.state, f)), f
+    np.testing.assert_array_equal(np.asarray(ref.edge_load),
+                                  np.asarray(sess.state.edge_load))
+
+
+# ---------------------------------------------------------------------------
+# the journal
+# ---------------------------------------------------------------------------
+
+def test_journal_order_reload_and_prune(tmp_path):
+    j = EventJournal(str(tmp_path))
+    j.append(0, [0, 0], [1, 2], [[2, -1], [1, -1]])
+    j.append_marker(2, "compact")        # same cursor as the next chunk...
+    j.append(2, [0], [3], [[1, 2]])      # ...but appended later
+    es = j.entries()
+    assert [(e.cursor, e.kind) for e in es] == \
+        [(0, "events"), (2, "compact"), (2, "events")]
+    et, vx, nb = j.load(es[2])
+    np.testing.assert_array_equal(vx, [3])
+    # a fresh handle (the recovering process) sees the same order and
+    # continues the sequence numbers instead of colliding
+    j2 = EventJournal(str(tmp_path))
+    assert [(e.cursor, e.kind) for e in j2.entries()] == \
+        [(0, "events"), (2, "compact"), (2, "events")]
+    j2.append_marker(3, "shrink")
+    assert j2.entries()[-1].kind == "shrink"
+    # prune below cursor 2: the fully-consumed chunk goes, the rest stays
+    assert j2.prune_below(2) == 1
+    assert [(e.cursor, e.kind) for e in j2.entries()] == \
+        [(2, "compact"), (2, "events"), (3, "shrink")]
+
+
+def test_journal_ignores_torn_writes(tmp_path):
+    j = EventJournal(str(tmp_path))
+    j.append(0, [0], [1], [[2, -1]])
+    # a crash mid-write leaves only a temp file — never a torn entry
+    with open(os.path.join(str(tmp_path), "tmpabc123.tmp"), "wb") as f:
+        f.write(b"half a npz")
+    assert len(j.entries()) == 1
+
+
+# ---------------------------------------------------------------------------
+# injected crash -> recover -> bit-identical
+# ---------------------------------------------------------------------------
+
+def test_crash_recover_finish_bit_identical(tmp_path):
+    """Crash at the worst-ordered point (chunk journaled, not fed), with
+    a relabeling compaction earlier in the stream; recover + finish ==
+    the run that never crashed."""
+    s, cfg = _churn()
+    ref, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    T = s.num_events
+
+    part = Partitioner.from_stream(s, cfg, seed=0, window=32)
+    sess = RecoverableSession(part, str(tmp_path), snapshot_every=40,
+                              inject_crash_after=85)
+    t, crashed = 0, False
+    try:
+        while t < T:
+            e = min(t + 20, T)
+            sess.feed((s.etype[t:e], s.vertex[t:e], s.nbrs[t:e]))
+            if t == 40:
+                sess.compact()
+            t = e
+    except CrashError:
+        crashed = True
+    assert crashed, "fixture must reach the injected crash point"
+    sess.wait()
+
+    sess2 = RecoverableSession.recover(str(tmp_path), cfg, window=32, seed=0)
+    assert sess2.cursor > 85, "replay must cover the journaled-unfed chunk"
+    t = sess2.cursor
+    while t < T:
+        e = min(t + 20, T)
+        sess2.feed((s.etype[t:e], s.vertex[t:e], s.nbrs[t:e]))
+        t = e
+    sess2.sync()
+    _identical_modulo_relabel(ref, sess2, s.n)
+    assert sess2.metrics()["cursor"] == T
+
+
+def test_recover_without_any_feed_tail(tmp_path):
+    """Crash exactly on a snapshot boundary: the journal tail is empty
+    and recovery is just the restore."""
+    s, cfg = _churn()
+    part = Partitioner.from_stream(s, cfg, seed=0, window=32)
+    sess = RecoverableSession(part, str(tmp_path), snapshot_every=10**9)
+    sess.feed(s)
+    sess.checkpoint(blocking=True)
+    sess.journal.prune_below(sess.cursor)
+    sess2 = RecoverableSession.recover(str(tmp_path), cfg, window=32, seed=0)
+    assert sess2.cursor == s.num_events
+    _identical_modulo_relabel(sess.sync().state, sess2, s.n)
+
+
+# ---------------------------------------------------------------------------
+# a real dead process: SIGKILL mid-stream, recover in this one
+# ---------------------------------------------------------------------------
+
+CHILD_CODE = """
+import os, signal
+import numpy as np
+from repro.api import Partitioner
+from repro.core import EngineConfig
+from repro.graph.generators import make_graph
+from repro.graph import stream as gstream
+from repro.runtime.recovery import RecoverableSession
+
+g = make_graph("social", 90, 260, seed=2)
+s = gstream.interleaved_churn(g, warmup_frac=0.2, del_every=3,
+                              edge_del_every=5, seed=4)
+cfg = EngineConfig(k_max=8, k_init=1, max_cap=100)
+part = Partitioner.from_stream(s, cfg, seed=0, window=32)
+sess = RecoverableSession(part, {d!r}, snapshot_every=30)
+t = 0
+while t < 80:
+    e = min(t + 20, 80)
+    sess.feed((s.etype[t:e], s.vertex[t:e], s.nbrs[t:e]))
+    t = e
+sess.wait()                       # snapshots on disk, journal written
+print("CHILD_FED", sess.cursor, flush=True)
+os.kill(os.getpid(), signal.SIGKILL)     # no atexit, no cleanup
+"""
+
+
+def test_sigkilled_process_recovers_bit_identical(tmp_path):
+    s, cfg = _churn()
+    ref, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c",
+         textwrap.dedent(CHILD_CODE).format(d=str(tmp_path))],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == -9, (out.returncode, out.stderr[-2000:])
+    assert "CHILD_FED 80" in out.stdout
+
+    sess = RecoverableSession.recover(str(tmp_path), cfg, window=32, seed=0)
+    assert sess.cursor == 80          # snapshot(60) + journal tail replayed
+    T = s.num_events
+    t = sess.cursor
+    while t < T:
+        e = min(t + 20, T)
+        sess.feed((s.etype[t:e], s.vertex[t:e], s.nbrs[t:e]))
+        t = e
+    sess.sync()
+    _identical_modulo_relabel(ref, sess, s.n)
+
+
+# ---------------------------------------------------------------------------
+# re-mesh on (simulated) device loss
+# ---------------------------------------------------------------------------
+
+def test_remesh_continues_bit_identical(tmp_path):
+    import jax
+    s, cfg = _churn()
+    ref, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    mid = s.num_events // 2
+    part = Partitioner.from_stream(s, cfg, seed=0, window=32)
+    sess = RecoverableSession(part, str(tmp_path))
+    sess.feed((s.etype[:mid], s.vertex[:mid], s.nbrs[:mid]))
+    devices = jax.devices()
+    sess.remesh(devices[-1])          # "device lost": move to a survivor
+    sess.feed((s.etype[mid:], s.vertex[mid:], s.nbrs[mid:]))
+    sess.sync()
+    _identical_modulo_relabel(ref, sess, s.n)
+
+
+# ---------------------------------------------------------------------------
+# retention: keep_last prunes snapshots AND the journal follows
+# ---------------------------------------------------------------------------
+
+def test_keep_last_prunes_and_latest_restores(tmp_path):
+    m = CheckpointManager(str(tmp_path), interval=1, keep_last=2)
+    import jax.numpy as jnp
+    for step in (3, 7, 11, 19):
+        m.save_now(step, {"w": jnp.full(4, step)}, blocking=True)
+    assert m._steps() == [11, 19]
+    assert not os.path.exists(os.path.join(str(tmp_path),
+                                           "ckpt_00000003.npz"))
+    restored, step = m.restore({"w": jnp.zeros(4)})
+    assert step == 19
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.full(4, 19))
+    with pytest.raises(ValueError, match="keep_last"):
+        CheckpointManager(str(tmp_path), keep_last=0)
+
+
+def test_session_snapshots_bound_disk(tmp_path):
+    """A long-lived session's periodic snapshots stay bounded: keep=2
+    retains two checkpoints and the journal is pruned to what the oldest
+    retained one needs."""
+    s, cfg = _churn()
+    part = Partitioner.from_stream(s, cfg, seed=0, window=32)
+    sess = RecoverableSession(part, str(tmp_path), snapshot_every=20,
+                              keep=2)
+    sess.feed(s)
+    sess.checkpoint(blocking=True)
+    mgr = CheckpointManager(str(tmp_path), interval=1)
+    steps = mgr._steps()
+    assert len(steps) <= 2
+    oldest = steps[0]
+    for e in sess.journal.entries():
+        if e.kind == "events":
+            T = int(np.load(e.path)["etype"].shape[0])
+            assert e.cursor + T > oldest      # nothing stale survived
+    # and the retained tail still recovers
+    sess2 = RecoverableSession.recover(str(tmp_path), cfg, window=32,
+                                       seed=0)
+    assert sess2.cursor == s.num_events
+    _identical_modulo_relabel(sess.sync().state, sess2, s.n)
+
+
+def test_validation():
+    s, cfg = _churn()
+    part = Partitioner.from_stream(s, cfg, seed=0)
+    with pytest.raises(ValueError, match="snapshot_every"):
+        RecoverableSession(part, "/tmp/x", snapshot_every=0)

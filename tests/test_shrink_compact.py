@@ -1,0 +1,264 @@
+"""Bidirectional elastic geometry (PR 8): ``shrink_tier`` hysteresis
+bands, ``compact_state``/``shrink_state`` semantics, and the session-level
+``compact()``/``shrink_to()``/``maybe_shrink()``/auto-shrink seams — every
+shrink path must be a semantics no-op modulo the documented relabeling,
+proven bit-identical against an uninterrupted ``run_stream``."""
+import numpy as np
+import pytest
+
+from repro.api import Partitioner
+from repro.core import (
+    EngineConfig, Geometry, compact_state, grow_tier, live_extent, next_pow2,
+    run_stream, shrink_state, shrink_tier, state_bytes,
+)
+from repro.core.geometry import geometry_of
+from repro.graph.generators import make_graph
+from repro.graph import stream as gstream
+from repro.graph.stream import EVENT_ADD, EVENT_DEL_VERTEX
+
+
+def _churn():
+    g = make_graph("social", 90, 260, seed=2)
+    s = gstream.interleaved_churn(g, warmup_frac=0.2, del_every=3,
+                                  edge_del_every=5, seed=4)
+    return s, EngineConfig(k_max=8, k_init=1, max_cap=100)
+
+
+def _ring(lo, hi):
+    """ADD events forming a cycle over ids [lo, hi) — max_deg 2."""
+    ids = np.arange(lo, hi, dtype=np.int32)
+    et = np.full(len(ids), EVENT_ADD, np.int32)
+    nb = np.stack([ids - 1, ids + 1], 1).astype(np.int32)
+    nb[0, 0], nb[-1, 1] = hi - 1, lo
+    return et, ids, nb
+
+
+def _dels(ids):
+    ids = np.asarray(ids, np.int32)
+    return (np.full(len(ids), EVENT_DEL_VERTEX, np.int32), ids,
+            np.full((len(ids), 2), -1, np.int32))
+
+
+def _cat(*chunks):
+    return tuple(np.concatenate(parts) for parts in zip(*chunks))
+
+
+# ---------------------------------------------------------------------------
+# shrink_tier: the hysteresis bands
+# ---------------------------------------------------------------------------
+
+def test_shrink_tier_bands():
+    cur = Geometry(1024, 64, 8)
+    # above 1/(2*hysteresis) occupancy: hold the tier
+    assert shrink_tier(cur, Geometry(129, 64)) == cur
+    assert shrink_tier(cur, Geometry(200, 40)) == cur
+    # at/below the band: land at next_pow2(2*req) — at most half-full
+    t = shrink_tier(cur, Geometry(100, 4))
+    assert t == Geometry(256, 8, 8)
+    assert t.n >= 2 * 100 and t.max_deg >= 2 * 4
+    # dimensions shrink independently
+    assert shrink_tier(cur, Geometry(500, 4)) == Geometry(1024, 8, 8)
+    # k_max is config-pinned: never auto-shrinks
+    assert shrink_tier(cur, Geometry(1, 1)).k_max == 8
+    with pytest.raises(ValueError, match="hysteresis"):
+        shrink_tier(cur, Geometry(1, 1), hysteresis=1)
+
+
+def test_shrink_grow_bands_never_overlap():
+    """No thrash: content that just triggered a shrink sits at <= half the
+    new tier, and content that just forced a growth sits above the shrink
+    band of the grown tier — one update can never bounce back."""
+    for n in (100, 129, 255, 500, 1000):
+        req = Geometry(n, 4)
+        shrunk = shrink_tier(Geometry(4096, 64, 8), req)
+        assert shrink_tier(shrunk, req) == shrunk          # stable point
+        grown = grow_tier(Geometry(1, 1, 8), req)
+        assert shrink_tier(grown, req) == grown
+
+
+# ---------------------------------------------------------------------------
+# compact_state / shrink_state
+# ---------------------------------------------------------------------------
+
+def test_compact_state_counters_bitwise_and_relabel():
+    s, cfg = _churn()
+    ref, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    # counters survive any repack bitwise; the donated input is consumed,
+    # so pull the reference values first
+    want = {f: np.asarray(getattr(ref, f)).copy()
+            for f in ("edge_load", "vertex_count", "active", "cut_matrix")}
+    want_sc = {f: int(getattr(ref, f)) for f in
+               ("num_partitions", "total_edges", "cut_edges",
+                "denied_scaleout", "scale_events")}
+    asg = np.asarray(ref.assignment).copy()
+    pres = np.asarray(ref.present).copy()
+    before = state_bytes(ref)
+    packed, _ = live_extent(ref)
+    st, perm = compact_state(ref)
+    # default target: smallest pow2 tier holding the packed content,
+    # capped at the current dims (a non-pow2 state never grows to "shrink")
+    assert geometry_of(st) == Geometry(min(next_pow2(packed.n), 90),
+                                       min(next_pow2(packed.max_deg), 64),
+                                       cfg.k_max)
+    assert geometry_of(st).covers(Geometry(packed.n, packed.max_deg))
+    assert state_bytes(st) <= before
+    for f, w in want.items():
+        np.testing.assert_array_equal(w, np.asarray(getattr(st, f)), f)
+    for f, w in want_sc.items():
+        assert w == int(getattr(st, f)), f
+    # the permutation carries every present vertex's label across
+    keep = perm >= 0
+    assert keep[pres].all()
+    np.testing.assert_array_equal(
+        asg[pres], np.asarray(st.assignment)[perm[pres]])
+    assert np.asarray(st.present)[perm[pres]].all()
+
+
+def test_shrink_state_truncates_or_points_at_compact():
+    et, vx, nb = _ring(0, 40)
+    cfg = EngineConfig(k_max=4, k_init=2, max_cap=10**6)
+    part = Partitioner(cfg, n=512, max_deg=8, seed=0).feed((et, vx, nb))
+    small = shrink_state(part.state, Geometry(64, 2, 4))
+    assert geometry_of(small) == Geometry(64, 2, 4)
+    assert int(np.asarray(small.present).sum()) == 40
+    # content beyond the target: truncation refuses and names the fix
+    part2 = Partitioner(cfg, n=512, max_deg=2, seed=0) \
+        .feed(_ring(100, 140))
+    with pytest.raises(ValueError, match="compact_state"):
+        shrink_state(part2.state, Geometry(64, 2, 4))
+
+
+# ---------------------------------------------------------------------------
+# session seams: compact / shrink_to / maybe_shrink / auto_shrink
+# ---------------------------------------------------------------------------
+
+def test_session_relabel_compact_bit_identical_modulo_relabel():
+    """Grow to a 1024 tier, churn most of it away, compact (relabels),
+    keep feeding ORIGINAL ids (re-adds of deleted ids, brand-new ids,
+    survivor edges): final state == uninterrupted run_stream of the
+    concatenated stream, modulo the id map."""
+    cfg = EngineConfig(k_max=4, k_init=2, max_cap=10**6)
+    head = _cat(_ring(0, 600), _dels(np.arange(0, 550)))
+    tail = _ring(540, 560)          # re-adds + survivors, original ids
+    et, vx, nb = _cat(head, tail)
+    width = nb.shape[1]
+    ref, _ = run_stream(gstream.VertexStream(
+        et, vx, nb, n=1024, intervals=(len(et),)), policy="sdp",
+        cfg=cfg, seed=0)
+
+    part = Partitioner(cfg, seed=0).feed(head)
+    assert part.n == 1024
+    part.compact()
+    assert part.n < 1024 and part.metrics()["compactions"] == 1
+    assert part.to_internal([599])[0] != 599        # genuinely relabeled
+    part.feed(tail)
+
+    ai = part.to_internal(np.arange(1024))
+    got = np.full(1024, -1, np.int64)
+    got[ai >= 0] = np.asarray(part.state.assignment)[ai[ai >= 0]]
+    pres = np.asarray(ref.present)
+    np.testing.assert_array_equal(np.asarray(ref.assignment)[pres],
+                                  got[:len(pres)][pres])
+    for f in ("num_partitions", "total_edges", "cut_edges",
+              "denied_scaleout", "scale_events"):
+        assert int(getattr(ref, f)) == int(getattr(part.state, f)), f
+    np.testing.assert_array_equal(np.asarray(ref.edge_load),
+                                  np.asarray(part.state.edge_load))
+    kinds = [e["kind"] for e in part.geometry_events]
+    assert "grow" in kinds and "shrink" in kinds
+    # round-trip: external -> internal -> external is the identity on
+    # live ids
+    live = np.flatnonzero(got >= 0)
+    np.testing.assert_array_equal(part.to_external(part.to_internal(live)),
+                                  live)
+    _ = width
+
+
+def test_maybe_shrink_gate_and_auto_shrink():
+    cfg = EngineConfig(k_max=4, k_init=2, max_cap=10**6)
+    part = Partitioner(cfg, seed=0).feed(_ring(0, 600))
+    assert not part.maybe_shrink()          # dense: gate says no
+    assert part.n == 1024
+    auto = Partitioner(cfg, seed=0, auto_shrink=True, shrink_every=64)
+    auto.feed(_ring(0, 600))
+    auto.feed(_dels(np.arange(0, 590)))     # churn empties the tier
+    assert auto.n < 1024                    # auto-shrink fired in feed
+    assert auto.metrics()["shrinks"] >= 1
+    # equal content, smaller bytes
+    part.feed(_dels(np.arange(0, 590)))
+    dense = {v: int(l) for v, l in enumerate(
+        np.asarray(part.state.assignment)) if l >= 0
+        and np.asarray(part.state.present)[v]}
+    for v, want in dense.items():
+        ai = int(auto.to_internal([v])[0])
+        assert ai >= 0 and int(np.asarray(auto.state.assignment)[ai]) == want
+    assert auto.metrics()["state_bytes"] < part.metrics()["state_bytes"]
+
+
+def test_shrink_to_validation():
+    cfg = EngineConfig(k_max=4, k_init=2, max_cap=10**6)
+    part = Partitioner(cfg, seed=0).feed(_ring(0, 100))
+    with pytest.raises(ValueError, match="grow_to"):
+        part.shrink_to(n=4 * part.n)
+    with pytest.raises(ValueError, match="cannot hold"):
+        part.shrink_to(n=32)                # 100 live vertices never fit
+    part.shrink_to(n=128)                   # exact-target shrink works
+    assert part.n == 128
+
+
+def test_hash_policy_refuses_relabel_compaction():
+    """``hash`` assigns by vertex id — relabeling would silently change
+    its semantics, so the relabel path refuses with the reason."""
+    cfg = EngineConfig(k_max=4, k_init=2, max_cap=10**6)
+    part = Partitioner(cfg, policy="hash", seed=0).feed(_ring(100, 140))
+    with pytest.raises(ValueError, match="hash"):
+        part.shrink_to(n=64)
+    # the id-preserving truncation stays available to hash sessions
+    tr = Partitioner(cfg, policy="hash", seed=0).feed(_ring(0, 40))
+    tr.shrink_to(n=64)
+    assert tr.n == 64
+
+
+def test_restore_into_smaller_tier_round_trip(tmp_path):
+    """Snapshot at the peak tier, restore right-sized, continue feeding:
+    equal to the uninterrupted session (the raise-on-shrink restore rule
+    is gone)."""
+    cfg = EngineConfig(k_max=4, k_init=2, max_cap=10**6)
+    head = _cat(_ring(0, 600), _dels(np.arange(0, 560)))
+    tail = _ring(560, 580)
+    part = Partitioner(cfg, seed=0).feed(head)
+    assert part.n == 1024
+    part.snapshot(str(tmp_path))
+    part.feed(tail)
+
+    sess = Partitioner.restore(str(tmp_path), cfg, n=128, max_deg=2, seed=0)
+    assert sess.n == 128
+    assert [e["kind"] for e in sess.geometry_events][:1] == ["restore"]
+    sess.feed(tail)
+    ids = np.arange(540, 600)
+    ref_l = np.asarray(part.state.assignment)[part.to_internal(ids)]
+    got_l = np.asarray(sess.state.assignment)[sess.to_internal(ids)]
+    np.testing.assert_array_equal(ref_l, got_l)
+    for f in ("cut_edges", "total_edges", "num_partitions"):
+        assert int(getattr(part.state, f)) == int(getattr(sess.state, f)), f
+
+
+def test_id_map_survives_snapshot_restore(tmp_path):
+    """A relabeled session's external-id map rides the checkpoint extras:
+    restore answers queries in original ids."""
+    cfg = EngineConfig(k_max=4, k_init=2, max_cap=10**6)
+    part = Partitioner(cfg, seed=0).feed(
+        _cat(_ring(0, 600), _dels(np.arange(0, 550))))
+    part.compact()
+    assert part._ext2int is not None
+    want = {int(v): int(np.asarray(part.state.assignment)[
+        part.to_internal([v])[0]]) for v in range(550, 600)}
+    part.snapshot(str(tmp_path))
+    sess = Partitioner.restore(str(tmp_path), cfg, seed=0)
+    for v, lab in want.items():
+        ai = int(sess.to_internal([v])[0])
+        assert ai >= 0 and int(np.asarray(sess.state.assignment)[ai]) == lab
+    # a deleted id referenced by no survivor's row was dropped: unmapped
+    # (id 0 would NOT do — survivor 599's ring row still references it,
+    # and referenced slots are kept so a re-add cannot dangle)
+    assert int(sess.to_internal([100])[0]) == -1
