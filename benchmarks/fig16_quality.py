@@ -1,0 +1,136 @@
+"""Fig. 16 (repo-native): partition quality over time on adversarial
+streams — SDP vs SDP + online rebalancing vs the offline stand-in.
+
+Each stream is fed interval-by-interval through the ``Partitioner``
+facade; the rebalanced lane runs one ``rebalance()`` (greedy migration +
+LPA refinement, repro.rebalance) between intervals — the between-windows
+placement the subsystem is built for. Rows record the Eq. 9 cut ratio
+and the normalised Eq. 10 imbalance at every interval boundary, plus a
+``halo_bytes_per_layer`` row per lane showing that a better cut is also
+fewer collective bytes for a GNN layer over the final partition. Every
+rebalanced state is recount-gated against ``recompute_counters`` before
+it is recorded.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.api import Partitioner
+from repro.core import recompute_counters
+from repro.core.metrics import normalized_load_imbalance
+from repro.core.offline import cut_of, offline_partition
+from repro.graph import stream as gstream
+from repro.graph.halo import build_halo_spec
+
+K = 4
+FEAT_DIM = 64
+
+
+def _streams(quick: bool):
+    g = C.bench_graph("wiki-vote", quick)
+    block = 200 if quick else 600
+    crowd = max(g.n // 8, 16)
+    return [
+        ("hub_arrivals", gstream.hub_arrivals(g, del_frac=0.1, seed=0)),
+        ("community_merge", gstream.community_merge(block=block, seed=0)),
+        ("flash_crowd", gstream.flash_crowd(g, crowd=crowd, seed=0)),
+    ]
+
+
+def _checkpoints(s) -> list[int]:
+    pts = sorted({int(c) for c in s.intervals} | {s.num_events})
+    return [c for c in pts if c > 0]
+
+
+def _imbalance(part) -> float:
+    st = part.state
+    return float(normalized_load_imbalance(np.asarray(st.edge_load),
+                                           np.asarray(st.active)))
+
+
+def _recount_gate(part):
+    st = part.state
+    rec = recompute_counters(np.asarray(st.assignment),
+                             np.asarray(st.present),
+                             np.asarray(st.adj), part.cfg.k_max)
+    assert int(st.cut_edges) == rec["cut_edges"], \
+        "rebalance broke the cut counter"
+    np.testing.assert_array_equal(np.asarray(st.cut_matrix),
+                                  rec["cut_matrix"])
+
+
+def _halo_bytes(g, assignment) -> tuple[int, int]:
+    """(allgather bytes per device, total boundary bytes on the wire)
+    for one GNN layer over the final partition — the measure_halo /
+    gnn_halo_train cost model. The per-device figure is B_max-based (one
+    padded all-gather); the total sums every shard's real publish set,
+    which is the volume the cut actually controls."""
+    a = np.asarray(assignment)[:g.n].copy()
+    a[a < 0] = 0
+    spec = build_halo_spec(g, a, K)
+    total_rows = int((spec.publish_idx >= 0).sum())
+    return (int(spec.collective_bytes_per_layer(FEAT_DIM)),
+            total_rows * (K - 1) * FEAT_DIM * 4)
+
+
+def _run_lane(name, s, rebalance: bool, quick: bool) -> list[dict]:
+    cfg = C.default_cfg(k=K)
+    m = 32 if quick else 128
+    part = Partitioner.from_stream(s, cfg, policy="sdp", seed=0)
+    rows, t0, prev = [], time.perf_counter(), 0
+    for cur in _checkpoints(s):
+        part.feed((s.etype[prev:cur], s.vertex[prev:cur],
+                   s.nbrs[prev:cur])).sync()
+        prev = cur
+        if rebalance:
+            part.rebalance(m=m, passes=2)
+            _recount_gate(part)
+        mm = part.metrics()
+        rows.append({"stream": name,
+                     "policy": "sdp+rebalance" if rebalance else "sdp",
+                     "cursor": cur,
+                     "edge_cut_ratio": mm["edge_cut_ratio"],
+                     "imbalance": _imbalance(part),
+                     "seconds": time.perf_counter() - t0})
+    gm = gstream.materialize_graph(s)
+    dev, tot = _halo_bytes(gm, part.state.assignment)
+    rows[-1]["halo_bytes_per_layer"] = dev
+    rows[-1]["halo_total_bytes_per_layer"] = tot
+    return rows
+
+
+def run(quick: bool = True) -> list:
+    rows = []
+    for name, s in _streams(quick):
+        rows += _run_lane(name, s, rebalance=False, quick=quick)
+        rows += _run_lane(name, s, rebalance=True, quick=quick)
+        gm = gstream.materialize_graph(s)
+        a, dt = C.timed(offline_partition, gm, K)
+        deg = np.diff(gm.indptr)
+        load = np.bincount(np.asarray(a), weights=deg, minlength=K)
+        imb = float(load.std() / max(load.mean(), 1e-9))
+        dev, tot = _halo_bytes(gm, a)
+        rows.append({"stream": name, "policy": "offline(metis-standin)",
+                     "cursor": s.num_events,
+                     "edge_cut_ratio": cut_of(gm, a) / max(gm.num_edges, 1),
+                     "imbalance": imb, "seconds": dt,
+                     "halo_bytes_per_layer": dev,
+                     "halo_total_bytes_per_layer": tot})
+    C.save_rows("BENCH_quality", rows)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = []
+    for name in ("hub_arrivals", "community_merge", "flash_crowd"):
+        fin = {r["policy"]: r for r in rows if r["stream"] == name}
+        out.append(
+            f"fig16/{name},{fin['sdp+rebalance']['edge_cut_ratio']:.4f},"
+            f"sdp={fin['sdp']['edge_cut_ratio']:.4f}"
+            f";offline={fin['offline(metis-standin)']['edge_cut_ratio']:.4f}"
+            f";halo={fin['sdp+rebalance'].get('halo_total_bytes_per_layer', 0)}"
+            f"vs{fin['sdp'].get('halo_total_bytes_per_layer', 0)}")
+    return out

@@ -17,7 +17,9 @@ host-loop vs vmapped vs sharded vs windowed-lane sweeps
 autoscale lanes (BENCH_autoscale_churn.json); fig13 times elastic
 geometry growth against a presized session (BENCH_growth.json); fig14
 times the double-buffered PartitionService against a synchronous
-per-arrival feed loop under Poisson arrivals (BENCH_serving.json).
+per-arrival feed loop under Poisson arrivals (BENCH_serving.json);
+fig16 tracks partition quality over time on adversarial streams with
+and without the online rebalancing subsystem (BENCH_quality.json).
 See docs/BENCHMARKS.md for every artifact's provenance and how to
 regenerate it.
 """
@@ -39,7 +41,8 @@ def main() -> int:
                             fig7_imbalance, fig8_npartitions, fig9_scaling,
                             fig10_time, fig11_sweep_scaling,
                             fig12_autoscale_churn, fig13_growth,
-                            fig14_serving, fig15_lifecycle, roofline)
+                            fig14_serving, fig15_lifecycle, fig16_quality,
+                            roofline)
     mods = {
         "fig4": fig4_edgecut, "fig5": fig5_vs_offline,
         "fig6": fig6_dynamics, "fig7": fig7_imbalance,
@@ -47,6 +50,7 @@ def main() -> int:
         "fig10": fig10_time, "fig11": fig11_sweep_scaling,
         "fig12": fig12_autoscale_churn, "fig13": fig13_growth,
         "fig14": fig14_serving, "fig15": fig15_lifecycle,
+        "fig16": fig16_quality,
         "roofline": roofline,
     }
     only = [s for s in args.only.split(",") if s]

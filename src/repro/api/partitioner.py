@@ -86,9 +86,11 @@ from repro.core.state import (
     recount_cut_matrix, shrink_state, state_bytes, state_metrics,
 )
 from repro.core.transition import EventTrace
+from repro.core.metrics import load_imbalance
 from repro.graph.stream import (
     EVENT_ADD, EVENT_PAD, VertexStream, normalize_rows, required_geometry_of,
 )
+from repro.rebalance import rebalance_jit
 
 _ENGINES = ("auto", "scan", "windowed")
 
@@ -177,6 +179,19 @@ class Partitioner:
         prefer the idle-window drain-compact (repro.api.serve).
       shrink_every: event spacing of the ``auto_shrink`` checks (the
         check itself syncs the device, so it is not free).
+      auto_rebalance: run ``rebalance()`` every ``rebalance_every``
+        ingested events (checked at feed boundaries, *before* the
+        auto-shrink check), so a session on a drifting stream repairs
+        its cut and balance without anyone calling ``rebalance()``.
+        Off by default; see ``repro.rebalance`` for the passes.
+      rebalance_every: event spacing of the ``auto_rebalance`` checks
+        (the pass itself syncs the device, so it is not free).
+      rebalance_m: default migration budget per ``rebalance()`` — the
+        top-m worst-gain boundary vertices are moved greedily.
+      rebalance_passes: default LPA refinement iterations per
+        ``rebalance()`` (0 = greedy migration only).
+      rebalance_slack: Eq. 10 capacity slack — no rebalance move may
+        push a destination beyond mean active load × (1 + slack).
     """
 
     def __init__(self, cfg: EngineConfig | None = None, *,
@@ -184,7 +199,10 @@ class Partitioner:
                  policy: str = "sdp", seed: int = 0,
                  engine: str = "auto", window: int = 256,
                  collect_trace: bool = False, use_kernel: bool = False,
-                 auto_shrink: bool = False, shrink_every: int = 4096):
+                 auto_shrink: bool = False, shrink_every: int = 4096,
+                 auto_rebalance: bool = False, rebalance_every: int = 2048,
+                 rebalance_m: int = 32, rebalance_passes: int = 0,
+                 rebalance_slack: float = 0.25):
         cfg = cfg or EngineConfig()
         if policy not in POLICIES:
             raise ValueError(
@@ -228,6 +246,31 @@ class Partitioner:
                 "event spacing of the auto_shrink checks")
         self.auto_shrink = bool(auto_shrink)
         self.shrink_every = int(shrink_every)
+        if rebalance_every <= 0:
+            raise ValueError(
+                f"rebalance_every={rebalance_every} must be > 0: it is "
+                "the event spacing of the auto_rebalance checks")
+        if rebalance_m < 0 or rebalance_passes < 0 or rebalance_slack < 0:
+            raise ValueError(
+                f"rebalance_m={rebalance_m}, rebalance_passes="
+                f"{rebalance_passes} and rebalance_slack={rebalance_slack} "
+                "must all be >= 0 (m is a move budget, passes an iteration "
+                "count, slack a capacity fraction)")
+        if auto_rebalance and rebalance_m == 0 and rebalance_passes == 0:
+            raise ValueError(
+                "auto_rebalance=True with rebalance_m=0 and "
+                "rebalance_passes=0 would run empty passes forever — give "
+                "it a migration budget (rebalance_m) and/or LPA "
+                "iterations (rebalance_passes)")
+        self.auto_rebalance = bool(auto_rebalance)
+        self.rebalance_every = int(rebalance_every)
+        self.rebalance_m = int(rebalance_m)
+        self.rebalance_passes = int(rebalance_passes)
+        self.rebalance_slack = float(rebalance_slack)
+        self._last_rebalance = 0
+        self._rebalances = 0
+        self._rebalance_moves = 0
+        self._rebalance_events: list[dict] = []
         self._kernel_windows = 0
         self._fallback_windows = 0
         self._state = init_state(int(n or 1), int(max_deg or 1), cfg.k_max,
@@ -299,6 +342,14 @@ class Partitioner:
         the :class:`Geometry` before/after. ``compact`` entries are
         same-tier re-packs; tier-dropping re-packs record ``shrink``."""
         return list(self._geometry_events)
+
+    @property
+    def rebalance_events(self) -> list[dict]:
+        """The session's rebalance lifecycle trace (mirrors
+        ``geometry_events``): one ``{"cursor", "m", "passes", "moved",
+        "cut_before", "cut_after", "imbalance_before",
+        "imbalance_after"}`` dict per executed ``rebalance()``."""
+        return list(self._rebalance_events)
 
     @property
     def cursor(self) -> int:
@@ -628,6 +679,13 @@ class Partitioner:
             # exactly instead of double-applying the finished slices
             self._cursor += end - t
             t = end
+        # rebalance before the shrink check: migration changes loads and
+        # therefore what maybe_shrink sees — the order is part of the
+        # replay contract (both cadence marks ride checkpoint extras)
+        if self.auto_rebalance and (self._cursor - self._last_rebalance
+                                    >= self.rebalance_every):
+            self._last_rebalance = self._cursor
+            self.rebalance()
         if self.auto_shrink and (self._cursor - self._last_shrink_check
                                  >= self.shrink_every):
             self._last_shrink_check = self._cursor
@@ -674,6 +732,44 @@ class Partitioner:
         jax.block_until_ready(self._state)
         return self
 
+    # -- rebalancing --------------------------------------------------------
+
+    def rebalance(self, m: int | None = None, passes: int | None = None,
+                  slack: float | None = None) -> dict:
+        """Run one between-windows rebalance over the live state: greedy
+        migration of the top-``m`` worst-gain boundary vertices, then
+        ``passes`` Spinner-style LPA iterations (see ``repro.rebalance``
+        for both). Defaults come from the constructor knobs. Never
+        touches the event RNG (``state.key``) or the cursor, so the
+        session's *event* decisions stay bit-identical to an
+        unrebalanced run; with ``m=0`` and ``passes=0`` the device state
+        is not touched at all. Returns the recorded rebalance event
+        (also appended to ``rebalance_events``). A query point: blocks
+        on in-flight feeds."""
+        m = self.rebalance_m if m is None else int(m)
+        passes = self.rebalance_passes if passes is None else int(passes)
+        slack = self.rebalance_slack if slack is None else float(slack)
+        if m <= 0 and passes <= 0:
+            return {"cursor": self._cursor, "m": 0, "passes": 0, "moved": 0}
+        load0 = np.asarray(self._state.edge_load)
+        act0 = np.asarray(self._state.active)
+        self._state, stats = rebalance_jit(
+            self._state, jnp.int32(self._cursor), jnp.float32(slack),
+            jnp.float32(self.cfg.max_cap), True,
+            m=min(m, self.n), passes=passes)
+        ev = {"cursor": self._cursor, "m": m, "passes": passes,
+              "moved": int(stats.moved),
+              "cut_before": int(stats.cut_before),
+              "cut_after": int(stats.cut_after),
+              "imbalance_before": load_imbalance(load0, act0),
+              "imbalance_after": load_imbalance(
+                  np.asarray(self._state.edge_load),
+                  np.asarray(self._state.active))}
+        self._rebalances += 1
+        self._rebalance_moves += ev["moved"]
+        self._rebalance_events.append(ev)
+        return ev
+
     # -- observation --------------------------------------------------------
 
     def metrics(self) -> dict:
@@ -699,6 +795,8 @@ class Partitioner:
         # mostly scan tails and the kernels barely engage
         m["kernel_windows"] = self._kernel_windows
         m["fallback_windows"] = self._fallback_windows
+        m["rebalances"] = self._rebalances
+        m["rebalance_moves"] = self._rebalance_moves
         return m
 
     def trace(self) -> EventTrace:
@@ -743,6 +841,11 @@ class Partitioner:
             # checks at the same cursors the original would have
             extras["shrink_mark"] = np.asarray([self._last_shrink_check],
                                                np.int64)
+        if self._last_rebalance:
+            # same contract for the auto-rebalance cadence: a restored
+            # session rebalances at the cursors the original would have
+            extras["rebalance_mark"] = np.asarray([self._last_rebalance],
+                                                  np.int64)
         mgr.save_now(self._cursor, self._state, blocking=blocking,
                      geometry=geometry_of(self._state),
                      extras=extras or None)
@@ -841,6 +944,8 @@ class Partitioner:
             part._int2ext = inv
         if "shrink_mark" in ext:
             part._last_shrink_check = int(np.asarray(ext["shrink_mark"])[0])
+        if "rebalance_mark" in ext:
+            part._last_rebalance = int(np.asarray(ext["rebalance_mark"])[0])
         part._record_geometry("restore", ck, geometry_of(part._state))
         want_n = int(n) if n is not None and n < target.n else None
         want_d = int(max_deg) if max_deg is not None \

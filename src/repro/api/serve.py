@@ -128,6 +128,16 @@ class PartitionService:
         happens in idle windows, never while traffic is arriving.
         ``None`` (default) disables it. ``drain_compact()`` is the
         explicit, unconditional counterpart.
+      idle_rebalance_s: seconds of ingest silence after which the loop
+        runs one ``Partitioner.rebalance()`` (the session's configured
+        ``rebalance_m``/``rebalance_passes`` knobs) under the dispatch
+        lock — queries answer from the repaired partition the moment it
+        lands, via the same snapshot seam as any feed. At most one
+        rebalance per ingest progress: an idle session is not
+        re-rebalanced until new events arrive. ``None`` (default)
+        disables it; ``drain_rebalance()`` is the explicit counterpart.
+        Composes with ``idle_compact_s`` (rebalance first — it changes
+        the loads the shrink check sees).
       autostart: start the ingest thread immediately. Tests pass
         ``False`` to stage deterministic queue states, then ``start()``.
 
@@ -140,6 +150,7 @@ class PartitionService:
     def __init__(self, part: Partitioner, *, max_pending_chunks: int = 8,
                  policy: str = "block", max_batch_events: int | None = None,
                  idle_compact_s: float | None = None,
+                 idle_rebalance_s: float | None = None,
                  autostart: bool = True):
         if policy not in _POLICIES:
             raise ValueError(
@@ -157,12 +168,24 @@ class PartitionService:
             raise ValueError(
                 f"idle_compact_s={idle_compact_s} must be > 0 (or None to "
                 "disable idle-window compaction)")
+        if idle_rebalance_s is not None and idle_rebalance_s <= 0:
+            raise ValueError(
+                f"idle_rebalance_s={idle_rebalance_s} must be > 0 (or None "
+                "to disable idle-window rebalancing)")
         self._part = part
         self.policy = policy
         self.max_pending_chunks = int(max_pending_chunks)
         self.max_batch_events = max_batch_events
         self.idle_compact_s = idle_compact_s
+        self.idle_rebalance_s = idle_rebalance_s
+        # the queue-get timeout is the earliest idle action; the loop
+        # then fires each action once its own threshold is crossed
+        idles = [s for s in (idle_compact_s, idle_rebalance_s)
+                 if s is not None]
+        self._idle_s = min(idles) if idles else None
         self._idle_shrinks = 0
+        self._idle_rebalances = 0
+        self._last_idle_rebalance_cursor = -1
         self._drain_compacts = 0
         self._queue: queue.Queue = queue.Queue(maxsize=max_pending_chunks)
         # serializes ingest-thread dispatch against query-side snapshot +
@@ -333,24 +356,55 @@ class PartitionService:
             self._drain_compacts += 1
         return self
 
+    def drain_rebalance(self, timeout: float | None = None) -> dict:
+        """Explicit drain-then-repair: ``flush()``, then one
+        ``Partitioner.rebalance()`` under the dispatch lock — the
+        operational seam for planned quality maintenance (the
+        ``idle_rebalance_s`` path is its opportunistic counterpart).
+        Returns the recorded rebalance event."""
+        self.flush(timeout)
+        with self._lock:
+            return self._part.rebalance()
+
     def _ingest_loop(self) -> None:
         try:
             prev_token = None
+            idle_since: float | None = None
             while True:
                 try:
-                    # idle_compact_s=None blocks forever — the plain path
-                    item = self._queue.get(timeout=self.idle_compact_s)
+                    # no idle action configured ⇒ None blocks forever —
+                    # the plain path
+                    item = self._queue.get(timeout=self._idle_s)
                 except queue.Empty:
-                    # idle window: nothing arrived for idle_compact_s.
-                    # Let the device finish the last batch, then run one
-                    # hysteresis-gated shrink check under the dispatch
-                    # lock (queries wait out the repack, never race it)
+                    # idle window: nothing arrived for _idle_s. Let the
+                    # device finish the last batch, then run whichever
+                    # idle actions' thresholds the accumulated silence
+                    # has crossed, under the dispatch lock (queries wait
+                    # out the repair, never race it)
+                    now = time.perf_counter()
+                    if idle_since is None:
+                        # the get() above already waited one interval
+                        idle_since = now - (self._idle_s or 0.0)
+                    idle_for = now - idle_since
                     if prev_token is not None:
                         jax.block_until_ready(prev_token)
                     with self._lock:
-                        if self._part.maybe_shrink():
+                        if (self.idle_rebalance_s is not None
+                                and idle_for >= self.idle_rebalance_s):
+                            # once per ingest progress: an already-idle
+                            # session is not re-rebalanced until new
+                            # events arrive
+                            cur = self._part.cursor
+                            if cur != self._last_idle_rebalance_cursor:
+                                self._part.rebalance()
+                                self._last_idle_rebalance_cursor = cur
+                                self._idle_rebalances += 1
+                        if (self.idle_compact_s is not None
+                                and idle_for >= self.idle_compact_s
+                                and self._part.maybe_shrink()):
                             self._idle_shrinks += 1
                     continue
+                idle_since = None
                 if item is _STOP:
                     break
                 # double buffering: coerce the first chunk while the
@@ -534,6 +588,8 @@ class PartitionService:
                 "max_pending_chunks": self.max_pending_chunks,
                 "idle_compact_s": self.idle_compact_s,
                 "idle_shrinks": self._idle_shrinks,
+                "idle_rebalance_s": self.idle_rebalance_s,
+                "idle_rebalances": self._idle_rebalances,
                 "drain_compacts": self._drain_compacts,
             }
         wall = None

@@ -44,6 +44,7 @@ class Sweep:
         self._chunk: int | None = None
         self._shard: bool | None = None
         self._use_kernel = False
+        self._rebalance: dict | None = None
 
     # -- lanes --------------------------------------------------------------
 
@@ -94,6 +95,24 @@ class Sweep:
         self._chunk = int(chunk)
         return self
 
+    def rebalance(self, m: int = 32, *, every: int = 512, passes: int = 0,
+                  slack: float = 0.25,
+                  lanes: Sequence[int] | None = None) -> "Sweep":
+        """Interleave a rebalance pass (repro.rebalance: greedy top-``m``
+        migration + ``passes`` LPA iterations, Eq. 10 ``slack`` guard)
+        after every ``every`` processed events, vmapped across lanes in
+        one dispatch — the policy×cadence study lane. ``lanes`` restricts
+        it to those lane indices (None = all): excluded lanes ride the
+        same program with the pass gated off, bit-identical to a sweep
+        that never rebalanced. With the windowed engine ``every`` must be
+        a multiple of the window (the cadence segments the on-device
+        window loop)."""
+        self._rebalance = {"m": int(m), "every": int(every),
+                           "passes": int(passes), "slack": float(slack),
+                           "lanes": None if lanes is None
+                           else tuple(int(i) for i in lanes)}
+        return self
+
     def sharded(self, shard: bool = True) -> "Sweep":
         """Shard the lane axis across local devices with shard_map
         (lanes padded to a multiple of the device count).
@@ -121,6 +140,35 @@ class Sweep:
                 "engine is the semantic reference and always scores with "
                 "XLA gathers. Chain .windowed() before .kernel(), or drop "
                 ".kernel().")
+        if self._rebalance is not None:
+            rb = self._rebalance
+            if rb["every"] <= 0:
+                raise ValueError(
+                    f"rebalance every={rb['every']} must be > 0: it is "
+                    "the event cadence of the interleaved passes")
+            if rb["m"] < 0 or rb["passes"] < 0 or rb["slack"] < 0:
+                raise ValueError(
+                    f"rebalance m={rb['m']}, passes={rb['passes']} and "
+                    f"slack={rb['slack']} must all be >= 0")
+            if rb["m"] == 0 and rb["passes"] == 0:
+                raise ValueError(
+                    "rebalance(m=0, passes=0) would interleave empty "
+                    "passes — give it a migration budget (m) and/or LPA "
+                    "iterations (passes), or drop .rebalance()")
+            if self._engine == "windowed" \
+                    and rb["every"] % self._window != 0:
+                raise ValueError(
+                    f"rebalance every={rb['every']} must be a multiple of "
+                    f"the window ({self._window}): the cadence segments "
+                    "the on-device window loop at window boundaries")
+            if rb["lanes"] is not None:
+                bad = [i for i in rb["lanes"]
+                       if not 0 <= i < len(self._runs)]
+                if bad:
+                    raise ValueError(
+                        f"rebalance lanes={rb['lanes']} reference "
+                        f"out-of-range lane indices {bad} (the sweep has "
+                        f"{len(self._runs)} lanes)")
         if not isinstance(self._stream, (list, tuple)):
             streams = None
         else:
@@ -157,4 +205,4 @@ class Sweep:
         return _execute_sweep(
             self._stream, self._runs, chunk=self._chunk,
             engine=self._engine, window=self._window, shard=self._shard,
-            use_kernel=self._use_kernel)
+            use_kernel=self._use_kernel, rebalance=self._rebalance)

@@ -563,6 +563,41 @@ def del_edge_core(state: PartitionState, v, row):
     )
 
 
+def migrate_core(state: PartitionState, v, dst, gate=True):
+    """Move present vertex v to partition ``dst`` (the rebalance
+    transition, see ``repro.rebalance``). Returns ``(state, did)``.
+
+    Algebraically ``del_vertex_core(v)`` followed by ``commit_add(v)``
+    at ``dst`` with the same neighbour scores — legal because a move
+    never changes the adjacency, so every neighbour's label histogram
+    is the same before and after. The deltas net out: neighbours'
+    edge_load terms cancel, ``total_edges`` is untouched, and only the
+    src/dst rows+columns of ``cut_matrix`` move. Gated-off calls (or
+    moves to the current / an inactive partition) return the state
+    bit-identically via the same drop-mode scatter trick as
+    ``commit_add``."""
+    n = state.assignment.shape[0]
+    scores, deg, _, _ = neighbor_stats(state, state.adj[v])
+    src = jnp.maximum(state.assignment[v], 0)
+    dst = jnp.clip(dst, 0, state.edge_load.shape[0] - 1)
+    do = (gate & state.present[v] & (state.assignment[v] >= 0)
+          & state.active[dst] & (dst != src))
+    e = do.astype(jnp.int32)
+    d = jnp.where(do, deg, 0)
+    sc = jnp.where(do, scores, 0)
+    moved = state._replace(
+        assignment=state.assignment.at[jnp.where(do, v, n)].set(
+            dst, mode="drop"),
+        vertex_count=state.vertex_count.at[src].add(-e).at[dst].add(e),
+        edge_load=state.edge_load.at[src].add(-d).at[dst].add(d),
+        cut_edges=state.cut_edges + sc[src] - sc[dst],
+        cut_matrix=(state.cut_matrix
+                    .at[src, :].add(-sc).at[:, src].add(-sc)
+                    .at[dst, :].add(sc).at[:, dst].add(sc)),
+    )
+    return moved, do
+
+
 # ---------------------------------------------------------------------------
 # the parameterized transition kernel
 # ---------------------------------------------------------------------------

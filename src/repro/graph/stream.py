@@ -419,3 +419,199 @@ def concat_streams(streams: Sequence[VertexStream]) -> VertexStream:
         intervals=tuple(offs),
         truncated_nbrs=sum(s.truncated_nbrs for s in streams),
     )
+
+
+# ---------------------------------------------------------------------------
+# adversarial streams — the quality scenarios (fig16, repro.rebalance)
+# ---------------------------------------------------------------------------
+# A one-shot streaming partitioner decides each vertex when only part of
+# its neighbourhood exists. These generators arrange arrivals so the
+# early decisions are maximally wrong by the end of the stream — the
+# drift the rebalance subsystem is judged on. All of them obey the
+# generator discipline the engine's recount invariant needs: adjacency
+# rows come from one static graph built UP FRONT (so both endpoints of
+# every edge list each other — rows referencing not-yet-present ids are
+# inert until the partner arrives), and deletions only ever name present
+# vertices.
+
+
+def _append_dels(s: VertexStream, victims: np.ndarray,
+                 intervals: Sequence[int]) -> VertexStream:
+    """Append DEL_VERTEX events for ``victims`` (must be present — the
+    callers only delete vertices their own add phase arrived)."""
+    nd = victims.shape[0]
+    return VertexStream(
+        etype=np.concatenate(
+            [s.etype, np.full(nd, EVENT_DEL_VERTEX, np.int32)]),
+        vertex=np.concatenate([s.vertex, victims.astype(np.int32)]),
+        nbrs=np.concatenate([s.nbrs, -np.ones((nd, s.max_deg), np.int32)]),
+        n=s.n,
+        intervals=tuple(intervals) + (s.num_events + nd,),
+        truncated_nbrs=s.truncated_nbrs,
+    )
+
+
+def hub_arrivals(
+    g: Graph,
+    *,
+    hub_frac: float = 0.02,
+    warmup_frac: float = 0.3,
+    del_frac: float = 0.0,
+    max_deg: Optional[int] = None,
+    seed: int = 0,
+) -> VertexStream:
+    """Power-law burst: the top-degree hubs arrive in one consecutive
+    burst after only ``warmup_frac`` of the low-degree periphery exists.
+    Every hub is therefore placed nearly blind (most of its neighbours
+    absent), and the periphery arriving after the burst chases the
+    misplaced hubs — the worst case for one-shot affinity placement.
+    ``del_frac`` optionally churns that fraction of the warmup vertices
+    away after the burst (they are present, so no dangling deletes).
+    Intervals: (end of warmup, end of burst, end of adds[, end of dels])."""
+    rng = np.random.default_rng(seed)
+    deg = np.diff(g.indptr)
+    n_hub = max(1, int(round(g.n * hub_frac)))
+    hubs = np.argsort(deg, kind="stable")[::-1][:n_hub]
+    rest = rng.permutation(np.setdiff1d(np.arange(g.n), hubs))
+    n_warm = int(round(rest.size * warmup_frac))
+    order = np.concatenate([rest[:n_warm], hubs, rest[n_warm:]])
+    s = build_stream(g, max_deg=max_deg, seed=seed, order=order)
+    intervals = (n_warm, n_warm + n_hub, g.n)
+    n_del = int(round(n_warm * del_frac))
+    if n_del == 0:
+        return dataclasses.replace(s, intervals=intervals)
+    victims = rng.choice(rest[:n_warm], size=n_del, replace=False)
+    return _append_dels(s, victims, intervals)
+
+
+def community_merge(
+    *,
+    block: int = 300,
+    p_intra: float = 0.05,
+    bridges: int = 60,
+    bridge_deg: int = 6,
+    max_deg: Optional[int] = None,
+    seed: int = 0,
+) -> VertexStream:
+    """Two dense blocks bridged mid-stream: block A streams in full, then
+    block B, then ``bridges`` bridge vertices each wired half into A and
+    half into B. While the blocks stream the optimum is to keep them
+    apart; once the bridges land the communities have merged and the
+    early per-block placements cut every bridge edge. Mid-stream edges
+    between *existing* vertices must ride new vertices (duplicate adds
+    are engine no-ops), which is exactly what the bridge vertices are.
+    Intervals: (end of A, end of B, end of bridges)."""
+    from repro.graph.csr import from_edge_list
+    rng = np.random.default_rng(seed)
+    n = 2 * block + bridges
+    m_intra = max(block - 1, int(round(p_intra * block * (block - 1) / 2)))
+    parts = []
+    for base in (0, block):
+        # sampled pair list — from_edge_list dedups and drops self-loops
+        pairs = rng.integers(0, block, size=(m_intra, 2)) + base
+        # a spanning chain keeps each block connected (dense ≠ connected)
+        chain = np.stack([np.arange(block - 1), np.arange(1, block)],
+                         axis=1) + base
+        parts.append(np.concatenate([pairs, chain]))
+    half = max(1, bridge_deg // 2)
+    for b in range(2 * block, n):
+        ends = np.concatenate([rng.choice(block, half, replace=False),
+                               rng.choice(block, half, replace=False)
+                               + block])
+        parts.append(np.stack([np.full(ends.size, b), ends], axis=1))
+    g = from_edge_list(np.concatenate(parts), n=n)
+    order = np.concatenate([rng.permutation(block),
+                            rng.permutation(block) + block,
+                            rng.permutation(np.arange(2 * block, n))])
+    s = build_stream(g, max_deg=max_deg, seed=seed, order=order)
+    return dataclasses.replace(s, intervals=(block, 2 * block, n))
+
+
+def flash_crowd(
+    g: Graph,
+    *,
+    crowd: int = 200,
+    celebrities: int = 8,
+    attach: int = 3,
+    arrive_frac: float = 0.5,
+    depart_frac: float = 0.5,
+    max_deg: Optional[int] = None,
+    seed: int = 0,
+) -> VertexStream:
+    """Sudden arrival-rate spike onto few vertices: after ``arrive_frac``
+    of the base graph has streamed, ``crowd`` NEW vertices arrive
+    back-to-back, each starring onto ``attach`` of the ``celebrities``
+    highest-degree base vertices. The crowd edges exist in the static
+    graph built up front (the celebrities' rows list the crowd ids from
+    the start, inert until the spike), so adjacency stays symmetric.
+    ``depart_frac`` of the crowd then leaves — flash crowds do.
+    Intervals: (spike start, spike end, end of adds[, end of dels])."""
+    from repro.graph.csr import from_edge_list
+    rng = np.random.default_rng(seed)
+    deg = np.diff(g.indptr)
+    celebs = np.argsort(deg, kind="stable")[::-1][:max(celebrities, attach)]
+    crowd_ids = np.arange(g.n, g.n + crowd)
+    star = np.stack([
+        np.repeat(crowd_ids, attach),
+        np.concatenate([rng.choice(celebs, attach, replace=False)
+                        for _ in crowd_ids]),
+    ], axis=1)
+    base_edges = g.edge_array()
+    edges = np.concatenate([base_edges, star]) if base_edges.size else star
+    g2 = from_edge_list(edges, n=g.n + crowd)
+    basep = rng.permutation(g.n)
+    n_pre = int(round(g.n * arrive_frac))
+    order = np.concatenate([basep[:n_pre], rng.permutation(crowd_ids),
+                            basep[n_pre:]])
+    s = build_stream(g2, max_deg=max_deg, seed=seed, order=order)
+    intervals = (n_pre, n_pre + crowd, g2.n)
+    n_dep = int(round(crowd * depart_frac))
+    if n_dep == 0:
+        return dataclasses.replace(s, intervals=intervals)
+    victims = rng.choice(crowd_ids, size=n_dep, replace=False)
+    return _append_dels(s, victims, intervals)
+
+
+def materialize_graph(s: VertexStream) -> Graph:
+    """Host oracle: the graph a stream leaves behind — final present
+    vertices and live edges under the engine's event semantics (duplicate
+    adds ignored, vertex deletion drops incident edges, edge deletion is
+    permanent for the pair). The offline baseline in fig16 partitions
+    this graph; assumes the generator discipline above (mutual row
+    listing, dead pairs never re-listed), which every in-repo generator
+    obeys."""
+    from repro.graph.csr import from_edge_list
+    present: set[int] = set()
+    rows: dict[int, set[int]] = {}
+    live: set[tuple[int, int]] = set()
+    dead: set[tuple[int, int]] = set()
+    for t in range(s.num_events):
+        et, v = int(s.etype[t]), int(s.vertex[t])
+        if et == EVENT_ADD:
+            if v in present:
+                continue  # duplicate adds are engine no-ops
+            row = {int(u) for u in s.nbrs[t] if u >= 0}
+            present.add(v)
+            rows[v] = row
+            for u in row:
+                pair = (min(v, u), max(v, u))
+                if u in present and v in rows.get(u, ()) \
+                        and pair not in dead:
+                    live.add(pair)
+        elif et == EVENT_DEL_VERTEX:
+            if v not in present:
+                continue
+            present.discard(v)
+            live = {e for e in live if v not in e}
+        elif et == EVENT_DEL_EDGE:
+            u = int(s.nbrs[t, 0])
+            pair = (min(v, u), max(v, u))
+            if v in present and u in present and pair in live:
+                live.discard(pair)
+                dead.add(pair)
+                rows[v].discard(u)
+                rows[u].discard(v)
+    n = s.required_geometry().n
+    edges = (np.asarray(sorted(live), np.int64)
+             if live else np.zeros((0, 2), np.int64))
+    return from_edge_list(edges, n=n)

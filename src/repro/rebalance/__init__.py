@@ -1,0 +1,15 @@
+"""Online rebalancing: between-windows vertex migration + LPA refinement.
+
+SDP assigns each vertex once; on a drifting stream (hub arrivals,
+community merges, flash crowds) the one-shot choices rot the cut and
+the balance. This package repairs both *between* ingest windows, in
+the spirit of xDGP's adaptive vertex migration and Spinner's iterative
+label propagation (see PAPERS.md), as pure jitted passes over
+``PartitionState`` that preserve every counter invariant exactly.
+"""
+from repro.rebalance.passes import (RebalanceStats, lane_rebalance,
+                                    lpa_pass, migration_pass,
+                                    rebalance_jit, rebalance_state)
+
+__all__ = ["RebalanceStats", "lane_rebalance", "lpa_pass",
+           "migration_pass", "rebalance_jit", "rebalance_state"]

@@ -1,0 +1,207 @@
+"""The two rebalance passes over ``PartitionState``.
+
+Both passes are pure functions of ``(state, cursor)`` — no host
+round-trips, no mutation of ``state.key`` (the event RNG stream is
+untouched, so a rebalanced session stays bit-identical to an
+unrebalanced one on every *event* decision). Both maintain the PR 3
+cut-matrix invariant exactly:
+
+* **greedy migration** (xDGP-style): score every present vertex by its
+  move gain — the affinity delta from the per-vertex label histogram —
+  under an Eq. 10 capacity guard, take the top-m worst offenders, and
+  commit them one by one through ``transition.migrate_core``. Scores
+  are *recomputed at commit time* (earlier commits in the same pass
+  change the histograms), so every committed move has fresh gain > 0:
+  the cut is monotone non-increasing and the counters stay exact.
+
+* **LPA refinement** (Spinner-style): a fixed-iteration synchronous
+  label-propagation sweep. Each vertex scores labels by neighbour
+  fraction minus a load penalty, movers are admitted probabilistically
+  by remaining capacity (Spinner's acceptance rule), and the counters
+  are rebuilt from scratch on device via one one-hot matmul — exact by
+  construction, and the rebuild is itself the recount gate.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import transition as tx
+from repro.core.state import PartitionState
+
+# fold_in salt for the LPA acceptance draws: event keys are derived as
+# fold_in(base, t0 + i) with non-negative cursors, so one fixed salt up
+# front keeps the rebalance stream disjoint from every event stream
+_SALT = 0x5EBA1A7C
+
+
+def _histograms(state: PartitionState):
+    """Per-vertex label histogram ``(n, k)`` and live degree ``(n,)``.
+
+    Counts only edges whose both endpoints are present (rows of absent
+    vertices are zeroed) — the same edge-counting rule as
+    ``metrics.recompute_counters``."""
+    k = state.edge_load.shape[0]
+    valid = state.adj >= 0
+    safe = jnp.where(valid, state.adj, 0)
+    nbp = valid & state.present[safe] & state.present[:, None]
+    nba = jnp.where(nbp, state.assignment[safe], -1)
+    hist = jnp.sum(nba[..., None] == jnp.arange(k, dtype=jnp.int32)[None, None],
+                   axis=1, dtype=jnp.int32)
+    deg = jnp.sum(nbp, axis=1, dtype=jnp.int32)
+    return hist, deg
+
+
+def _dest_cap(state: PartitionState, slack, max_cap):
+    """Eq. 10 capacity guard: a destination may not exceed the mean
+    active edge load by more than ``slack`` (and never ``max_cap``)."""
+    act = state.active
+    load = state.edge_load.astype(jnp.float32)
+    cnt = jnp.maximum(jnp.sum(act.astype(jnp.int32)), 1).astype(jnp.float32)
+    mean = jnp.sum(jnp.where(act, load, 0.0)) / cnt
+    return jnp.minimum(jnp.maximum(mean * (1.0 + slack), 1.0), max_cap)
+
+
+def _rebuild_counters(state: PartitionState) -> PartitionState:
+    """From-scratch device recount of every derived counter after a bulk
+    relabel (presence/adjacency unchanged, so ``total_edges`` is too).
+    ``cut_matrix = Eᵀ·hist`` with E the present-masked one-hot of the
+    assignment — one (k, n)×(n, k) int32 matmul."""
+    k = state.edge_load.shape[0]
+    hist, deg = _histograms(state)
+    onehot = ((state.assignment[:, None] == jnp.arange(k, dtype=jnp.int32))
+              & state.present[:, None]).astype(jnp.int32)
+    cut_matrix = jnp.matmul(onehot.T, hist,
+                            preferred_element_type=jnp.int32)
+    total = jnp.sum(cut_matrix)
+    internal = jnp.trace(cut_matrix)
+    return state._replace(
+        vertex_count=jnp.sum(onehot, axis=0, dtype=jnp.int32),
+        edge_load=jnp.sum(onehot * deg[:, None], axis=0, dtype=jnp.int32),
+        cut_edges=(total - internal) // 2,
+        cut_matrix=cut_matrix,
+    )
+
+
+def migration_pass(state: PartitionState, *, m: int, slack, max_cap,
+                   enabled=True):
+    """Greedy top-m migration. Selection ranks stale gains (one batched
+    histogram pass); each commit recomputes scores, target, and the
+    capacity guard against the *current* state and skips unless the
+    fresh gain is strictly positive. Returns ``(state, moved)``."""
+    k = state.edge_load.shape[0]
+    hist, deg = _histograms(state)
+    cur = jnp.clip(state.assignment, 0, k - 1)
+    cur_aff = jnp.take_along_axis(hist, cur[:, None], axis=1)[:, 0]
+    cap = _dest_cap(state, slack, max_cap)
+    fits = (state.active[None, :]
+            & (state.edge_load.astype(jnp.float32)[None, :]
+               + deg[:, None].astype(jnp.float32) <= cap))
+    h = jnp.where(fits & (jnp.arange(k)[None, :] != cur[:, None]),
+                  hist, -tx._BIG)
+    gain = jnp.where(state.present & (state.assignment >= 0),
+                     jnp.max(h, axis=1) - cur_aff, -tx._BIG)
+    _, picks = jax.lax.top_k(gain, m)
+
+    def commit(s, v):
+        scores, dv, _, _ = tx.neighbor_stats(s, s.adj[v])
+        curv = jnp.clip(s.assignment[v], 0, k - 1)
+        ok = (s.active
+              & (s.edge_load.astype(jnp.float32)
+                 + dv.astype(jnp.float32) <= _dest_cap(s, slack, max_cap))
+              & (jnp.arange(k) != curv))
+        hq = jnp.where(ok, scores, -tx._BIG)
+        q = jnp.argmax(hq).astype(jnp.int32)
+        do = enabled & (jnp.max(hq) > scores[curv])
+        s, did = tx.migrate_core(s, v, q, gate=do)
+        return s, did.astype(jnp.int32)
+
+    state, moved = jax.lax.scan(commit, state, picks.astype(jnp.int32))
+    return state, jnp.sum(moved)
+
+
+def lpa_pass(state: PartitionState, t0, *, passes: int, slack, max_cap,
+             balance_weight=0.1, enabled=True):
+    """Spinner-style synchronous LPA: ``passes`` fixed iterations of
+    score → candidate → probabilistic capacity acceptance → full device
+    recount. Acceptance draws come from ``fold_in(fold_in(key, salt),
+    t0 + i)`` — ``state.key`` itself is never advanced.
+
+    ``balance_weight`` is Spinner's small additive load-penalty
+    coefficient: the affinity term ``hist/deg`` lives in [0, 1], so a
+    weight near 1 lets the penalty dominate and trades the cut away
+    wholesale for balance; 0.1 nudges ties toward lighter labels while
+    the capacity acceptance rule does the hard balance enforcement."""
+    k = state.edge_load.shape[0]
+    n = state.assignment.shape[0]
+    base = jax.random.fold_in(state.key, _SALT)
+
+    def sweep(i, s):
+        hist, deg = _histograms(s)
+        degf = jnp.maximum(deg.astype(jnp.float32), 1.0)
+        load = s.edge_load.astype(jnp.float32)
+        cap = _dest_cap(s, slack, max_cap)
+        score = (hist.astype(jnp.float32) / degf[:, None]
+                 - balance_weight * (load / cap)[None, :])
+        score = jnp.where(s.active[None, :], score, -jnp.inf)
+        cur = jnp.clip(s.assignment, 0, k - 1)
+        cand = jnp.argmax(score, axis=1).astype(jnp.int32)
+        best = jnp.max(score, axis=1)
+        cur_sc = jnp.take_along_axis(score, cur[:, None], axis=1)[:, 0]
+        want = (s.present & (s.assignment >= 0) & (cand != cur)
+                & (best > cur_sc + 1e-6))
+        # Spinner's acceptance: movers into label q are admitted with
+        # probability remaining(q) / demand(q) so no label overshoots
+        # its capacity in expectation
+        wdeg = jnp.where(want, degf, 0.0)
+        demand = jnp.zeros(k, jnp.float32).at[cand].add(wdeg)
+        remaining = jnp.maximum(cap - load, 0.0)
+        p_acc = jnp.clip(remaining / jnp.maximum(demand, 1.0), 0.0, 1.0)
+        u = jax.random.uniform(jax.random.fold_in(base, t0 + i), (n,))
+        move = want & (u < p_acc[cand]) & enabled
+        return _rebuild_counters(
+            s._replace(assignment=jnp.where(move, cand, s.assignment)))
+
+    return jax.lax.fori_loop(0, passes, sweep, state)
+
+
+class RebalanceStats(NamedTuple):
+    moved: jax.Array       # () int32 — committed greedy migrations
+    cut_before: jax.Array  # () int32
+    cut_after: jax.Array   # () int32
+
+
+def rebalance_state(state: PartitionState, t0, slack, max_cap,
+                    enabled=True, *, m: int, passes: int):
+    """One full rebalance: greedy migration (if ``m > 0``) then LPA
+    refinement (if ``passes > 0``). ``t0`` is the session cursor —
+    rebalances at different stream positions draw distinct acceptance
+    randomness, and a recovered session replaying the same cursor draws
+    the same. ``enabled`` is a traced gate so vmapped sweep lanes can
+    switch the whole pass off per lane bit-identically."""
+    cut0 = state.cut_edges
+    moved = jnp.int32(0)
+    if m > 0:
+        state, moved = migration_pass(state, m=m, slack=slack,
+                                      max_cap=max_cap, enabled=enabled)
+    if passes > 0:
+        state = lpa_pass(state, t0, passes=passes, slack=slack,
+                         max_cap=max_cap, enabled=enabled)
+    return state, RebalanceStats(moved, cut0, state.cut_edges)
+
+
+rebalance_jit = jax.jit(rebalance_state, static_argnames=("m", "passes"),
+                        donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def lane_rebalance(m: int, passes: int):
+    """Vmapped rebalance over stacked sweep-lane states (lane axis on
+    state, per-lane max_cap and enabled mask; shared cursor and slack).
+    Cached so repeated ``Sweep.run()`` calls reuse the compiled fn."""
+    fn = functools.partial(rebalance_state, m=m, passes=passes)
+    return jax.jit(jax.vmap(fn, in_axes=(0, None, None, 0, 0)),
+                   donate_argnums=(0,))

@@ -40,6 +40,7 @@ rebuilds on whatever device the fresh process has.
 from __future__ import annotations
 
 import glob
+import json
 import os
 import re
 import tempfile
@@ -119,16 +120,29 @@ class EventJournal:
         self._seq += 1
         return self._write_atomic(name, buf.getvalue())
 
-    def append_marker(self, cursor: int, kind: str) -> str:
-        """Journal a geometry action (``"compact"`` or ``"shrink"``)
-        taken at ``cursor``, so replay re-applies it in order."""
+    def append_marker(self, cursor: int, kind: str,
+                      payload: dict | None = None) -> str:
+        """Journal a session action (``"compact"``, ``"shrink"``,
+        ``"rebalance"``, or the ``"snap"`` bookkeeping marker) taken at
+        ``cursor``, so replay re-applies it in order. ``payload`` (the
+        action's arguments, e.g. a rebalance's ``m``/``passes``) is
+        stored as JSON in the marker file and comes back via
+        :meth:`load_marker`."""
         name = f"cp_{int(cursor):012d}_{self._seq:08d}_{kind}.marker"
         self._seq += 1
-        return self._write_atomic(name, b"")
+        data = json.dumps(payload).encode() if payload is not None else b""
+        return self._write_atomic(name, data)
 
     def load(self, entry: JournalEntry):
         data = np.load(entry.path)
         return data["etype"], data["vertex"], data["nbrs"]
+
+    def load_marker(self, entry: JournalEntry) -> dict:
+        """The JSON payload of a marker entry ({} for payload-free
+        markers like compact/shrink)."""
+        with open(entry.path, "rb") as f:
+            raw = f.read()
+        return json.loads(raw) if raw else {}
 
     def prune_below(self, cursor: int) -> int:
         """Drop entries fully consumed before ``cursor`` — anything a
@@ -248,6 +262,19 @@ class RecoverableSession:
             self.journal.append_marker(self.part.cursor, "shrink")
         return did
 
+    def rebalance(self, m: int | None = None, passes: int | None = None,
+                  slack: float | None = None) -> dict:
+        """Journaled explicit rebalance (see ``Partitioner.rebalance``).
+        Marker BEFORE the action, like ``compact()``: the pass is a
+        deterministic function of (state, cursor), so a crash between
+        marker and action just replays it. ``auto_rebalance`` cadence
+        needs no marker — its mark rides the checkpoint extras and the
+        replayed feeds re-fire it at the same cursors."""
+        self.journal.append_marker(
+            self.part.cursor, "rebalance",
+            {"m": m, "passes": passes, "slack": slack})
+        return self.part.rebalance(m=m, passes=passes, slack=slack)
+
     def remesh(self, device) -> "RecoverableSession":
         """Re-mesh after (simulated) device loss with the process alive:
         move the session onto ``device`` and continue — bit-preserving
@@ -262,6 +289,13 @@ class RecoverableSession:
         """Snapshot now (regardless of ``snapshot_every``); prunes the
         journal entries no retained snapshot could need. Returns the
         snapshotted cursor."""
+        # "snap" marker first: it records (by sequence number) that every
+        # action marker journaled at this cursor so far is contained in
+        # the snapshot about to be written, so recover() does not
+        # re-apply them. Written BEFORE the save: a crash between the two
+        # leaves a stale marker that an older-snapshot restore ignores
+        # (its cursor is ahead), never a double-applied action.
+        self.journal.append_marker(self.part.cursor, "snap")
         step = self.part.snapshot(self.dir, keep=self.keep,
                                   blocking=blocking)
         self._last_snapshot = step
@@ -292,14 +326,27 @@ class RecoverableSession:
         part = Partitioner.restore(directory, cfg, **kw)
         sess = cls(part, directory, snapshot_every=snapshot_every,
                    keep=keep)
-        for e in sess.journal.entries():
+        entries = sess.journal.entries()
+        # action markers at the restored cursor journaled at or before
+        # the snapshot's own "snap" marker are already contained in the
+        # snapshot — re-applying them would double-apply (harmless for
+        # the idempotent compact/shrink, wrong for rebalance). Journals
+        # written before snap markers existed have snap_seq == -1 and
+        # replay every equal-cursor marker, the historical behavior.
+        snap_seq = max((e.seq for e in entries
+                        if e.kind == "snap" and e.cursor == part.cursor),
+                       default=-1)
+        for e in entries:
+            if e.kind == "snap":
+                continue
             if e.kind != "events":
-                if e.cursor >= part.cursor:
-                    # re-applying at the recorded point; a marker whose
-                    # action the snapshot already contains re-packs an
-                    # already-packed state — a no-op
-                    (part.compact if e.kind == "compact"
-                     else part.maybe_shrink)()
+                if e.cursor > part.cursor or (e.cursor == part.cursor
+                                              and e.seq > snap_seq):
+                    if e.kind == "rebalance":
+                        part.rebalance(**sess.journal.load_marker(e))
+                    else:
+                        (part.compact if e.kind == "compact"
+                         else part.maybe_shrink)()
                 continue
             et, vx, nb = sess.journal.load(e)
             end = e.cursor + int(et.shape[0])

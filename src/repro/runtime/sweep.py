@@ -245,6 +245,7 @@ def _execute_sweep(
     window: int = 256,
     shard: bool | None = None,
     use_kernel: bool = False,
+    rebalance: dict | None = None,
 ) -> list[SweepResult]:
     """Executor behind ``repro.api.Sweep`` (and the deprecated
     ``run_sweep`` shim): every (policy, cfg, seed) lane in one device
@@ -275,6 +276,12 @@ def _execute_sweep(
       XLA window kernel — bit-identical by contract, interpret mode off
       TPU. Ignored for ``engine="scan"`` (the scan is the semantic
       reference and stays XLA; ``Sweep._validate`` rejects the combo).
+    rebalance: ``{"m", "every", "passes", "slack", "lanes"}`` from
+      ``Sweep.rebalance()`` — after every full ``every`` processed
+      events the stream is segmented and one vmapped
+      ``repro.rebalance.rebalance_state`` runs over the stacked lanes
+      (per-lane ``max_cap``, shared slack, ``lanes`` as a traced
+      enabled mask — excluded lanes pass through bit-identically).
     """
     runs = [r if isinstance(r, SweepRun) else SweepRun(*r) for r in runs]
     if not runs:
@@ -293,7 +300,8 @@ def _execute_sweep(
 
     L = len(runs)
     lens = [s.num_events for s in streams]
-    T = max(lens)
+    T_ev = max(lens)   # real events: the rebalance cadence counts these
+    T = T_ev
     if engine == "windowed":
         T = ((T + window - 1) // window) * window
     if shared:
@@ -328,24 +336,74 @@ def _execute_sweep(
     def ev_slice(a, sl):
         return a[sl] if shared else a[:, sl]
 
+    reb_apply = None
+    if rebalance is not None:
+        from repro.rebalance import lane_rebalance
+        reb_every = int(rebalance["every"])
+        Lp = int(states.assignment.shape[0])  # incl. shard padding
+        en = np.zeros(Lp, bool)
+        if rebalance["lanes"] is None:
+            en[:L] = True   # pad lanes stay gated off (sliced away after)
+        else:
+            en[np.asarray(rebalance["lanes"], int)] = True
+        enabled = jnp.asarray(en)
+        caps = np.asarray([float(r.cfg.max_cap) for r in runs], np.float32)
+        caps = np.concatenate(
+            [caps, np.full(Lp - L, caps[0] if L else 1.0, np.float32)])
+        maxcap, slack = jnp.asarray(caps), jnp.float32(rebalance["slack"])
+        reb_call = lane_rebalance(min(int(rebalance["m"]), n),
+                                  int(rebalance["passes"]))
+
+        def reb_apply(states, t):
+            states, _ = reb_call(states, jnp.int32(t), slack, maxcap,
+                                 enabled)
+            return states
+
     if engine == "windowed":
-        # the window loop runs on device (lax.scan over windows inside
-        # the kernel) — one dispatch for the whole stream, like "scan"
-        states = call(states, kns, pidx, auto, et, vx, nb, jnp.int32(0))
+        if reb_apply is None:
+            # the window loop runs on device (lax.scan over windows
+            # inside the kernel) — one dispatch for the whole stream,
+            # like "scan"
+            states = call(states, kns, pidx, auto, et, vx, nb,
+                          jnp.int32(0))
+        else:
+            # segment the stream at the rebalance cadence (a window
+            # multiple, validated) and rebalance after each full segment
+            t = 0
+            while t < T:
+                end = min(t + reb_every, T)
+                sl = slice(t, end)
+                states = call(states, kns, pidx, auto, ev_slice(et, sl),
+                              ev_slice(vx, sl), ev_slice(nb, sl),
+                              jnp.int32(t))
+                # a segment padded past the real stream end is not a full
+                # cadence interval (T is window-rounded; the scan engine
+                # never sees the padding, and the engines must agree)
+                if end - t == reb_every and end <= T_ev:
+                    states = reb_apply(states, end)
+                t = end
         trace = None
-    elif chunk is None:
+    elif chunk is None and rebalance is None:
         states, trace = call(states, kns, pidx, auto, et, vx, nb,
                              jnp.int32(0))
     else:
+        step = chunk if chunk is not None else T
         traces = []
         t = 0
         while t < T:
-            sl = slice(t, min(t + chunk, T))
+            end = min(t + step, T)
+            if rebalance is not None:
+                # dispatch boundaries never cross a cadence boundary, so
+                # the pass lands exactly between the right two events
+                end = min(end, (t // reb_every + 1) * reb_every)
+            sl = slice(t, end)
             states, tr = call(states, kns, pidx, auto, ev_slice(et, sl),
                               ev_slice(vx, sl), ev_slice(nb, sl),
                               jnp.int32(t))
             traces.append(tr)
-            t = sl.stop
+            t = end
+            if rebalance is not None and t % reb_every == 0:
+                states = reb_apply(states, t)
         trace = tx.EventTrace(*(
             jnp.concatenate([getattr(tr, f) for tr in traces], axis=1)
             for f in tx.EventTrace._fields

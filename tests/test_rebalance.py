@@ -1,0 +1,350 @@
+"""Online rebalancing (repro.rebalance): recount-exact passes, the
+no-op bit-identity contract, the whole-stack wiring (session cadence,
+sweep lanes, service idle pass, crash recovery), and the adversarial
+stream generators the fig16 quality benchmark runs on."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Partitioner, Sweep
+from repro.api.serve import PartitionService
+from repro.core import EngineConfig, recompute_counters, run_stream
+from repro.graph.generators import make_graph
+from repro.graph import stream as gstream
+from repro.rebalance import rebalance_state
+from repro.runtime.recovery import RecoverableSession
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _counters_exact(state, k_max):
+    rec = recompute_counters(np.asarray(state.assignment),
+                             np.asarray(state.present),
+                             np.asarray(state.adj), k_max)
+    assert int(state.total_edges) == rec["total_edges"]
+    assert int(state.cut_edges) == rec["cut_edges"]
+    np.testing.assert_array_equal(np.asarray(state.edge_load),
+                                  rec["edge_load"])
+    np.testing.assert_array_equal(np.asarray(state.vertex_count),
+                                  rec["vertex_count"])
+    np.testing.assert_array_equal(np.asarray(state.cut_matrix),
+                                  rec["cut_matrix"])
+
+
+def _bit_identical(a, b):
+    for f in a._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f)
+
+
+def _churn():
+    g = make_graph("social", 90, 260, seed=2)
+    s = gstream.interleaved_churn(g, warmup_frac=0.2, del_every=3,
+                                  edge_del_every=5, seed=4)
+    return s, EngineConfig(k_max=8, k_init=4, autoscale=False)
+
+
+def _rebalance_within_guard(part, slack=0.25, **kw):
+    """Run one rebalance and assert the Eq. 10 guard: any partition the
+    pass loaded further ends at or below ``mean_active_load * (1+slack)``
+    (migration checks it exactly per commit; LPA admission is capacity-
+    probabilistic, so allow a couple of degrees of overshoot)."""
+    pre = np.asarray(part.state.edge_load).astype(float)
+    act = np.asarray(part.state.active)
+    cap = max(pre[act].mean() * (1.0 + slack), 1.0)
+    part.rebalance(slack=slack, **kw)
+    post = np.asarray(part.state.edge_load).astype(float)
+    gained = post > pre
+    if gained.any():
+        assert post[gained].max() <= cap + 2 * part.max_deg
+
+
+# ---------------------------------------------------------------------------
+# the passes: exact counters, monotone migration, no-op gates
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,passes", [(8, 0), (0, 3), (8, 3)])
+def test_rebalance_counters_exact(m, passes):
+    s, cfg = _churn()
+    st, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    out, stats = rebalance_state(st, jnp.int32(s.num_events),
+                                 jnp.float32(0.25),
+                                 jnp.float32(cfg.max_cap), True,
+                                 m=m, passes=passes)
+    _counters_exact(out, cfg.k_max)
+    if passes == 0:   # greedy commits only on strictly positive fresh gain
+        assert int(stats.cut_after) <= int(stats.cut_before)
+    assert int(stats.moved) >= 0
+
+
+def test_rebalance_disabled_is_identity():
+    s, cfg = _churn()
+    st, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    out, stats = rebalance_state(st, jnp.int32(0), jnp.float32(0.25),
+                                 jnp.float32(cfg.max_cap), False,
+                                 m=8, passes=2)
+    _bit_identical(st, out)
+    assert int(stats.moved) == 0
+
+
+def test_session_m0_bit_identical_and_events():
+    s, cfg = _churn()
+    a = Partitioner.from_stream(s, cfg, policy="sdp", seed=0)
+    a.feed(s).sync()
+    b = Partitioner.from_stream(s, cfg, policy="sdp", seed=0)
+    b.feed(s).sync()
+    ev = b.rebalance(m=0, passes=0)      # host-side no-op short-circuit
+    assert ev["moved"] == 0 and b.metrics()["rebalances"] == 0
+    _bit_identical(a.state, b.state)
+
+    ev = b.rebalance(m=8, passes=1)
+    assert ev["cursor"] == s.num_events
+    assert b.rebalance_events[-1] is ev
+    assert b.metrics()["rebalances"] == 1
+    _counters_exact(b.state, cfg.k_max)
+
+
+def test_auto_rebalance_cadence_and_guard():
+    s, cfg = _churn()
+    part = Partitioner.from_stream(s, cfg, policy="sdp", seed=0,
+                                   auto_rebalance=True, rebalance_every=32,
+                                   rebalance_m=8, rebalance_passes=1)
+    t, T = 0, s.num_events
+    while t < T:      # cadence is checked per feed (between windows)
+        e = min(t + 20, T)
+        part.feed((s.etype[t:e], s.vertex[t:e], s.nbrs[t:e]))
+        t = e
+    part.sync()
+    assert part.metrics()["rebalances"] >= 2
+    _counters_exact(part.state, cfg.k_max)
+    _rebalance_within_guard(part, m=8, passes=1)
+    with pytest.raises(ValueError):
+        Partitioner.from_stream(s, cfg, auto_rebalance=True,
+                                rebalance_m=0, rebalance_passes=0)
+
+
+# ---------------------------------------------------------------------------
+# property: rebalance anywhere between feed chunks keeps counters exact
+# ---------------------------------------------------------------------------
+
+def test_property_rebalance_between_chunks():
+    hyp = pytest.importorskip("hypothesis")
+    st_mod = pytest.importorskip("hypothesis.strategies")
+    g = make_graph("social", 70, 180, seed=1)
+    s = gstream.interleaved_churn(g, warmup_frac=0.3, del_every=4,
+                                  edge_del_every=6, seed=1)
+    cfg = EngineConfig(k_max=8, k_init=1, autoscale=True, max_cap=90)
+
+    @hyp.settings(deadline=None, max_examples=12)
+    @hyp.given(cut=st_mod.integers(1, s.num_events - 1),
+               m=st_mod.integers(0, 12), passes=st_mod.integers(0, 2))
+    def prop(cut, m, passes):
+        part = Partitioner.from_stream(s, cfg, policy="sdp", seed=0)
+        part.feed((s.etype[:cut], s.vertex[:cut], s.nbrs[:cut])).sync()
+        part.rebalance(m=m, passes=passes)
+        part.feed((s.etype[cut:], s.vertex[cut:], s.nbrs[cut:])).sync()
+        _counters_exact(part.state, cfg.k_max)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# sweep lanes: gated-off lanes are bit-identical, engines agree
+# ---------------------------------------------------------------------------
+
+def test_sweep_rebalance_lanes_gate_and_parity():
+    s, cfg = _churn()
+    plain = (Sweep(s).lane("sdp", cfg, 0).lane("greedy", cfg, 0)
+             .windowed(16).run())
+    mixed = (Sweep(s).lane("sdp", cfg, 0).lane("sdp", cfg, 0)
+             .lane("greedy", cfg, 0).windowed(16)
+             .rebalance(8, every=32, passes=1, lanes=[1]).run())
+    _bit_identical(plain[0].state, mixed[0].state)   # gated-off lane
+    _bit_identical(plain[1].state, mixed[2].state)
+    _counters_exact(mixed[1].state, cfg.k_max)
+
+    scan = (Sweep(s).lane("sdp", cfg, 0).lane("sdp", cfg, 0).scan()
+            .rebalance(8, every=32, passes=1, lanes=[1]).run())
+    _bit_identical(plain[0].state, scan[0].state)
+    # same cadence + same pass: engines agree on the rebalanced lane
+    _bit_identical(mixed[1].state, scan[1].state)
+    assert scan[0].trace is not None
+
+
+def test_sweep_rebalance_validation():
+    s, cfg = _churn()
+    with pytest.raises(ValueError, match="multiple of"):
+        Sweep(s).lane("sdp", cfg).windowed(16).rebalance(8, every=24).run()
+    with pytest.raises(ValueError, match="empty"):
+        Sweep(s).lane("sdp", cfg).rebalance(0, passes=0).run()
+    with pytest.raises(ValueError, match="out-of-range"):
+        Sweep(s).lane("sdp", cfg).rebalance(8, lanes=[1]).run()
+
+
+# ---------------------------------------------------------------------------
+# adversarial generators: geometry, DEL discipline, engine recount
+# ---------------------------------------------------------------------------
+
+def _generator_cases():
+    g = make_graph("social", 200, 800, seed=3)
+    return [
+        ("hub", gstream.hub_arrivals(g, del_frac=0.25, seed=5)),
+        ("merge", gstream.community_merge(block=100, bridges=20, seed=5)),
+        ("flash", gstream.flash_crowd(g, crowd=50, depart_frac=0.5,
+                                      seed=5)),
+    ]
+
+
+@pytest.mark.parametrize("name,s", _generator_cases())
+def test_generator_stream_discipline(name, s):
+    geo = s.required_geometry()
+    present = set()
+    for t in range(s.num_events):
+        et, v = int(s.etype[t]), int(s.vertex[t])
+        assert 0 <= v < geo.n
+        if et == gstream.EVENT_ADD:
+            present.add(v)
+        elif et == gstream.EVENT_DEL_VERTEX:
+            assert v in present, f"{name}: DEL of absent vertex at {t}"
+            present.discard(v)
+    assert s.intervals[-1] == s.num_events
+    assert all(a <= b for a, b in zip(s.intervals, s.intervals[1:]))
+
+
+@pytest.mark.parametrize("name,s", _generator_cases())
+def test_generator_engine_consistency(name, s):
+    cfg = EngineConfig(k_max=8, k_init=4, autoscale=False)
+    st, _ = run_stream(s, policy="sdp", cfg=cfg, seed=0)
+    _counters_exact(st, cfg.k_max)
+    gm = gstream.materialize_graph(s)
+    assert gm.num_edges == int(st.total_edges)
+
+
+def test_fig16_rebalance_improves_cut():
+    """The acceptance gate: on at least two adversarial streams the
+    rebalanced session ends with a better cut than plain SDP, and every
+    pass keeps the destinations it loads within the Eq. 10 guard."""
+    improved = 0
+    for name, s in _generator_cases():
+        cfg = EngineConfig(k_max=8, k_init=4, autoscale=False)
+        plain = Partitioner.from_stream(s, cfg, policy="sdp", seed=0)
+        plain.feed(s).sync()
+        reb = Partitioner.from_stream(s, cfg, policy="sdp", seed=0)
+        prev = 0
+        for cur in sorted({int(c) for c in s.intervals}):
+            if cur == prev:
+                continue
+            reb.feed((s.etype[prev:cur], s.vertex[prev:cur],
+                      s.nbrs[prev:cur])).sync()
+            prev = cur
+            _rebalance_within_guard(reb, m=24, passes=2)
+        _counters_exact(reb.state, cfg.k_max)
+        if int(reb.state.cut_edges) < int(plain.state.cut_edges):
+            improved += 1
+    assert improved >= 2
+
+
+# ---------------------------------------------------------------------------
+# service: idle pass + drain
+# ---------------------------------------------------------------------------
+
+def test_service_drain_rebalance():
+    s, cfg = _churn()
+    part = Partitioner.from_stream(s, cfg, policy="sdp", seed=0)
+    svc = PartitionService(part, idle_rebalance_s=0.05)
+    svc.submit((s.etype, s.vertex, s.nbrs))
+    ev = svc.drain_rebalance()
+    assert ev["cursor"] == s.num_events
+    m = svc.metrics()
+    svc.close()
+    assert m["rebalances"] >= 1
+    assert "idle_rebalances" in m and m["idle_rebalance_s"] == 0.05
+    _counters_exact(part.state, cfg.k_max)
+
+
+# ---------------------------------------------------------------------------
+# recovery: marker replay + a real SIGKILL between pass and next window
+# ---------------------------------------------------------------------------
+
+def test_recovery_replays_rebalance_marker(tmp_path):
+    s, cfg = _churn()
+    half = s.num_events // 2
+    ref = Partitioner.from_stream(s, cfg, policy="sdp", seed=0)
+    sess = RecoverableSession(ref, str(tmp_path), snapshot_every=10 ** 9)
+    sess.checkpoint()     # genesis snapshot; everything after replays
+    sess.feed((s.etype[:half], s.vertex[:half], s.nbrs[:half]))
+    sess.rebalance(m=8, passes=1)
+    sess.feed((s.etype[half:], s.vertex[half:], s.nbrs[half:]))
+    sess.sync()
+    got = RecoverableSession.recover(str(tmp_path), cfg, policy="sdp")
+    got.sync()
+    _bit_identical(sess.state, got.state)
+
+
+def test_checkpoint_after_rebalance_not_double_applied(tmp_path):
+    s, cfg = _churn()
+    half = s.num_events // 2
+    sess = RecoverableSession(
+        Partitioner.from_stream(s, cfg, policy="sdp", seed=0),
+        str(tmp_path), snapshot_every=10 ** 9)
+    sess.feed((s.etype[:half], s.vertex[:half], s.nbrs[:half]))
+    sess.rebalance(m=8, passes=1)
+    sess.checkpoint()     # snapshot already contains the rebalanced state
+    sess.feed((s.etype[half:], s.vertex[half:], s.nbrs[half:]))
+    sess.sync()
+    got = RecoverableSession.recover(str(tmp_path), cfg, policy="sdp")
+    got.sync()
+    _bit_identical(sess.state, got.state)
+
+
+REBALANCE_CHILD = """
+import os, signal
+from repro.api import Partitioner
+from repro.core import EngineConfig
+from repro.graph.generators import make_graph
+from repro.graph import stream as gstream
+from repro.runtime.recovery import RecoverableSession
+
+g = make_graph("social", 90, 260, seed=2)
+s = gstream.interleaved_churn(g, warmup_frac=0.2, del_every=3,
+                              edge_del_every=5, seed=4)
+cfg = EngineConfig(k_max=8, k_init=4, autoscale=False)
+part = Partitioner.from_stream(s, cfg, policy="sdp", seed=0)
+sess = RecoverableSession(part, {d!r}, snapshot_every=10 ** 9)
+sess.checkpoint()
+half = s.num_events // 2
+sess.feed((s.etype[:half], s.vertex[:half], s.nbrs[:half]))
+sess.rebalance(m=8, passes=1)
+sess.wait()               # journal + marker durable, next window never fed
+print("CHILD_REBALANCED", sess.cursor, flush=True)
+os.kill(os.getpid(), signal.SIGKILL)
+"""
+
+
+def test_sigkill_between_rebalance_and_next_window(tmp_path):
+    s, cfg = _churn()
+    half = s.num_events // 2
+    ref = Partitioner.from_stream(s, cfg, policy="sdp", seed=0)
+    ref.feed((s.etype[:half], s.vertex[:half], s.nbrs[:half])).sync()
+    ref.rebalance(m=8, passes=1)
+    ref.feed((s.etype[half:], s.vertex[half:], s.nbrs[half:])).sync()
+
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-c",
+         textwrap.dedent(REBALANCE_CHILD).format(d=str(tmp_path))],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == -9, (out.returncode, out.stderr[-2000:])
+    assert f"CHILD_REBALANCED {half}" in out.stdout
+
+    sess = RecoverableSession.recover(str(tmp_path), cfg, policy="sdp")
+    assert sess.cursor == half
+    sess.feed((s.etype[half:], s.vertex[half:], s.nbrs[half:]))
+    sess.sync()
+    _bit_identical(ref.state, sess.state)
