@@ -1,44 +1,85 @@
-"""Paper Fig. 9: machines added/removed over time under the §4.2.3
-auto-scaling policy (scale-out via Eq. 5, scale-in via Eqs. 6-8)."""
+"""Paper Fig. 9 (revived): partition-parallel scaling of ONE session.
+
+The original Fig. 9 machine-count trajectory now rides fig12's autoscale
+churn benchmark; this module measures the PR-10 distributed runtime
+instead: one vertex-sharded session (repro.runtime.shard_session) run
+over vertices-mesh widths 1, 2, 4, 8, ... at FIXED n, reporting
+
+  * events/s — the windowed throughput at each width (on a forced-host
+    CPU mesh the devices share one socket, so this shows the protocol
+    overhead, not speedup; on real accelerators it shows scaling), and
+  * per-device peak state bytes — the memory-capacity story: each device
+    holds ~1/P of the O(n·max_deg) state, which is what lets a session
+    outgrow a single device.
+
+Every width computes the SAME partition (bit-identity is the runtime's
+contract, gated by tests/test_shard_session.py), so quality columns are
+recorded once per width as a cross-check. Multi-width rows need multiple
+local devices — CI runs this under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``. Artifact:
+BENCH_shard_scaling.json (mirrored to the repo root).
+"""
 from __future__ import annotations
 
-import numpy as np
+import jax
 
 from benchmarks import common as C
-from repro.core import EngineConfig
+from repro.core import EngineConfig, state_metrics
+from repro.core.geometry import resolve_geometry
+from repro.core.sharded_state import (
+    pad_rows, per_device_state_bytes, shard_state,
+)
+from repro.core.state import init_state
 from repro.graph import stream as gstream
+from repro.launch.mesh import make_vertices_mesh
+from repro.runtime.shard_session import run_stream_sharded
 
-DATASETS = ("3elt", "astroph", "grqc")
+DATASET = "3elt"
+WINDOW = 256
+
+
+def _widths() -> list[int]:
+    n = jax.device_count()
+    return [w for w in (1, 2, 4, 8, 16, 32) if w <= n]
 
 
 def run(quick: bool = True) -> list:
+    g = C.bench_graph(DATASET, quick)
+    s = gstream.dynamic_schedule(g, add_pct=15.0, del_pct=10.0,
+                                 n_intervals=3, seed=0)
+    cfg = EngineConfig(k_max=16, k_init=4, autoscale=False)
+    geom = resolve_geometry(s, cfg, None)
     rows = []
-    for ds in DATASETS:
-        g = C.bench_graph(ds, quick)
-        s = gstream.dynamic_schedule(g, add_pct=25.0, del_pct=10.0,
-                                     n_intervals=4, seed=0)
-        # MAXCAP sized so the stream needs ~6 machines at peak
-        cap = max(60, int(1.6 * g.num_edges / 6))
-        cfg = EngineConfig(k_max=16, k_init=1, max_cap=cap,
-                           tolerance_param=35.0, dest_param=5.0)
-        st, trace, m = C.run_policy_stream(s, "sdp", cfg)
-        parts = np.asarray(trace.num_partitions)
-        marks = list(s.intervals)
-        for i, t in enumerate(marks):
-            rows.append({"dataset": ds, "interval": i + 1,
-                         "num_partitions": int(parts[t - 1]),
-                         "peak": int(parts.max()),
-                         "scale_events": m["scale_events"],
-                         "seconds": m["seconds"]})
-    C.save_rows("fig9_scaling", rows)
+    for w in _widths():
+        mesh = make_vertices_mesh(w)
+        bytes_dev = per_device_state_bytes(shard_state(
+            init_state(geom.n, geom.max_deg, geom.k_max, cfg.k_init, 0),
+            mesh))
+        # warm once (per-mesh jit cache), then time the steady run
+        run_stream_sharded(s, policy="sdp", cfg=cfg, window=WINDOW,
+                           geometry=geom, mesh=mesh)
+        state, dt = C.timed(run_stream_sharded, s, policy="sdp", cfg=cfg,
+                            window=WINDOW, geometry=geom, mesh=mesh)
+        m = state_metrics(state)
+        rows.append({"dataset": DATASET, "devices": w,
+                     "n": geom.n,
+                     "rows_per_device": pad_rows(geom.n, w) // w,
+                     "events": s.num_events,
+                     "seconds": dt,
+                     "events_per_s": s.num_events / max(dt, 1e-9),
+                     "per_device_state_bytes": bytes_dev,
+                     "edge_cut_ratio": m["edge_cut_ratio"],
+                     "load_imbalance": m["load_imbalance"]})
+    C.save_rows("BENCH_shard_scaling", rows)
     return rows
 
 
 def summarize(rows) -> list[str]:
     out = []
-    for ds in DATASETS:
-        rs = [r for r in rows if r["dataset"] == ds]
-        traj = "->".join(str(r["num_partitions"]) for r in rs)
-        out.append(f"fig9/{ds},{rs[-1]['scale_events']},machines={traj}"
-                   f";peak={rs[-1]['peak']}")
+    for r in rows:
+        out.append(
+            f"fig9/shard_w{r['devices']},{r['events_per_s']:.0f},"
+            f"bytes_per_dev={r['per_device_state_bytes']}"
+            f";rows_per_dev={r['rows_per_device']}"
+            f";cut={r['edge_cut_ratio']:.3f}")
     return out

@@ -11,7 +11,10 @@ Policy/config comparisons (fig4/6/7/8) run through the sweep runtime
 program (lane axis sharded across devices when more than one exists)
 instead of a host loop re-scanning the stream per policy. fig10 times
 the mixed-event window engine against the legacy delete-splitting driver
-on an interleaved churn stream (BENCH_mixed_window.json); fig11 times
+on an interleaved churn stream (BENCH_mixed_window.json); fig9 runs one
+vertex-sharded session over mesh widths 1/2/4/8 at fixed n — events/s
+and per-device peak state bytes (BENCH_shard_scaling.json; multi-width
+rows need XLA_FLAGS=--xla_force_host_platform_device_count=8); fig11 times
 host-loop vs vmapped vs sharded vs windowed-lane sweeps
 (BENCH_sweep_scaling.json); fig12 times incremental vs recompute
 autoscale lanes (BENCH_autoscale_churn.json); fig13 times elastic

@@ -85,8 +85,12 @@ from repro.core.state import (
     PartitionState, compact_state, grow_state, init_state, live_extent,
     recount_cut_matrix, shrink_state, state_bytes, state_metrics,
 )
+from repro.core.sharded_state import (
+    gather_state, pad_rows, per_device_state_bytes, shard_state,
+    unshard_state,
+)
 from repro.core.transition import EventTrace
-from repro.core.metrics import load_imbalance
+from repro.core.metrics import load_imbalance, normalized_load_imbalance
 from repro.graph.stream import (
     EVENT_ADD, EVENT_PAD, VertexStream, normalize_rows, required_geometry_of,
 )
@@ -117,6 +121,17 @@ def _mixed_fused_donated():
         _run_window_mixed_fused,
         static_argnames=("policy", "cfg", "interpret", "variant"),
         donate_argnums=(0,))
+
+def _resolve_vertices_mesh(devices):
+    """Constructor/``reshard`` device selection: None = every local
+    device, int = the first N, sequence = exactly those."""
+    from repro.launch.mesh import make_vertices_mesh
+    if devices is None:
+        return make_vertices_mesh()
+    if isinstance(devices, int):
+        return make_vertices_mesh(devices)
+    return make_vertices_mesh(devices=list(devices))
+
 
 _TRACE_DTYPES = (jnp.int32, jnp.int32, jnp.int32, jnp.float32)
 
@@ -192,6 +207,25 @@ class Partitioner:
         ``rebalance()`` (0 = greedy migration only).
       rebalance_slack: Eq. 10 capacity slack — no rebalance move may
         push a destination beyond mean active load × (1 + slack).
+      rebalance_drift: adaptive rebalance cadence — after each feed,
+        fire ``rebalance()`` when the observed cut ratio OR the load
+        imbalance has drifted more than this much above its value at the
+        last pass (both read from counters the engines already maintain;
+        no extra device work). Independent of ``auto_rebalance``'s fixed
+        event spacing; the two compose (fixed cadence is checked first).
+        The drift baseline re-bases after every executed pass and rides
+        checkpoint ``extras``.
+      sharded: shard THIS session's vertex axis across the device mesh
+        (repro.runtime.shard_session): adjacency rows, label journal and
+        presence live as per-device row blocks on a "vertices" mesh,
+        K-sized loads and the cut matrix stay replicated and are
+        psum-combined once per window. Bit-identical to a dense session
+        for any device count. Implies the windowed backend for every
+        slice (tails are padded into no-op slots); incompatible with
+        ``use_kernel``, ``collect_trace`` and ``engine="scan"``.
+      shard_devices: device selection for ``sharded=True`` — an int
+        (first N local devices), an explicit device sequence, or None
+        for every local device.
     """
 
     def __init__(self, cfg: EngineConfig | None = None, *,
@@ -202,7 +236,9 @@ class Partitioner:
                  auto_shrink: bool = False, shrink_every: int = 4096,
                  auto_rebalance: bool = False, rebalance_every: int = 2048,
                  rebalance_m: int = 32, rebalance_passes: int = 0,
-                 rebalance_slack: float = 0.25):
+                 rebalance_slack: float = 0.25,
+                 rebalance_drift: float | None = None,
+                 sharded: bool = False, shard_devices=None):
         cfg = cfg or EngineConfig()
         if policy not in POLICIES:
             raise ValueError(
@@ -227,6 +263,19 @@ class Partitioner:
                 "collect_trace=True needs the per-event scan (the window "
                 "kernels do not produce traces) — use engine='scan' or "
                 "'auto'")
+        if sharded:
+            if use_kernel:
+                raise ValueError(
+                    "sharded=True routes windows through the shard_map'd "
+                    "window step, which runs the chooser oracle replicated "
+                    "— it cannot also run the Pallas fused kernel; drop "
+                    "use_kernel")
+            if collect_trace or engine == "scan":
+                raise ValueError(
+                    "sharded=True processes every slice as (padded) "
+                    "windows on the vertices mesh — the per-event scan "
+                    "backend (engine='scan' / collect_trace=True) has no "
+                    "sharded counterpart")
         self.cfg = cfg
         self.policy = policy
         self.engine = engine
@@ -267,14 +316,38 @@ class Partitioner:
         self.rebalance_m = int(rebalance_m)
         self.rebalance_passes = int(rebalance_passes)
         self.rebalance_slack = float(rebalance_slack)
+        if rebalance_drift is not None:
+            if rebalance_drift <= 0:
+                raise ValueError(
+                    f"rebalance_drift={rebalance_drift} must be > 0: it "
+                    "is the cut-ratio / imbalance increase (since the "
+                    "last pass) that triggers an adaptive rebalance")
+            if rebalance_m == 0 and rebalance_passes == 0:
+                raise ValueError(
+                    "rebalance_drift with rebalance_m=0 and "
+                    "rebalance_passes=0 would fire empty passes — give "
+                    "it a migration budget and/or LPA iterations")
+        self.rebalance_drift = (None if rebalance_drift is None
+                                else float(rebalance_drift))
+        self._drift_base: tuple[float, float] | None = None
+        self._drift_fires = 0
         self._last_rebalance = 0
         self._rebalances = 0
         self._rebalance_moves = 0
         self._rebalance_events: list[dict] = []
         self._kernel_windows = 0
         self._fallback_windows = 0
+        self._sharded = bool(sharded)
+        self._mesh = None
         self._state = init_state(int(n or 1), int(max_deg or 1), cfg.k_max,
                                  cfg.k_init, seed)
+        if self._sharded:
+            self._mesh = _resolve_vertices_mesh(shard_devices)
+            # semantic geometry: the tier a dense session would sit at —
+            # what the knobs (LDG capacity) and checkpoints see; the
+            # physical row count is padded to a multiple of the mesh
+            self._sem_geom = geometry_of(self._state)
+            self._state = shard_state(self._state, self._mesh)
         self._regeometries = 0
         self._shrinks = 0
         self._compactions = 0
@@ -377,25 +450,42 @@ class Partitioner:
         shrinking is never performed (that is ``shrink_to``). Use before
         a large ``feed`` to pay one re-jit instead of log-many tier
         doublings."""
-        cur = geometry_of(self._state)
+        cur = self._sem_geometry()
         target = cur.union(Geometry(int(n or 1), int(max_deg or 1)))
         if target != cur:
-            self._state = grow_state(self._state, target)
-            self._regeometries += 1
-            self._record_geometry("grow", cur, target)
+            self._grow(cur, target)
         return self
+
+    def _sem_geometry(self) -> Geometry:
+        """The session's *semantic* geometry: what a dense session would
+        allocate. For a sharded session the physical row count is this,
+        padded up to a multiple of the mesh; the semantic n is what the
+        knobs (LDG capacity) and checkpoint metadata see, so sharded and
+        dense sessions stay bit-identical and round-trip."""
+        return self._sem_geom if self._sharded else geometry_of(self._state)
+
+    def _grow(self, cur: Geometry, target: Geometry) -> None:
+        if self._sharded:
+            phys = Geometry(pad_rows(target.n, self._mesh.shape["vertices"]),
+                            target.max_deg, target.k_max)
+            self._state = shard_state(
+                grow_state(unshard_state(self._state), phys), self._mesh)
+            self._sem_geom = target
+        else:
+            self._state = grow_state(self._state, target)
+        self._regeometries += 1
+        self._record_geometry("grow", cur, target)
 
     def _ensure_geometry(self, required: Geometry) -> None:
         """Grow the state along power-of-two tiers until it covers
         ``required`` (no-op when it already does) — the feed-time
         auto-grow. Growth is a semantics no-op (repro.core.geometry), so
-        donation simply resumes at the new tier after one re-jit."""
-        cur = geometry_of(self._state)
+        donation simply resumes at the new tier after one re-jit. The
+        tier trigger compares the SEMANTIC geometry, so a sharded
+        session grows at exactly the cursors its dense twin would."""
+        cur = self._sem_geometry()
         if not cur.covers(required):
-            target = grow_tier(cur, required)
-            self._state = grow_state(self._state, target)
-            self._regeometries += 1
-            self._record_geometry("grow", cur, target)
+            self._grow(cur, grow_tier(cur, required))
 
     def _repack_to(self, target: Geometry, kind: str) -> None:
         """Move the (synced) state to ``target``, preferring the
@@ -405,7 +495,7 @@ class Partitioner:
         sits above ``target.n``. Updates the id maps and the lifecycle
         trace; callers guarantee ``target`` covers the packed extent."""
         cur = geometry_of(self._state)
-        if target == cur:
+        if target == cur or (self._sharded and target == self._sem_geom):
             return
         _, prefix = live_extent(self._state)
         if prefix.n <= target.n and prefix.max_deg <= target.max_deg:
@@ -420,6 +510,11 @@ class Partitioner:
                     "accept the current tier)")
             self._state, perm = compact_state(self._state, target)
             self._apply_perm(perm)
+        if self._sharded:
+            # repacks land dense at the semantic target — pad rows back
+            # to a mesh multiple and re-place on the vertices mesh
+            self._sem_geom = target
+            self._state = shard_state(self._state, self._mesh)
         self._regeometries += 1
         if kind == "shrink":
             self._shrinks += 1
@@ -525,10 +620,33 @@ class Partitioner:
         (simulated) device loss, a recovered or surviving session
         continues on the replacement device bit-identically (placement
         is not semantics). Syncs. Returns ``self``."""
+        if self._sharded:
+            raise ValueError(
+                "this session is vertex-sharded across a device mesh — "
+                "single-device place() does not apply; use "
+                "reshard(devices=...) to move it onto a different mesh")
         self.sync()
         host = jax.tree_util.tree_map(np.asarray, self._state)
         self._state = jax.tree_util.tree_map(
             lambda a: jax.device_put(a, device), host)
+        return self
+
+    def reshard(self, devices=None) -> "Partitioner":
+        """Re-shard a ``sharded=True`` session onto a different vertices
+        mesh (``devices``: int, device sequence, or None for every local
+        device) — the sharded re-mesh path after a device-count change:
+        gather to the canonical dense layout, rebuild the mesh, re-pad
+        the rows to the new shard count, and re-place. Placement is not
+        semantics, so the session continues bit-identically. Syncs.
+        Returns ``self``."""
+        if not self._sharded:
+            raise ValueError(
+                "reshard() applies to sharded=True sessions only — a "
+                "dense session moves with place(device)")
+        self.sync()
+        dense = unshard_state(self._state, n=self._sem_geom.n)
+        self._mesh = _resolve_vertices_mesh(devices)
+        self._state = shard_state(dense, self._mesh)
         return self
 
     # -- external ids -------------------------------------------------------
@@ -666,7 +784,8 @@ class Partitioner:
                 self._feed_scan(et[t:], vx[t:], nb[t:])
             else:
                 end = min(t + self.window, T)
-                if end - t < self.window and self.engine == "auto":
+                if end - t < self.window and self.engine == "auto" \
+                        and not self._sharded:
                     # small/mixed tail: the per-event scan beats padding a
                     # nearly-empty window through the batched kernel
                     end = T
@@ -686,6 +805,8 @@ class Partitioner:
                                     >= self.rebalance_every):
             self._last_rebalance = self._cursor
             self.rebalance()
+        if self.rebalance_drift is not None:
+            self._check_drift()
         if self.auto_shrink and (self._cursor - self._last_shrink_check
                                  >= self.shrink_every):
             self._last_shrink_check = self._cursor
@@ -707,6 +828,19 @@ class Partitioner:
         Pad slots are no-ops that still occupy RNG indices past the true
         events — the cursor advances by the true count only, so the next
         call's fold_in indices line up with an unchopped run."""
+        if self._sharded:
+            from repro.runtime.shard_session import sharded_stream_fn
+            self._fallback_windows += 1
+            w = self.window
+            fn = sharded_stream_fn(
+                self._mesh, n_sem=self._sem_geom.n, policy=self.policy,
+                cfg=self.cfg, window=w, n_events=w)
+            self._state = fn(
+                self._state, wnd._pad_to(jnp.asarray(et), w, EVENT_PAD),
+                wnd._pad_to(jnp.asarray(vx), w, -1),
+                wnd._pad_to(jnp.asarray(nb), w, -1),
+                jnp.int32(self._cursor))
+            return
         if self.use_kernel:
             self._kernel_windows += 1
         else:
@@ -734,6 +868,39 @@ class Partitioner:
 
     # -- rebalancing --------------------------------------------------------
 
+    def _drift_signals(self) -> tuple[float, float]:
+        """(cut ratio, normalized load imbalance) from counters the
+        engines already maintain — a host read of the live state, no new
+        device work. Both are scale-free ratios (the imbalance is the
+        mean-normalized Eq. 10 std), so ONE drift threshold compares
+        meaningfully against either and does not loosen as the stream
+        grows."""
+        tot = int(self._state.total_edges)
+        ratio = int(self._state.cut_edges) / tot if tot else 0.0
+        imb = normalized_load_imbalance(np.asarray(self._state.edge_load),
+                                        np.asarray(self._state.active))
+        return ratio, float(imb)
+
+    def _check_drift(self) -> bool:
+        """The ``rebalance_drift`` cadence check (each feed boundary):
+        fire a pass when either signal rose more than the threshold
+        since the last pass (or since the first check — the baseline).
+        Drops in either signal re-base nothing: only an executed pass
+        (which re-reads both signals afterwards) moves the baseline, so
+        slow monotone drift cannot creep under the threshold."""
+        ratio, imb = self._drift_signals()
+        if self._drift_base is None:
+            self._drift_base = (ratio, imb)
+            return False
+        r0, i0 = self._drift_base
+        if (ratio - r0) < self.rebalance_drift \
+                and (imb - i0) < self.rebalance_drift:
+            return False
+        self._drift_fires += 1
+        self._last_rebalance = self._cursor
+        self.rebalance()
+        return True
+
     def rebalance(self, m: int | None = None, passes: int | None = None,
                   slack: float | None = None) -> dict:
         """Run one between-windows rebalance over the live state: greedy
@@ -757,6 +924,11 @@ class Partitioner:
             self._state, jnp.int32(self._cursor), jnp.float32(slack),
             jnp.float32(self.cfg.max_cap), True,
             m=min(m, self.n), passes=passes)
+        if self._sharded:
+            # the rebalance jit runs under GSPMD over the sharded inputs
+            # but commits to no particular output layout — re-pin the
+            # session's canonical vertices-mesh shardings
+            self._state = shard_state(self._state, self._mesh)
         ev = {"cursor": self._cursor, "m": m, "passes": passes,
               "moved": int(stats.moved),
               "cut_before": int(stats.cut_before),
@@ -768,6 +940,10 @@ class Partitioner:
         self._rebalances += 1
         self._rebalance_moves += ev["moved"]
         self._rebalance_events.append(ev)
+        if self.rebalance_drift is not None:
+            # re-base the drift detector on the post-pass signals — the
+            # next fire needs fresh drift, not the residue of this one
+            self._drift_base = self._drift_signals()
         return ev
 
     # -- observation --------------------------------------------------------
@@ -797,6 +973,14 @@ class Partitioner:
         m["fallback_windows"] = self._fallback_windows
         m["rebalances"] = self._rebalances
         m["rebalance_moves"] = self._rebalance_moves
+        m["rebalance_drift_fires"] = self._drift_fires
+        # vertex-sharding split: how many devices carry this session's
+        # row blocks, and the peak per-device resident bytes (each
+        # device pays its blocks + a full copy of the replicated K-state;
+        # degenerates to ~state_bytes on a dense session)
+        m["shard_devices"] = (self._mesh.shape["vertices"]
+                              if self._sharded else 1)
+        m["per_device_state_bytes"] = per_device_state_bytes(self._state)
         return m
 
     def trace(self) -> EventTrace:
@@ -846,9 +1030,20 @@ class Partitioner:
             # session rebalances at the cursors the original would have
             extras["rebalance_mark"] = np.asarray([self._last_rebalance],
                                                   np.int64)
-        mgr.save_now(self._cursor, self._state, blocking=blocking,
-                     geometry=geometry_of(self._state),
-                     extras=extras or None)
+        if self._drift_base is not None:
+            # the adaptive-cadence baseline rides along, so a restored
+            # session fires its next drift pass where the original would
+            extras["drift_base"] = np.asarray(self._drift_base, np.float64)
+        tree, geom = self._state, geometry_of(self._state)
+        if self._sharded:
+            # persist the gathered CANONICAL layout (row padding sliced
+            # off, semantic geometry recorded) so sharded and dense
+            # sessions — and different mesh widths — round-trip
+            # interchangeably
+            tree, geom = gather_state(
+                self._state, n=self._sem_geom.n), self._sem_geom
+        mgr.save_now(self._cursor, tree, blocking=blocking,
+                     geometry=geom, extras=extras or None)
         return self._cursor
 
     def wait(self) -> None:
@@ -930,6 +1125,12 @@ class Partitioner:
             # matrix — rebuild it exactly from the restored adjacency
             state = recount_cut_matrix(state)
         part._state = grow_state(state, target)
+        if part._sharded:
+            # re-place the restored canonical layout on the session's
+            # vertices mesh (rows re-padded to the new shard count — the
+            # cross-layout round-trip: dense↔sharded, any mesh width)
+            part._sem_geom = geometry_of(part._state)
+            part._state = shard_state(part._state, part._mesh)
         part._cursor = int(step)
         # the external-id map of a compacted session rides in the
         # checkpoint's extras — rebuild its dense inverse
@@ -946,7 +1147,10 @@ class Partitioner:
             part._last_shrink_check = int(np.asarray(ext["shrink_mark"])[0])
         if "rebalance_mark" in ext:
             part._last_rebalance = int(np.asarray(ext["rebalance_mark"])[0])
-        part._record_geometry("restore", ck, geometry_of(part._state))
+        if "drift_base" in ext:
+            base = np.asarray(ext["drift_base"])
+            part._drift_base = (float(base[0]), float(base[1]))
+        part._record_geometry("restore", ck, part._sem_geometry())
         want_n = int(n) if n is not None and n < target.n else None
         want_d = int(max_deg) if max_deg is not None \
             and max_deg < target.max_deg else None

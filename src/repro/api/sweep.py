@@ -43,6 +43,7 @@ class Sweep:
         self._window = 256
         self._chunk: int | None = None
         self._shard: bool | None = None
+        self._shard_vertices = False
         self._use_kernel = False
         self._rebalance: dict | None = None
 
@@ -121,6 +122,21 @@ class Sweep:
         self._shard = bool(shard)
         return self
 
+    def sharded_vertices(self, shard: bool = True) -> "Sweep":
+        """Shard each lane's VERTEX axis across the local devices instead
+        of the lane axis: lanes run sequentially, each as one
+        vertex-sharded session over the full device mesh
+        (repro.runtime.shard_session) — the big-graph regime, where one
+        lane's (n, max_deg) state does not fit a single device. Windowed
+        engine only; bit-identical per lane to ``run_stream``. Mutually
+        exclusive with ``.sharded()`` — one sweep's lanes either split
+        the devices (lane-parallel) or share them all (vertex-parallel);
+        to get both at once, build a 2-D mesh with
+        ``repro.launch.mesh.make_grid_mesh`` and run lane groups as
+        separate sweeps."""
+        self._shard_vertices = bool(shard)
+        return self
+
     # -- execution ----------------------------------------------------------
 
     def _validate(self) -> None:
@@ -133,6 +149,36 @@ class Sweep:
                 "lax.scan over windows — its window IS the chunk. Drop "
                 ".chunked() (or the chunk= argument) or use the scan "
                 "engine.")
+        if self._shard_vertices:
+            if self._shard:
+                raise ValueError(
+                    "sharded() and sharded_vertices() are mutually "
+                    "exclusive: lane-parallel lanes each claim a device "
+                    "while vertex-parallel lanes each claim the WHOLE "
+                    "mesh — combining them would silently oversubscribe "
+                    "the device pool. Run lane groups as separate sweeps, "
+                    "or build an explicit 2-D lanes×vertices mesh with "
+                    "repro.launch.mesh.make_grid_mesh and drive the "
+                    "session runtime directly.")
+            if self._engine != "windowed":
+                raise ValueError(
+                    "sharded_vertices() requires the windowed engine: the "
+                    "vertex-sharded runtime processes streams as windows "
+                    "with one all-reduce per window (the per-event scan "
+                    "has no sharded counterpart) — chain .windowed() "
+                    "before .sharded_vertices()")
+            if self._use_kernel:
+                raise ValueError(
+                    "sharded_vertices() cannot run the Pallas kernel "
+                    "lanes: the sharded window step runs the chooser "
+                    "oracle replicated per device — drop .kernel()")
+            if self._rebalance is not None:
+                raise ValueError(
+                    "sharded_vertices() does not interleave rebalance "
+                    "passes (the vmapped rebalance cadence is a "
+                    "lane-parallel program) — drop .rebalance(), or use "
+                    "a Partitioner(sharded=True) session with "
+                    "auto_rebalance/rebalance_drift")
         if self._use_kernel and self._engine != "windowed":
             raise ValueError(
                 "kernel() requires the windowed engine: the fused Pallas "
@@ -205,4 +251,5 @@ class Sweep:
         return _execute_sweep(
             self._stream, self._runs, chunk=self._chunk,
             engine=self._engine, window=self._window, shard=self._shard,
-            use_kernel=self._use_kernel, rebalance=self._rebalance)
+            use_kernel=self._use_kernel, rebalance=self._rebalance,
+            shard_vertices=self._shard_vertices)

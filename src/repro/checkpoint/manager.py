@@ -27,16 +27,54 @@ from repro.checkpoint.ckpt import (
 )
 
 
+# Default device→host staging granularity of save_now (bytes). Large
+# enough that chunking overhead is negligible, small enough that the
+# synchronous staging step yields to concurrently dispatched device work
+# every few MB instead of blocking a feed for the whole state transfer.
+DEFAULT_CHUNK_BYTES = 16 << 20
+
+
+def _stage_host(tree, chunk_bytes: int):
+    """Device→host snapshot of ``tree`` in row chunks of at most
+    ``chunk_bytes``. ``np.asarray`` on a large device array is one
+    synchronous transfer of the whole buffer — a big session's ``feed()``
+    stalls behind it. Slicing the leading axis bounds each synchronous
+    step; between chunks the caller's async-dispatched device work can
+    interleave. Host/numpy leaves pass through untouched; chunked leaves
+    land in one preallocated host buffer (no double copy)."""
+    def one(leaf):
+        if not isinstance(leaf, jax.Array):
+            return np.asarray(leaf)
+        if leaf.ndim == 0 or leaf.nbytes <= chunk_bytes:
+            return np.asarray(leaf)
+        row_bytes = max(leaf.nbytes // leaf.shape[0], 1)
+        rows = max(int(chunk_bytes // row_bytes), 1)
+        out = np.empty(leaf.shape, leaf.dtype)
+        for i0 in range(0, leaf.shape[0], rows):
+            out[i0:i0 + rows] = np.asarray(leaf[i0:i0 + rows])
+        return out
+    return jax.tree.map(one, tree)
+
+
 class CheckpointManager:
     def __init__(self, directory: str, *, interval: int = 100, keep: int = 3,
-                 keep_last: int | None = None, straggler_factor: float = 3.0):
+                 keep_last: int | None = None, straggler_factor: float = 3.0,
+                 host_chunk_bytes: int = DEFAULT_CHUNK_BYTES):
         """``keep``/``keep_last`` (synonyms; ``keep_last`` wins when both
         are given) bound the retained snapshots: every save garbage-
         collects all but the newest N — the retention policy that stops a
         long-lived session's periodic snapshots from growing the
-        directory without bound."""
+        directory without bound. ``host_chunk_bytes`` bounds each
+        synchronous device→host staging step of ``save_now`` (see
+        ``_stage_host``)."""
         self.dir = directory
         self.interval = interval
+        if host_chunk_bytes <= 0:
+            raise ValueError(
+                f"host_chunk_bytes={host_chunk_bytes} must be > 0: it is "
+                "the per-chunk bound on the synchronous device→host "
+                "staging copies")
+        self.host_chunk_bytes = int(host_chunk_bytes)
         self.keep = int(keep if keep_last is None else keep_last)
         if self.keep < 1:
             raise ValueError(
@@ -85,7 +123,7 @@ class CheckpointManager:
         ``maybe_save``. The tree is host-snapshotted synchronously before
         the call returns, so a caller may mutate (or donate) the live
         state immediately after. Returns ``step``."""
-        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before async
+        host_tree = _stage_host(tree, self.host_chunk_bytes)
 
         def work():
             save_pytree(self._path(step), host_tree, step=step,

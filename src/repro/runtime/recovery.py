@@ -34,8 +34,11 @@ directly — a serving tier whose state survives the machine.
 Device loss (the elastic re-mesh path) is orthogonal: if the device
 died but the process lives, ``remesh(device)`` moves the live session
 onto a surviving device via ``Partitioner.place`` (a host round-trip —
-placement is not semantics); if the process died with it, ``recover``
-rebuilds on whatever device the fresh process has.
+placement is not semantics), and ``remesh(devices=[...])`` re-shards a
+vertex-sharded session across the surviving devices via
+``Partitioner.reshard`` (the mesh may change width — the gathered state
+is canonical); if the process died with it, ``recover`` rebuilds on
+whatever devices the fresh process has.
 """
 from __future__ import annotations
 
@@ -275,12 +278,25 @@ class RecoverableSession:
             {"m": m, "passes": passes, "slack": slack})
         return self.part.rebalance(m=m, passes=passes, slack=slack)
 
-    def remesh(self, device) -> "RecoverableSession":
-        """Re-mesh after (simulated) device loss with the process alive:
-        move the session onto ``device`` and continue — bit-preserving
-        (``Partitioner.place``). If the process died too, use
-        :meth:`recover` instead."""
-        self.part.place(device)
+    def remesh(self, device=None, *, devices=None) -> "RecoverableSession":
+        """Re-mesh after (simulated) device loss with the process alive —
+        bit-preserving either way; if the process died too, use
+        :meth:`recover` instead. A single-device session moves onto
+        ``device`` (``Partitioner.place``); a vertex-sharded session
+        rebuilds its mesh over ``devices`` (or ``[device]``, or all
+        surviving local devices when neither is given) via
+        ``Partitioner.reshard`` — the gather/re-pad round-trip, so the
+        mesh may change width."""
+        if getattr(self.part, "_sharded", False):
+            if devices is None and device is not None:
+                devices = [device]
+            self.part.reshard(devices)
+        else:
+            if device is None:
+                raise ValueError(
+                    "remesh() of a single-device session needs the target "
+                    "device (devices= is the vertex-sharded form)")
+            self.part.place(device)
         return self
 
     # -- snapshots ----------------------------------------------------------

@@ -246,6 +246,7 @@ def _execute_sweep(
     shard: bool | None = None,
     use_kernel: bool = False,
     rebalance: dict | None = None,
+    shard_vertices: bool = False,
 ) -> list[SweepResult]:
     """Executor behind ``repro.api.Sweep`` (and the deprecated
     ``run_sweep`` shim): every (policy, cfg, seed) lane in one device
@@ -288,6 +289,20 @@ def _execute_sweep(
         return []
     shared = not isinstance(stream, (list, tuple))
     streams = [stream] * len(runs) if shared else list(stream)
+    if shard_vertices:
+        # vertex-parallel lanes: each lane is one vertex-sharded session
+        # over the WHOLE local mesh (repro.runtime.shard_session), so
+        # lanes run sequentially — the device budget is spent on n, not
+        # L. No union-geometry stacking: every lane runs (and is checked)
+        # at its own stream's geometry, bit-identical to run_stream.
+        from repro.runtime.shard_session import run_stream_sharded
+        return [
+            SweepResult(r.policy, r.cfg, r.seed,
+                        run_stream_sharded(s, policy=r.policy, cfg=r.cfg,
+                                           seed=r.seed, window=window),
+                        None)
+            for r, s in zip(runs, streams)
+        ]
     cfg0 = runs[0].cfg
     autoscale_mode = (
         "dynamic"
